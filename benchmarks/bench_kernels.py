@@ -1,0 +1,59 @@
+"""Kernel micro-benchmarks: Pallas (interpret on CPU / compiled on TPU) vs
+the pure-jnp oracle, over a shape sweep. On this CPU container the number
+that matters is parity (max |diff|); the us/call column is only meaningful
+on real TPU hardware."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ref
+from repro.kernels.bipartite_mix import bipartite_mix
+from repro.kernels.stoch_quant import stoch_quantize
+
+SHAPES = [(8, 512), (16, 4096), (24, 16384)]
+
+
+def _time(fn, *args, reps=3):
+    fn(*args)  # compile
+    t0 = time.time()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.time() - t0) / reps * 1e6, out
+
+
+def main() -> int:
+    print("# kernels: name,shape,us_per_call,us_ref,max_abs_diff")
+    fails = 0
+    for n, d in SHAPES:
+        key = jax.random.PRNGKey(n * d)
+        theta = 5 * jax.random.normal(key, (n, d))
+        qprev = jnp.zeros((n, d))
+        unif = jax.random.uniform(jax.random.fold_in(key, 1), (n, d))
+        qrange = jnp.max(jnp.abs(theta), axis=-1)
+        delta = 2.0 * qrange / 15.0
+        us_k, out_k = _time(lambda *a: stoch_quantize(*a, interpret=True),
+                            theta, qprev, unif, delta, qrange)
+        us_r, out_r = _time(jax.jit(ref.stoch_quantize_ref),
+                            theta, qprev, unif, delta, qrange)
+        diff = float(jnp.max(jnp.abs(out_k - out_r)))
+        print(f"stoch_quant,{n}x{d},{us_k:.0f},{us_r:.0f},{diff:.2e}")
+        fails += diff > 1e-5
+
+        adj = (jax.random.uniform(key, (n, n)) > 0.5).astype(jnp.float32)
+        v = jax.random.normal(key, (n, d))
+        us_k, out_k = _time(lambda *a: bipartite_mix(*a, interpret=True),
+                            adj, v)
+        us_r, out_r = _time(jax.jit(ref.bipartite_mix_ref), adj, v)
+        diff = float(jnp.max(jnp.abs(out_k - out_r)))
+        print(f"bipartite_mix,{n}x{d},{us_k:.0f},{us_r:.0f},{diff:.2e}")
+        fails += diff > 1e-4
+    return int(fails)
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,57 @@
+"""Roofline table from the dry-run records (experiments/dryrun/*.json).
+
+Prints one CSV row per (arch, shape, mesh) with the three roofline terms
+and the dominant bottleneck. Run `python -m repro.launch.dryrun --all
+--mesh both` first; missing records are listed as `missing`."""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from repro.configs import base
+
+DRYRUN_DIR = Path("experiments/dryrun")
+SHAPES = ("train_4k", "prefill_32k", "decode_32k", "long_500k")
+
+
+def rows(mesh: str = "single"):
+    out = []
+    for arch in base.list_architectures():
+        for shape in SHAPES:
+            path = DRYRUN_DIR / f"{arch}__{shape}__{mesh}.json"
+            if not path.exists():
+                out.append({"arch": arch, "shape": shape,
+                            "status": "missing"})
+                continue
+            rec = json.loads(path.read_text())
+            row = {"arch": arch, "shape": shape, "status": rec["status"]}
+            if rec["status"] == "ok":
+                row.update(rec["roofline"])
+            elif rec["status"] == "skipped":
+                row["reason"] = rec.get("reason", "")
+            out.append(row)
+    return out
+
+
+def main() -> int:
+    fails = 0
+    cols = ("t_compute_s", "t_memory_s", "t_collective_s", "bottleneck",
+            "useful_fraction", "peak_mem_gb")
+    for mesh in ("single", "multi"):
+        print(f"# roofline ({mesh}-pod): arch,shape,status," +
+              ",".join(cols))
+        for row in rows(mesh):
+            if row["status"] != "ok":
+                print(f"{row['arch']},{row['shape']},{row['status']},,,,,,")
+                fails += row["status"] == "fail"
+                continue
+            vals = []
+            for c in cols:
+                v = row.get(c)
+                vals.append(f"{v:.3e}" if isinstance(v, float) else str(v))
+            print(f"{row['arch']},{row['shape']},ok," + ",".join(vals))
+    return fails
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,38 @@
+"""Benchmark driver: one section per paper table/figure + kernels +
+roofline + the beyond-paper LM-consensus benchmark.
+
+    PYTHONPATH=src python -m benchmarks.run [--skip-lm] [--skip-roofline]
+"""
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--skip-lm", action="store_true")
+    ap.add_argument("--skip-roofline", action="store_true")
+    args = ap.parse_args()
+
+    t0 = time.time()
+    failures = 0
+
+    from benchmarks import bench_figures, bench_kernels
+    failures += bench_figures.main()
+    failures += bench_kernels.main()
+
+    if not args.skip_roofline:
+        from benchmarks import bench_roofline
+        failures += bench_roofline.main()
+
+    if not args.skip_lm:
+        from benchmarks import bench_consensus_lm
+        failures += bench_consensus_lm.main()
+
+    print(f"# benchmarks done in {time.time() - t0:.0f}s, "
+          f"{failures} claim failures")
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == '__main__':
+    main()

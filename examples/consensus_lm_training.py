@@ -1,0 +1,42 @@
+"""End-to-end driver: decentralized CQ-GGADMM training of a ~100M-param
+transformer for a few hundred steps on the synthetic-but-learnable stream.
+
+This is the beyond-paper extension: the paper's consensus variables are
+14-50 dim regression weights; here they are the full parameter pytree of a
+GPT-style model (xlstm-125m reduced width keeps one CPU busy but honest —
+pass --full-width on a bigger box).
+
+    PYTHONPATH=src python examples/consensus_lm_training.py [--steps 200]
+"""
+import argparse
+
+from repro.launch import train
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--steps", type=int, default=200)
+ap.add_argument("--workers", type=int, default=4)
+ap.add_argument("--full-width", action="store_true",
+                help="use the full xlstm-125m config (slow on CPU)")
+args = ap.parse_args()
+
+argv = [
+    "--arch", "xlstm-125m",
+    "--mode", "admm",
+    "--workers", str(args.workers),
+    "--steps", str(args.steps),
+    "--batch", str(4 * args.workers),
+    "--seq", "128",
+    "--local-steps", "2",
+    "--lr", "2e-3",
+    "--tau0", "5.0", "--xi", "0.999",
+    "--bits", "6", "--omega", "0.9995",
+    "--log-every", "10",
+    "--ckpt-dir", "experiments/consensus_lm_ckpt",
+]
+if not args.full_width:
+    argv.insert(2, "--smoke")
+
+out = train.main(argv)
+print(f"\nfinal loss {out['final_loss']:.4f} "
+      f"(uniform baseline would be ~ln(V)); "
+      f"total transmitted bits {out['total_bits']:.3e}")

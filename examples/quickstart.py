@@ -1,0 +1,38 @@
+"""Quickstart: the paper's algorithm on its own task in ~40 lines.
+
+Decentralized linear regression over 24 workers on a random bipartite
+graph, comparing GGADMM vs CQ-GGADMM — reproducing the headline result:
+same solution, orders of magnitude fewer transmitted bits.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import jax.numpy as jnp
+
+from repro.core import admm_baselines as ab
+from repro.core import cq_ggadmm as cq
+from repro.core.comm import build_comm_log
+from repro.core.graph import random_bipartite_graph
+from repro.core.solvers import LinearRegressionProblem
+from repro.data import regression as R
+
+N_WORKERS, ITERS = 24, 300
+
+# 1. data, uniformly partitioned across workers (Sec. 7)
+data = R.synth_linear()                       # d=50, 1200 samples
+graph = random_bipartite_graph(N_WORKERS, p=0.35, seed=0)
+x, y = R.partition_uniform(data, N_WORKERS)
+prob = LinearRegressionProblem(jnp.asarray(x), jnp.asarray(y))
+theta_star = prob.optimum()
+
+# 2. run both schemes
+for scheme in ("ggadmm", "cq-ggadmm"):
+    cfg = ab.ALL_SCHEMES[scheme](rho=1.0)
+    state, out = cq.run(graph, prob, cfg, dim=prob.dim, iters=ITERS,
+                        theta_star=theta_star,
+                        local_loss=prob.local_loss)
+    log = build_comm_log(out["tx_mask"], out["payload_bits"], graph,
+                         fraction_active=0.5)
+    print(f"{scheme:10s} dist-to-opt={out['dist_to_opt'][-1]:.2e}  "
+          f"rounds={log.cumulative_rounds[-1]:.0f}  "
+          f"bits={log.cumulative_bits[-1]:.3e}  "
+          f"energy={log.cumulative_energy[-1]:.3e} J")

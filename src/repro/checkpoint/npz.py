@@ -1,0 +1,84 @@
+"""npz pytree checkpointer (orbax is not available offline).
+
+Layout: <dir>/step_<k>.npz with leaves stored under their jax keystr paths,
+plus a tiny JSON sidecar describing the tree for restore-time validation.
+``latest_step`` scans the directory; ``restore`` rebuilds into the template
+pytree (shape/dtype checked leaf by leaf).
+"""
+from __future__ import annotations
+
+import json
+import re
+from pathlib import Path
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+_STEP_RE = re.compile(r"step_(\d+)\.npz$")
+
+
+def _flatten(tree: Any):
+    leaves = jax.tree_util.tree_leaves_with_path(tree)
+    return {jax.tree_util.keystr(path): np.asarray(leaf)
+            for path, leaf in leaves}
+
+
+def save(directory: str | Path, step: int, tree: Any,
+         keep: Optional[int] = 3) -> Path:
+    """Write step_<k>.npz (+ manifest); prune to the newest `keep`."""
+    directory = Path(directory)
+    directory.mkdir(parents=True, exist_ok=True)
+    flat = _flatten(tree)
+    path = directory / f"step_{step}.npz"
+    tmp = path.with_suffix(".tmp.npz")
+    np.savez(tmp, **flat)
+    tmp.rename(path)
+    manifest = {k: {"shape": list(v.shape), "dtype": str(v.dtype)}
+                for k, v in flat.items()}
+    (directory / f"step_{step}.json").write_text(json.dumps(manifest))
+    if keep is not None:
+        steps = sorted(all_steps(directory))
+        for old in steps[:-keep]:
+            (directory / f"step_{old}.npz").unlink(missing_ok=True)
+            (directory / f"step_{old}.json").unlink(missing_ok=True)
+    return path
+
+
+def all_steps(directory: str | Path):
+    directory = Path(directory)
+    if not directory.exists():
+        return []
+    return [int(m.group(1)) for p in directory.iterdir()
+            if (m := _STEP_RE.search(p.name))]
+
+
+def latest_step(directory: str | Path) -> Optional[int]:
+    steps = all_steps(directory)
+    return max(steps) if steps else None
+
+
+def restore(directory: str | Path, template: Any,
+            step: Optional[int] = None) -> tuple[Any, int]:
+    """Rebuild `template`'s pytree from the newest (or given) checkpoint."""
+    directory = Path(directory)
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {directory}")
+    data = np.load(directory / f"step_{step}.npz")
+    leaves_with_path = jax.tree_util.tree_leaves_with_path(template)
+    treedef = jax.tree_util.tree_structure(template)
+    out = []
+    for path, leaf in leaves_with_path:
+        key = jax.tree_util.keystr(path)
+        if key not in data:
+            raise KeyError(f"checkpoint missing leaf {key}")
+        arr = data[key]
+        want_shape = tuple(getattr(leaf, "shape", np.shape(leaf)))
+        if tuple(arr.shape) != want_shape:
+            raise ValueError(
+                f"leaf {key}: checkpoint shape {arr.shape} != {want_shape}")
+        want_dtype = getattr(leaf, "dtype", None)
+        out.append(arr.astype(want_dtype) if want_dtype else arr)
+    return jax.tree_util.tree_unflatten(treedef, out), step

@@ -1,0 +1,61 @@
+"""Communication censoring (paper Sec. 4).
+
+A worker transmits at iteration k+1 only if its candidate transmission moved
+enough relative to the *last transmitted* state:
+
+    transmit  <=>  || state_last - candidate || >= tau^{k+1},
+    tau^k = tau0 * xi^k,   tau0 > 0, xi in (0, 1).
+
+For C-GGADMM the candidate is the raw primal theta_n^{k+1}; for CQ-GGADMM it
+is the quantized reconstruction Q̂_n^{k+1} (censoring on top of quantization,
+Algorithm 2 line 7/15). tau0 = 0 disables censoring (falls back to GGADMM).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class CensorConfig:
+    tau0: float = 0.0       # 0 disables censoring
+    xi: float = 0.8         # decay rate, in (0, 1)
+
+    def __post_init__(self):
+        assert self.tau0 >= 0.0
+        assert 0.0 < self.xi < 1.0
+
+    @property
+    def enabled(self) -> bool:
+        return self.tau0 > 0.0
+
+
+def threshold(cfg: CensorConfig, k: jax.Array) -> jax.Array:
+    """tau^k = tau0 * xi^k, evaluated at (traced) iteration index k."""
+    return cfg.tau0 * jnp.power(cfg.xi, k.astype(jnp.float32))
+
+
+def censor_mask(last_sent: jax.Array, candidate: jax.Array,
+                cfg: CensorConfig, k_next: jax.Array) -> jax.Array:
+    """(N,) float 0/1 mask: 1 => worker transmits this round.
+
+    Args:
+      last_sent: (N, d) most recently transmitted value per worker
+        (theta-tilde for C-GGADMM, theta-hat for CQ-GGADMM).
+      candidate: (N, d) candidate transmission value for round k+1.
+      cfg: censoring config.
+      k_next: the iteration index k+1 at which the threshold is evaluated.
+    """
+    if not cfg.enabled:
+        return jnp.ones((last_sent.shape[0],), last_sent.dtype)
+    change = jnp.linalg.norm(candidate - last_sent, axis=-1)
+    return (change >= threshold(cfg, k_next)).astype(last_sent.dtype)
+
+
+def apply_censoring(last_sent: jax.Array, candidate: jax.Array,
+                    mask: jax.Array) -> jax.Array:
+    """Select candidate where transmitted, keep stale value otherwise."""
+    return jnp.where(mask[:, None] > 0, candidate, last_sent)

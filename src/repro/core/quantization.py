@@ -1,0 +1,167 @@
+"""Stochastic quantization of CQ-GGADMM (paper Sec. 5, Eqs. 14-20).
+
+Each worker n transmits, at iteration k, the quantized *difference* between
+its current model theta_n^k and its previously quantized model Q̂_n^{k-1}:
+
+  range    R_n^k   = max_i |[theta_n^k]_i - [Q̂_n^{k-1}]_i|      (covers diff)
+  step     Δ_n^k   = 2 R_n^k / (2^{b_n^k} - 1)
+  coords   c_i     = (theta_i - Q̂prev_i + R) / Δ                 (Eq. 14)
+  rounding q_i     = ceil(c_i) w.p. p_i = c_i - floor(c_i)        (Eq. 15/17)
+                     floor(c_i) otherwise                          -> unbiased
+  payload  (q, R_n^k, b_n^k)  =  b_n^k * d + b_R + b_b bits
+  rebuild  Q̂_n^k  = Q̂_n^{k-1} + Δ_n^k * q - R_n^k * 1           (Eq. 20)
+
+Convergence requires a non-increasing step size Δ_n^k <= ω Δ_n^{k-1}
+(ω in (0,1)), enforced by growing the bit width per Eq. (18):
+
+  b_n^k >= ceil( log2( 1 + (2^{b_n^{k-1}} - 1) R_n^k / (ω R_n^{k-1}) ) ).
+
+All state is batched over a leading worker axis so the whole worker set
+quantizes in one vectorized call; the elementwise hot loop optionally runs
+through the Pallas kernel in ``repro.kernels``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+_EPS = 1e-12
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class QuantizerState:
+    """Per-worker quantizer state, batched over a leading worker axis.
+
+    Attributes:
+      q_hat: (N, d) previously quantized model Q̂_n^{k-1} (receiver replica).
+      range_prev: (N,) previous range R_n^{k-1}.
+      bits_prev: (N,) previous bit-width b_n^{k-1} (float for jit friendliness).
+      delta_prev: (N,) previous step size Δ_n^{k-1}.
+      initialized: (N,) 0/1 flag — first iteration uses b0 directly.
+    """
+
+    q_hat: jax.Array
+    range_prev: jax.Array
+    bits_prev: jax.Array
+    delta_prev: jax.Array
+    initialized: jax.Array
+
+    @staticmethod
+    def create(n_workers: int, dim: int, b0: int = 2,
+               dtype=jnp.float32) -> "QuantizerState":
+        return QuantizerState(
+            q_hat=jnp.zeros((n_workers, dim), dtype),
+            range_prev=jnp.zeros((n_workers,), dtype),
+            bits_prev=jnp.full((n_workers,), float(b0), dtype),
+            delta_prev=jnp.zeros((n_workers,), dtype),
+            initialized=jnp.zeros((n_workers,), dtype),
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantConfig:
+    b0: int = 2            # initial bit width
+    omega: float = 0.99    # step-size contraction factor ω in (0,1)
+    b_max: int = 16        # cap on per-dimension bit width
+    b_overhead: int = 64   # b_R + b_b side-information bits per transmission
+
+    def __post_init__(self):
+        assert 0.0 < self.omega < 1.0
+        assert 1 <= self.b0 <= self.b_max
+
+
+def required_bits(bits_prev: jax.Array, range_new: jax.Array,
+                  range_prev: jax.Array, omega: float,
+                  initialized: jax.Array, b0: int, b_max: int) -> jax.Array:
+    """Bit-growth rule of Eq. (18), vectorized over workers.
+
+    First iteration (initialized == 0) uses b0. Degenerate ranges keep the
+    previous width.
+    """
+    levels_prev = jnp.exp2(bits_prev) - 1.0
+    ratio = range_new / jnp.maximum(omega * range_prev, _EPS)
+    b_new = jnp.ceil(jnp.log2(1.0 + levels_prev * ratio))
+    b_new = jnp.where(range_prev <= _EPS, bits_prev, b_new)
+    b_new = jnp.where(initialized > 0, b_new, float(b0))
+    return jnp.clip(b_new, 1.0, float(b_max))
+
+
+def stochastic_round(c: jax.Array, uniforms: jax.Array) -> jax.Array:
+    """Eq. (15)/(17): round c up with probability frac(c), down otherwise."""
+    floor_c = jnp.floor(c)
+    p_up = c - floor_c
+    return floor_c + (uniforms < p_up).astype(c.dtype)
+
+
+def quantize_step(
+    state: QuantizerState,
+    theta: jax.Array,
+    key: jax.Array,
+    cfg: QuantConfig,
+    use_kernel: bool = False,
+) -> Tuple[QuantizerState, jax.Array, jax.Array, jax.Array]:
+    """One full quantization round for all workers (Eqs. 14-20).
+
+    Args:
+      state: quantizer state (leading axis = workers).
+      theta: (N, d) current primal variables theta_n^{k}.
+      key: PRNG key for the stochastic rounding.
+      cfg: quantizer hyperparameters.
+      use_kernel: route the elementwise hot loop through the Pallas kernel.
+
+    Returns:
+      (new_state, q_hat_new, bits, payload_bits) where q_hat_new is the
+      receiver-side reconstruction Q̂_n^k (N, d), bits is (N,) the bit widths
+      b_n^k used, payload_bits is (N,) the exact transmission payload size
+      b_n^k * d + overhead.
+    """
+    n, d = theta.shape
+    diff = theta - state.q_hat
+    range_new = jnp.max(jnp.abs(diff), axis=-1)  # (N,)
+    bits = required_bits(state.bits_prev, range_new, state.range_prev,
+                         cfg.omega, state.initialized, cfg.b0, cfg.b_max)
+    levels = jnp.exp2(bits) - 1.0
+    delta = 2.0 * range_new / jnp.maximum(levels, 1.0)      # Δ_n^k
+    # Degenerate: nothing to transmit (diff == 0 everywhere) -> Δ=0 handled
+    # by keeping q_hat unchanged below.
+    uniforms = jax.random.uniform(key, theta.shape, dtype=theta.dtype)
+
+    if use_kernel:
+        from repro.kernels import ops as kernel_ops
+        q_hat_new = kernel_ops.stoch_quantize(
+            theta, state.q_hat, uniforms,
+            delta, range_new)
+    else:
+        safe_delta = jnp.maximum(delta, _EPS)[:, None]
+        c = (diff + range_new[:, None]) / safe_delta          # Eq. (14)
+        q = stochastic_round(c, uniforms)                     # Eq. (15)
+        q = jnp.clip(q, 0.0, levels[:, None])
+        q_hat_new = state.q_hat + safe_delta * q - range_new[:, None]  # Eq. (20)
+    q_hat_new = jnp.where((range_new <= _EPS)[:, None], state.q_hat, q_hat_new)
+
+    new_state = QuantizerState(
+        q_hat=q_hat_new,
+        range_prev=jnp.where(range_new <= _EPS, state.range_prev, range_new),
+        bits_prev=bits,
+        delta_prev=jnp.where(range_new <= _EPS, state.delta_prev, delta),
+        initialized=jnp.ones_like(state.initialized),
+    )
+    payload_bits = bits * float(d) + float(cfg.b_overhead)
+    return new_state, q_hat_new, bits, payload_bits
+
+
+def identity_quantize_step(
+    state: QuantizerState, theta: jax.Array, key: jax.Array, cfg: QuantConfig,
+) -> Tuple[QuantizerState, jax.Array, jax.Array, jax.Array]:
+    """Unquantized pass-through with 32-bit payload accounting (GGADMM)."""
+    del key
+    n, d = theta.shape
+    new_state = dataclasses.replace(
+        state, q_hat=theta, initialized=jnp.ones_like(state.initialized))
+    bits = jnp.full((n,), 32.0, theta.dtype)
+    payload_bits = jnp.full((n,), 32.0 * d, theta.dtype)
+    return new_state, theta, bits, payload_bits

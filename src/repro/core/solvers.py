@@ -1,0 +1,159 @@
+"""Primal subproblem solvers for the (CQ-G)GADMM updates.
+
+Every primal update in the paper (Eqs. 8/9, 11/12, 21/22) has the form
+
+    theta_n^{k+1} = argmin_theta  f_n(theta) + <theta, v_n> + (rho d_n / 2) ||theta||^2
+    with   v_n = alpha_n^k - rho * sum_{m in N_n} (received neighbor value).
+
+This module provides batched-over-workers solvers for the paper's two tasks:
+
+  * linear regression  f_n = 0.5 ||X_n theta - y_n||^2          -> closed form
+  * logistic regression f_n = (1/s) sum log(1+exp(-y x'theta)) + mu0/2||theta||^2
+                                                                -> Newton steps
+
+plus a generic gradient-descent fallback for arbitrary differentiable f_n.
+Neural-network (pytree) subproblems are solved inexactly in
+``repro.core.consensus`` with Adam steps.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class LinearRegressionProblem:
+    """Per-worker least squares: X (N, s, d), y (N, s)."""
+
+    x: jax.Array
+    y: jax.Array
+
+    @property
+    def n_workers(self) -> int:
+        return self.x.shape[0]
+
+    @property
+    def dim(self) -> int:
+        return self.x.shape[-1]
+
+    def local_loss(self, theta: jax.Array) -> jax.Array:
+        """(N,) local objective f_n(theta_n) for stacked theta (N, d)."""
+        resid = jnp.einsum("nsd,nd->ns", self.x, theta) - self.y
+        return 0.5 * jnp.sum(resid ** 2, axis=-1)
+
+    def global_loss(self, theta_bar: jax.Array) -> jax.Array:
+        """Scalar sum_n f_n(theta) at a single shared theta (d,)."""
+        resid = jnp.einsum("nsd,d->ns", self.x, theta_bar) - self.y
+        return 0.5 * jnp.sum(resid ** 2)
+
+    def optimum(self) -> jax.Array:
+        """Closed-form consensus optimum of (P1)."""
+        gram = jnp.einsum("nsd,nse->de", self.x, self.x)
+        rhs = jnp.einsum("nsd,ns->d", self.x, self.y)
+        return jnp.linalg.solve(gram + 1e-9 * jnp.eye(self.dim), rhs)
+
+    def primal_solve(self, v: jax.Array, rho_d: jax.Array,
+                     theta_init: Optional[jax.Array] = None) -> jax.Array:
+        """argmin over theta of f_n + <theta, v_n> + rho*d_n/2 ||theta||^2.
+
+        Solves (X_n^T X_n + rho d_n I) theta = X_n^T y_n - v_n, batched.
+        `theta_init` is ignored (closed form).
+        """
+        del theta_init
+        gram = jnp.einsum("nsd,nse->nde", self.x, self.x)
+        eye = jnp.eye(self.dim, dtype=gram.dtype)
+        lhs = gram + rho_d[:, None, None] * eye[None]
+        rhs = jnp.einsum("nsd,ns->nd", self.x, self.y) - v
+        return jnp.linalg.solve(lhs, rhs[..., None])[..., 0]
+
+
+@dataclasses.dataclass(frozen=True)
+class LogisticRegressionProblem:
+    """Per-worker binary logistic regression with L2 term mu0/2 ||theta||^2.
+
+    x: (N, s, d), y: (N, s) in {-1, +1}.
+    """
+
+    x: jax.Array
+    y: jax.Array
+    mu0: float = 1e-3
+    newton_steps: int = 8
+
+    @property
+    def n_workers(self) -> int:
+        return self.x.shape[0]
+
+    @property
+    def dim(self) -> int:
+        return self.x.shape[-1]
+
+    def local_loss(self, theta: jax.Array) -> jax.Array:
+        s = self.x.shape[1]
+        margins = self.y * jnp.einsum("nsd,nd->ns", self.x, theta)
+        nll = jnp.sum(jnp.logaddexp(0.0, -margins), axis=-1) / s
+        return nll + 0.5 * self.mu0 * jnp.sum(theta ** 2, axis=-1)
+
+    def global_loss(self, theta_bar: jax.Array) -> jax.Array:
+        s = self.x.shape[1]
+        margins = self.y * jnp.einsum("nsd,d->ns", self.x, theta_bar)
+        nll = jnp.sum(jnp.logaddexp(0.0, -margins), axis=-1) / s
+        reg = 0.5 * self.mu0 * jnp.sum(theta_bar ** 2)
+        return jnp.sum(nll) + self.n_workers * reg
+
+    def optimum(self, steps: int = 200) -> jax.Array:
+        """Newton solve of the *global* problem (for optimality-gap curves)."""
+        theta = jnp.zeros((self.dim,), self.x.dtype)
+
+        def body(_, th):
+            g = jax.grad(self.global_loss)(th)
+            h = jax.hessian(self.global_loss)(th)
+            return th - jnp.linalg.solve(h + 1e-9 * jnp.eye(self.dim), g)
+
+        return jax.lax.fori_loop(0, steps, body, theta)
+
+    def primal_solve(self, v: jax.Array, rho_d: jax.Array,
+                     theta_init: Optional[jax.Array] = None) -> jax.Array:
+        """Batched Newton solve of the augmented local subproblem."""
+        s = self.x.shape[1]
+        theta0 = theta_init if theta_init is not None else jnp.zeros(
+            (self.n_workers, self.dim), self.x.dtype)
+
+        def subproblem_grad_hess(theta):
+            margins = self.y * jnp.einsum("nsd,nd->ns", self.x, theta)
+            sig = jax.nn.sigmoid(-margins)                       # (N, s)
+            grad = (-jnp.einsum("ns,ns,nsd->nd", self.y, sig, self.x) / s
+                    + (self.mu0 + rho_d[:, None]) * theta + v)
+            w = sig * (1.0 - sig)                                # (N, s)
+            hess = jnp.einsum("ns,nsd,nse->nde", w, self.x, self.x) / s
+            eye = jnp.eye(self.dim, dtype=theta.dtype)
+            hess = hess + (self.mu0 + rho_d)[:, None, None] * eye[None]
+            return grad, hess
+
+        def body(_, theta):
+            g, h = subproblem_grad_hess(theta)
+            return theta - jnp.linalg.solve(h, g[..., None])[..., 0]
+
+        return jax.lax.fori_loop(0, self.newton_steps, body, theta0)
+
+
+@dataclasses.dataclass(frozen=True)
+class GradientDescentSolver:
+    """Generic inexact primal solver: K GD steps on the augmented subproblem.
+
+    local_grad(theta) must return the (N, d) batched gradient of f_n.
+    """
+
+    local_grad: Callable[[jax.Array], jax.Array]
+    steps: int = 20
+    lr: float = 0.05
+
+    def primal_solve(self, v: jax.Array, rho_d: jax.Array,
+                     theta_init: jax.Array) -> jax.Array:
+        def body(_, theta):
+            g = self.local_grad(theta) + v + rho_d[:, None] * theta
+            return theta - self.lr * g
+
+        return jax.lax.fori_loop(0, self.steps, body, theta_init)

@@ -1,0 +1,98 @@
+"""Synthetic-but-learnable LM token pipeline with per-worker sharding.
+
+Offline container: no external corpora. The stream is a noisy affine
+recurrence over the vocabulary,
+
+    t_{i+1} = (a * t_i + b) mod V        with prob 1 - eps
+              uniform(V)                 otherwise,
+
+which a causal LM can actually learn (loss falls toward the entropy of the
+noise floor), so the end-to-end examples and the ~100M-model training driver
+produce meaningful curves. Batches are deterministic in (seed, step, worker):
+every worker of the decentralized run draws a disjoint shard, which is what
+the consensus objective (P2) needs — distinct local f_n with a common
+optimum.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class SyntheticLMConfig:
+    vocab_size: int
+    seq_len: int
+    mult: int = 31
+    add: int = 17
+    noise: float = 0.1
+    seed: int = 0
+
+
+class SyntheticLM:
+    """Deterministic synthetic token stream."""
+
+    def __init__(self, cfg: SyntheticLMConfig):
+        self.cfg = cfg
+        v = cfg.vocab_size
+        assert np.gcd(cfg.mult, v) == 1 or v % cfg.mult, \
+            "mult should not collapse the vocabulary"
+
+    def _seq(self, rng: np.random.Generator, n: int) -> np.ndarray:
+        c = self.cfg
+        t = np.empty(n + 1, dtype=np.int64)
+        t[0] = rng.integers(0, c.vocab_size)
+        for i in range(n):
+            if rng.uniform() < c.noise:
+                t[i + 1] = rng.integers(0, c.vocab_size)
+            else:
+                t[i + 1] = (t[i] * c.mult + c.add) % c.vocab_size
+        return t
+
+    def batch(self, step: int, batch_size: int,
+              worker: int = 0) -> Dict[str, np.ndarray]:
+        """(batch, seq) tokens + next-token labels, deterministic in
+        (seed, step, worker)."""
+        c = self.cfg
+        rng = np.random.default_rng(
+            np.random.SeedSequence([c.seed, worker, step]))
+        toks = np.empty((batch_size, c.seq_len + 1), dtype=np.int32)
+        for b in range(batch_size):
+            toks[b] = self._seq(rng, c.seq_len)
+        return {"tokens": toks[:, :-1].astype(np.int32),
+                "labels": toks[:, 1:].astype(np.int32)}
+
+    def worker_batch(self, step: int, n_workers: int,
+                     per_worker: int) -> Dict[str, np.ndarray]:
+        """Stacked per-worker batches: leading axis = worker."""
+        parts = [self.batch(step, per_worker, worker=w)
+                 for w in range(n_workers)]
+        return {k: np.stack([p[k] for p in parts]) for k in parts[0]}
+
+
+def model_batch(cfg, data: Dict[str, np.ndarray], *,
+                key: Optional[jax.Array] = None) -> Dict[str, jax.Array]:
+    """Attach the modality-stub inputs an architecture needs.
+
+    [vlm]: random patch embeddings; [audio]: random frame embeddings — the
+    carve-out stub inputs (the backbone is real, the frontend is not).
+    """
+    batch = {k: jnp.asarray(v) for k, v in data.items()}
+    lead = batch["tokens"].shape[:-1]
+    key = key if key is not None else jax.random.PRNGKey(0)
+    if cfg.mrope_sections is not None:
+        s = batch["tokens"].shape[-1]
+        pos = jnp.broadcast_to(jnp.arange(s)[None, :, None],
+                               lead + (s, 3)).astype(jnp.int32)
+        batch["positions"] = pos.reshape(lead + (s, 3))
+    if cfg.vision_tokens:
+        batch["vision_embeds"] = 0.02 * jax.random.normal(
+            key, lead + (cfg.vision_tokens, cfg.d_model), jnp.bfloat16)
+    if cfg.is_encoder_decoder:
+        batch["frames"] = 0.02 * jax.random.normal(
+            key, lead + (cfg.source_positions, cfg.d_model), jnp.bfloat16)
+    return batch

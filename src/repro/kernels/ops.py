@@ -1,0 +1,34 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+Backend dispatch: on TPU the kernels run compiled; elsewhere (this CPU
+container) they run with ``interpret=True``, which executes the kernel body
+in Python/XLA-CPU — semantics identical, so the oracle tests in
+``tests/test_kernels.py`` validate the TPU program logic.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels import bipartite_mix as _mix
+from repro.kernels import stoch_quant as _quant
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def stoch_quantize(theta: jax.Array, q_hat_prev: jax.Array,
+                   uniforms: jax.Array, delta: jax.Array,
+                   qrange: jax.Array) -> jax.Array:
+    return _quant.stoch_quantize(theta, q_hat_prev, uniforms, delta, qrange,
+                                 interpret=_interpret())
+
+
+def bipartite_mix(adjacency: jax.Array, values: jax.Array) -> jax.Array:
+    return _mix.bipartite_mix(adjacency, values, interpret=_interpret())
+
+
+def slstm_cell(wx, r_w, fbias, c0, n0, m0, h0):
+    from repro.kernels import slstm_cell as _cell
+    return _cell.slstm_cell(wx, r_w, fbias, c0, n0, m0, h0,
+                            interpret=_interpret())

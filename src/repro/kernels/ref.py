@@ -1,0 +1,85 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the ground truth the kernels are validated against (bit-exact for
+identical uniforms). Kept dependency-free of pallas so tests can diff both
+implementations.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+_EPS = 1e-12
+
+
+def stoch_quantize_ref(theta: jax.Array, q_hat_prev: jax.Array,
+                       uniforms: jax.Array, delta: jax.Array,
+                       qrange: jax.Array) -> jax.Array:
+    """Fused quantize->dequantize (paper Eqs. 14, 15, 20).
+
+    Args:
+      theta: (N, d) current models.
+      q_hat_prev: (N, d) previous quantized models Q̂^{k-1}.
+      uniforms: (N, d) U(0,1) draws for the stochastic rounding.
+      delta: (N,) step sizes Δ_n^k.
+      qrange: (N,) ranges R_n^k.
+
+    Returns:
+      (N, d) reconstruction Q̂^k = Q̂^{k-1} + Δ q - R 1.
+    """
+    dtype = theta.dtype
+    theta32 = theta.astype(jnp.float32)
+    qprev32 = q_hat_prev.astype(jnp.float32)
+    unif32 = uniforms.astype(jnp.float32)
+    safe_delta = jnp.maximum(delta.astype(jnp.float32), _EPS)[:, None]
+    r = qrange.astype(jnp.float32)[:, None]
+    c = (theta32 - qprev32 + r) / safe_delta
+    floor_c = jnp.floor(c)
+    q = floor_c + (unif32 < (c - floor_c)).astype(jnp.float32)
+    levels = 2.0 * r / safe_delta            # = 2^b - 1
+    q = jnp.clip(q, 0.0, levels)
+    return (qprev32 + safe_delta * q - r).astype(dtype)
+
+
+def bipartite_mix_ref(adjacency: jax.Array, values: jax.Array) -> jax.Array:
+    """Neighbor aggregation sum_{m in N_n} v_m  =  A @ V.
+
+    adjacency: (N, N); values: (N, d) -> (N, d).
+    """
+    return adjacency @ values
+
+
+def slstm_cell_ref(wx: jax.Array, r_w: jax.Array, fbias: jax.Array,
+                   c0: jax.Array, n0: jax.Array, m0: jax.Array,
+                   h0: jax.Array):
+    """Sequential sLSTM cell oracle (matches models/xlstm.slstm_apply).
+
+    wx (B,S,H,4dh); r_w (H,dh,4dh); fbias (H,dh); state (B,H,dh) each.
+    Returns (hs (B,S,H,dh) f32, (c,n,m,h) final).
+    """
+    dh = r_w.shape[1]
+
+    def step(carry, xt):
+        c, n, m, h = carry
+        rec = jnp.einsum("bhk,hkf->bhf", h, r_w)
+        pre = xt.astype(jnp.float32) + rec
+        i_pre, f_pre, z_pre, o_pre = jnp.split(pre, 4, axis=-1)
+        f_pre = f_pre + fbias[None]
+        log_f = jax.nn.log_sigmoid(f_pre)
+        m_new = jnp.maximum(log_f + m, i_pre)
+        i_sc = jnp.exp(i_pre - m_new)
+        f_sc = jnp.exp(log_f + m - m_new)
+        c_new = f_sc * c + i_sc * jnp.tanh(z_pre)
+        n_new = jnp.maximum(f_sc * n + i_sc, 1e-6)
+        h_new = jax.nn.sigmoid(o_pre) * c_new / n_new
+        return (c_new, n_new, m_new, h_new), h_new
+
+    state, hs = jax.lax.scan(step, (c0, n0, m0, h0), wx.swapaxes(0, 1))
+    return hs.swapaxes(0, 1), state
+
+
+def censored_residual_ref(theta_hat: jax.Array, candidate: jax.Array,
+                          thresholds: jax.Array) -> jax.Array:
+    """(N,) transmit mask: ||candidate - theta_hat||_2 >= tau (per worker)."""
+    change = jnp.sqrt(jnp.sum((candidate - theta_hat) ** 2, axis=-1))
+    return (change >= thresholds).astype(theta_hat.dtype)

@@ -1,0 +1,134 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture x input shape) on
+the production meshes and emit memory / cost / roofline records.
+
+The two lines above MUST stay the first statements in this module: jax locks
+the device count on first initialization, and the dry-run needs 512
+placeholder host devices to build the (pod=2, data=16, model=16) mesh. Run:
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch tinyllama-1.1b \
+        --shape train_4k --mesh single
+    PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both \
+        --out experiments/dryrun
+
+Each record lands in <out>/<arch>__<shape>__<mesh>.json with the verbatim
+memory_analysis/cost_analysis plus the parsed roofline terms; EXPERIMENTS.md
+§Dry-run and §Roofline are generated from these files.
+"""
+import argparse
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+
+from repro.configs import base
+from repro.launch.mesh import make_production_mesh
+from repro.runtime import roofline as RL
+from repro.runtime import steps as ST
+
+SHAPES = ("train_4k", "prefill_32k", "decode_32k", "long_500k")
+
+
+def run_one(arch: str, shape_name: str, multi_pod: bool,
+            out_dir: Path | None = None, mode: str | None = None,
+            verbose: bool = True) -> dict:
+    mesh_tag = "multi" if multi_pod else "single"
+    tag = f"{arch}__{shape_name}__{mesh_tag}"
+    cfg = base.get_config(arch)
+    shape = base.INPUT_SHAPES[shape_name]
+    record: dict = {"arch": arch, "shape": shape_name, "mesh": mesh_tag,
+                    "status": "ok"}
+    if not ST.supports(arch, cfg, shape):
+        record["status"] = "skipped"
+        record["reason"] = (f"long_context policy = {cfg.long_context} "
+                            "(see DESIGN.md §Arch-applicability)")
+        if verbose:
+            print(f"[dryrun] {tag}: SKIP ({record['reason']})")
+    else:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        chips = mesh.size
+        t0 = time.time()
+        try:
+            bundle = ST.make_bundle(arch, shape_name, mesh,
+                                    multi_pod=multi_pod, cfg=cfg, mode=mode)
+            lowered = bundle.lower()
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+            mem = compiled.memory_analysis()
+            report = RL.analyze(bundle.name, compiled, chips,
+                                model_flops=RL.analytic_model_flops(cfg,
+                                                                    shape))
+            record.update({
+                "bundle": bundle.name,
+                "chips": chips,
+                "lower_s": round(t_lower, 1),
+                "compile_s": round(t_compile, 1),
+                "memory_analysis": str(mem),
+                "cost_analysis": {k: float(v) for k, v in
+                                  (compiled.cost_analysis() or {}).items()
+                                  if isinstance(v, (int, float))},
+                "roofline": report.row(),
+                "collectives": report.coll_breakdown,
+            })
+            if verbose:
+                r = report.row()
+                print(f"[dryrun] {tag}: OK  compile={t_compile:.0f}s  "
+                      f"mem/dev={r['peak_mem_gb']:.2f}GB  "
+                      f"t_comp={r['t_compute_s']:.3e}s "
+                      f"t_mem={r['t_memory_s']:.3e}s "
+                      f"t_coll={r['t_collective_s']:.3e}s  "
+                      f"bottleneck={r['bottleneck']}")
+                print(f"[dryrun] {tag}: memory_analysis: {mem}")
+        except Exception as e:  # noqa: BLE001 — record and continue
+            record["status"] = "fail"
+            record["error"] = f"{type(e).__name__}: {e}"
+            record["traceback"] = traceback.format_exc()[-4000:]
+            if verbose:
+                print(f"[dryrun] {tag}: FAIL {record['error'][:400]}")
+    if out_dir is not None:
+        out_dir.mkdir(parents=True, exist_ok=True)
+        (out_dir / f"{tag}.json").write_text(json.dumps(record, indent=1))
+    return record
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default=None,
+                    choices=base.list_architectures() + [None])
+    ap.add_argument("--shape", default=None, choices=SHAPES + (None,))
+    ap.add_argument("--mesh", default="single",
+                    choices=("single", "multi", "both"))
+    ap.add_argument("--mode", default=None, choices=("admm", "fsdp", None),
+                    help="override the train-step mode")
+    ap.add_argument("--all", action="store_true",
+                    help="run every (arch x shape)")
+    ap.add_argument("--out", default="experiments/dryrun")
+    args = ap.parse_args()
+
+    archs = base.list_architectures() if (args.all or args.arch is None) \
+        else [args.arch]
+    shapes = SHAPES if (args.all or args.shape is None) else [args.shape]
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+    out_dir = Path(args.out)
+
+    n_ok = n_fail = n_skip = 0
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                rec = run_one(arch, shape, mp, out_dir, mode=args.mode)
+                n_ok += rec["status"] == "ok"
+                n_fail += rec["status"] == "fail"
+                n_skip += rec["status"] == "skipped"
+    print(f"[dryrun] done: {n_ok} ok, {n_fail} fail, {n_skip} skipped")
+    if n_fail:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,98 @@
+"""Batched-request serving driver: prefill + token-by-token decode.
+
+CPU-sized end-to-end check of the serve path that the decode dry-run shapes
+lower at production scale: builds a KV/recurrent cache, prefills a batch of
+prompts, then decodes N tokens greedily.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch zamba2-7b --smoke \
+        --batch 4 --prompt-len 32 --decode-tokens 16
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import base
+from repro.data.lm import SyntheticLM, SyntheticLMConfig, model_batch
+from repro.models import registry
+
+
+def main(argv=None) -> dict:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default="tinyllama-1.1b",
+                    choices=base.list_architectures())
+    ap.add_argument("--smoke", action="store_true", default=True)
+    ap.add_argument("--full", dest="smoke", action="store_false")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--decode-tokens", type=int, default=16)
+    ap.add_argument("--cache-len", type=int, default=None)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = (base.get_smoke_config(args.arch) if args.smoke
+           else base.get_config(args.arch))
+    cache_len = args.cache_len or (args.prompt_len + args.decode_tokens)
+    print(f"[serve] arch={cfg.name} batch={args.batch} "
+          f"prompt={args.prompt_len} decode={args.decode_tokens}")
+
+    params = registry.init_params(cfg, jax.random.PRNGKey(args.seed))
+    cache = registry.init_cache(cfg, args.batch, cache_len)
+
+    data = SyntheticLM(SyntheticLMConfig(cfg.vocab_size, args.prompt_len,
+                                         seed=args.seed))
+    raw = data.batch(0, args.batch)
+    batch = model_batch(cfg, {"tokens": raw["tokens"]},
+                        key=jax.random.PRNGKey(1))
+
+    @jax.jit
+    def prefill(params, cache, batch):
+        if cfg.is_encoder_decoder:
+            cache = registry.prefill_cross_cache(
+                params, cfg, batch["frames"], cache)
+            batch = {k: v for k, v in batch.items() if k != "frames"}
+        logits, _, cache = registry.apply_model(params, cfg, batch,
+                                                caches=cache)
+        return logits[:, -1, :], cache
+
+    @jax.jit
+    def decode(params, cache, tokens, positions):
+        logits, cache = registry.decode_step(params, cfg, tokens, positions,
+                                             cache)
+        return logits[:, -1, :], cache
+
+    t0 = time.time()
+    logits, cache = prefill(params, cache, batch)
+    logits.block_until_ready()
+    t_prefill = time.time() - t0
+    print(f"[serve] prefill: {args.batch}x{args.prompt_len} tokens in "
+          f"{t_prefill:.2f}s")
+
+    tokens = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
+    generated = [tokens]
+    t0 = time.time()
+    for i in range(args.decode_tokens):
+        pos_scalar = args.prompt_len + i
+        if cfg.mrope_sections is not None:
+            positions = jnp.full((args.batch, 1, 3), pos_scalar, jnp.int32)
+        else:
+            positions = jnp.full((args.batch, 1), pos_scalar, jnp.int32)
+        logits, cache = decode(params, cache, tokens, positions)
+        tokens = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
+        generated.append(tokens)
+    jax.block_until_ready(tokens)
+    t_decode = time.time() - t0
+    out = jnp.concatenate(generated, axis=1)
+    tps = args.batch * args.decode_tokens / max(t_decode, 1e-9)
+    print(f"[serve] decoded {args.decode_tokens} tokens/seq in "
+          f"{t_decode:.2f}s ({tps:.1f} tok/s aggregate)")
+    print(f"[serve] sample continuation (seq 0): {out[0].tolist()}")
+    return {"prefill_s": t_prefill, "decode_s": t_decode,
+            "tokens": out}
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,237 @@
+"""Sharding policy: param-tree PartitionSpecs and activation rules.
+
+Policy (v5e-style 2D/3D meshes):
+  * Tensor parallelism over ``model``: column-parallel input projections
+    (q/k/v, wi_*, up, in_proj, wx), row-parallel output projections
+    (o, wo, down, out_proj); vocab-sharded embedding table.
+  * MoE: expert-parallel over ``model`` when num_experts divides the axis,
+    else ff-dim TP inside each expert.
+  * ADMM consensus training adds a leading worker axis on every parameter,
+    sharded over the worker mesh axis ("data" single-pod, "pod" multi-pod).
+  * Multi-pod FSDP: the non-TP dimension of 2D weights is additionally
+    sharded over ``data`` inside each pod (grok/mistral-scale replicas
+    cannot live on 16 chips).
+
+Every proposed axis is divisibility-checked against the actual leaf shape —
+a spec never over-shards a dimension.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec
+
+COL_PARALLEL = ("q", "k", "v", "wi_gate", "wi_up", "up", "wx", "in_proj",
+                "igate", "fgate", "router")
+ROW_PARALLEL = ("o", "wo", "down", "out_proj")
+
+
+def _mesh_axis_size(mesh, axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, (tuple, list)):
+        return int(np.prod([mesh.shape[a] for a in axis]))
+    return mesh.shape[axis]
+
+
+def _checked(mesh, shape, spec_axes) -> PartitionSpec:
+    """Drop axes that do not divide the corresponding dim."""
+    out = []
+    for dim, axis in zip(shape, spec_axes):
+        if axis is not None and dim % _mesh_axis_size(mesh, axis) == 0:
+            out.append(axis)
+        else:
+            out.append(None)
+    return PartitionSpec(*out)
+
+
+def expert_axis(mesh, cfg) -> Optional[str]:
+    """Mesh axis that carries the expert dim. A dedicated 'expert' axis
+    (the EP mesh view, e.g. 16x8x2 data/expert/tp over the same 256 chips)
+    wins; else the model axis when the expert count divides it."""
+    if cfg.num_experts:
+        if "expert" in mesh.shape and \
+                cfg.num_experts % mesh.shape["expert"] == 0:
+            return "expert"
+        if cfg.num_experts % _mesh_axis_size(mesh, "model") == 0:
+            return "model"
+    return None
+
+
+def tp_axes(mesh):
+    """Tensor-parallel mesh axes for dense (non-expert) weights: on the EP
+    mesh view the expert axis folds into TP so attention keeps its full
+    16-way sharding."""
+    return ("expert", "model") if "expert" in mesh.shape else "model"
+
+
+def param_spec(path: str, shape: Tuple[int, ...], mesh, cfg, *,
+               worker_axis: Optional[str] = None,
+               fsdp_axis: Optional[str] = None) -> PartitionSpec:
+    """PartitionSpec for one parameter leaf.
+
+    path: jax keystr of the leaf (e.g. "['stack']['units']['p0']['mlp']
+    ['wi_gate']['w']"); shape excludes any worker axis (added by caller via
+    `worker_axis`).
+    """
+    tp = tp_axes(mesh)
+
+    def named(*axes):
+        lead = (worker_axis,) if worker_axis else ()
+        full_shape = shape if not worker_axis else shape[1:]
+        spec = _checked(mesh, full_shape, axes)
+        return PartitionSpec(*(lead + tuple(spec)))
+
+    rank = len(shape) - (1 if worker_axis else 0)
+    # moe expert stacks: (E, d, f) / (E, f, d) (+ optional scan axis in front)
+    if "'moe'" in path and "router" not in path:
+        ep = expert_axis(mesh, cfg)
+        if ep == "expert":
+            ff_tp = "model"                # EP mesh: ff TP on the leftover
+        elif ep is not None:               # experts on the model axis
+            ff_tp = None
+        else:
+            ff_tp = tp
+        if rank == 4:      # (n_units, E, in, out)
+            if ep:
+                return named(None, ep, fsdp_axis, ff_tp)
+            return named(None, None, fsdp_axis, tp)
+        if rank == 3:
+            if ep:
+                return named(ep, fsdp_axis, ff_tp)
+            return named(None, fsdp_axis, tp)
+
+    if path.endswith("['table']"):      # embedding (V, D)
+        return named(tp, fsdp_axis)
+
+    is_col = any(f"'{n}'" in path for n in COL_PARALLEL)
+    is_row = any(f"'{n}'" in path for n in ROW_PARALLEL)
+    if rank >= 2 and (is_col or is_row):
+        axes = [None] * rank
+        # last two dims are (in, out); leading dims are scan/stack axes
+        if is_col and not is_row:
+            axes[-1], axes[-2] = tp, fsdp_axis
+        else:
+            axes[-1], axes[-2] = fsdp_axis, tp
+        return named(*axes)
+    # conv weights, scales, biases, gates: replicate (modulo worker axis)
+    return named(*([None] * rank))
+
+
+def params_shardings(param_shapes, mesh, cfg, *, worker_axis=None,
+                     fsdp_axis=None):
+    """Map a pytree of ShapeDtypeStructs to NamedShardings."""
+    def leaf(path, x):
+        spec = param_spec(jax.tree_util.keystr(path), x.shape, mesh, cfg,
+                          worker_axis=worker_axis, fsdp_axis=fsdp_axis)
+        return NamedSharding(mesh, spec)
+
+    return jax.tree_util.tree_map_with_path(leaf, param_shapes)
+
+
+# ------------------------------------------------------ activation rules --
+def activation_rules(mesh, cfg, *, batch_axes=("data",),
+                     worker_mode: bool = False) -> Dict[str, Any]:
+    """Logical-name -> mesh-axis map for with_sharding_constraint calls.
+
+    batch_axes: axes carrying the (global or per-worker) batch dimension.
+    worker_mode: under ADMM the 'data' axis carries workers; the per-worker
+    batch stays unsharded inside each worker slice.
+    """
+    tp = tp_axes(mesh)
+    batch = tuple(a for a in batch_axes if a in mesh.shape) or None
+    if batch is not None and len(batch) == 1:
+        batch = batch[0]
+    # expert parallelism claims one axis for the expert dim; the ff dim
+    # inside each expert may use the model axis only when the expert dim
+    # does not (a PartitionSpec may use each mesh axis once).
+    ep = expert_axis(mesh, cfg)
+    expert_parallel = ep == tp
+    import os
+    rules: Dict[str, Any] = {
+        "batch": None if worker_mode else batch,
+        "worker": "data",
+        "seq": None,
+        # sequence-parallel residual (Megatron-SP analog): shard the
+        # residual stream's S over the model axis so TP all-reduces lower
+        # to reduce-scatter + all-gather pairs. Opt-in via env for §Perf.
+        "res_seq": tp if os.environ.get("REPRO_SEQ_PARALLEL") else None,
+        "embed": None,
+        # MoE expert ff: "model" only on the EP mesh; dense archs use full TP
+        "ff": ("model" if ep == "expert" else
+               None if ep is not None else
+               tp if cfg.d_ff % _mesh_axis_size(mesh, tp) == 0 else None),
+        "heads": tp if cfg.num_heads % _mesh_axis_size(mesh, tp) == 0
+        else None,
+        "vocab": tp if cfg.vocab_size % _mesh_axis_size(mesh, tp) == 0
+        else None,
+        "expert": ep,
+        # MoE dispatch-buffer capacity axis: when the experts have no axis
+        # of their own, shard the capacity dim instead (memory relief for
+        # the (E*C, D) buffer at 1M-token prefill).
+        "expert_cap": None if ep else tp,
+        "kv_seq": None,
+    }
+    return rules
+
+
+def cache_spec(mesh, cfg, batch: int, *, batch_axes=("data",),
+               shard_kv_seq: bool = False) -> Dict[str, Any]:
+    """Logical rules for serve caches (used by steps.serve_step)."""
+    rules = activation_rules(mesh, cfg, batch_axes=batch_axes)
+    total_batch_shards = _mesh_axis_size(mesh, rules["batch"])
+    if batch % max(total_batch_shards, 1) != 0:
+        rules["batch"] = None
+    if shard_kv_seq:
+        rules["kv_seq"] = "data"
+    return rules
+
+
+# ----------------------------------------------------- serve-cache specs --
+def cache_leaf_spec(path: str, shape: Tuple[int, ...], mesh, cfg, *,
+                    batch_axis) -> PartitionSpec:
+    """PartitionSpec for one decode-cache leaf.
+
+    Leaves under ['units'] carry a leading stacked-layer axis (kept
+    unsharded); the next axis is batch. Per leaf kind we pick ONE model-axis
+    dimension in preference order (kv-heads > head-dim > kv-seq) so the big
+    KV buffers divide across the whole mesh: e.g. mistral-large decode_32k is
+    ~3 TB of cache; batch x head-dim sharding brings it to ~12 GB/chip.
+    """
+    tp = "model"
+    tp_size = _mesh_axis_size(mesh, tp)
+    stacked = "'units'" in path
+    rest = shape[1:] if stacked else shape
+    name = path.rsplit("'", 3)[-2] if "'" in path else path
+    axes = [None] * len(rest)
+    if rest and rest[0] % max(_mesh_axis_size(mesh, batch_axis), 1) == 0:
+        axes[0] = batch_axis
+
+    def try_axis(i):
+        if 0 < i < len(rest) and rest[i] % tp_size == 0 and axes[i] is None:
+            axes[i] = tp
+            return True
+        return False
+
+    if name in ("k", "v", "cross_k", "cross_v") and len(rest) == 4:
+        _ = try_axis(2) or try_axis(3) or try_axis(1)   # KV > HD > seq
+    elif name == "state" and len(rest) == 4:            # mamba (B,H,P,N)
+        _ = try_axis(1) or try_axis(2)
+    elif name == "conv" and len(rest) == 3:             # (B,K-1,C)
+        try_axis(2)
+    elif name in ("c", "n", "m", "h") and len(rest) >= 2:  # xlstm (B,H,...)
+        try_axis(1)
+    lead = (None,) if stacked else ()
+    return PartitionSpec(*(lead + tuple(axes)))
+
+
+def cache_shardings(cache_shapes, mesh, cfg, *, batch_axis="data"):
+    """Map a decode-cache pytree of ShapeDtypeStructs to NamedShardings."""
+    def leaf(path, x):
+        spec = cache_leaf_spec(jax.tree_util.keystr(path), x.shape, mesh,
+                               cfg, batch_axis=batch_axis)
+        return NamedSharding(mesh, spec)
+
+    return jax.tree_util.tree_map_with_path(leaf, cache_shapes)

@@ -1,0 +1,156 @@
+"""Decentralized (CQ-GGADMM) / baseline (FSDP-Adam) LM training driver.
+
+CPU-friendly end-to-end entry point: trains a reduced or full architecture
+on the synthetic-but-learnable token stream, with the paper's censoring and
+quantization live, logging loss / consensus error / transmitted bits, and
+checkpointing. On real hardware the same bundle runs against the production
+mesh (see dryrun.py); here the mesh is whatever the host offers.
+
+    PYTHONPATH=src python -m repro.launch.train --arch tinyllama-1.1b \
+        --smoke --workers 4 --steps 50 --mode admm
+"""
+from __future__ import annotations
+
+import argparse
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import npz as ckpt
+from repro.configs import base
+from repro.core import consensus as CC
+from repro.core.censoring import CensorConfig
+from repro.core.quantization import QuantConfig
+from repro.data.lm import SyntheticLM, SyntheticLMConfig, model_batch
+from repro.models import registry
+from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update
+from repro.runtime import steps as ST
+
+
+def run_admm(cfg, args) -> dict:
+    graph = ST.worker_graph(args.workers, args.topology)
+    ccfg = CC.ConsensusConfig(
+        rho=args.rho,
+        censor=CensorConfig(tau0=args.tau0, xi=args.xi)
+        if args.tau0 > 0 else CensorConfig(),
+        quantize=QuantConfig(b0=args.bits, omega=args.omega)
+        if args.quantize else None,
+        local_steps=args.local_steps, local_lr=args.lr)
+
+    # identical worker initialization (the paper's theta_n^0 = 0 analog —
+    # one shared init; workers diverge only through their local data)
+    one = registry.init_params(cfg, jax.random.PRNGKey(args.seed))
+    params = jax.tree_util.tree_map(
+        lambda x: jnp.broadcast_to(x[None], (args.workers,) + x.shape), one)
+    state = CC.init_consensus_state(params, ccfg)
+
+    def grad_fn(theta, batch):
+        return jax.vmap(lambda p, b: jax.grad(
+            lambda pp: registry.lm_loss(pp, cfg, b)[0])(p))(theta, batch)
+
+    def loss_fn(theta, batch):
+        return jnp.mean(jax.vmap(
+            lambda p, b: registry.lm_loss(p, cfg, b)[0])(theta, batch))
+
+    step = jax.jit(CC.make_consensus_step(graph, ccfg, grad_fn, loss_fn))
+    data = SyntheticLM(SyntheticLMConfig(cfg.vocab_size, args.seq,
+                                         seed=args.seed))
+    total_bits = 0.0
+    t0 = time.time()
+    history = []
+    for i in range(args.steps):
+        raw = data.worker_batch(i, args.workers, args.batch // args.workers)
+        batch = model_batch(cfg, raw, key=jax.random.PRNGKey(i))
+        state, m = step(state, batch, jax.random.PRNGKey(1000 + i))
+        bits = float((m["payload_bits"] * m["tx_mask"]).sum())
+        total_bits += bits
+        history.append(float(m["loss"]))
+        if i % args.log_every == 0 or i == args.steps - 1:
+            print(f"step {i:4d}  loss={float(m['loss']):.4f}  "
+                  f"consensus_err={float(m['consensus_err']):.3e}  "
+                  f"tx={int(m['tx_mask'].sum())}/{args.workers}  "
+                  f"cum_bits={total_bits:.3e}  "
+                  f"({(time.time() - t0) / (i + 1):.2f}s/step)")
+        if args.ckpt_dir and (i + 1) % args.ckpt_every == 0:
+            ckpt.save(args.ckpt_dir, i + 1, state.theta)
+    if args.ckpt_dir:
+        ckpt.save(args.ckpt_dir, args.steps, state.theta)
+    return {"final_loss": history[-1], "history": history,
+            "total_bits": total_bits}
+
+
+def run_fsdp(cfg, args) -> dict:
+    params = registry.init_params(cfg, jax.random.PRNGKey(args.seed))
+    opt = adamw_init(params)
+    acfg = AdamWConfig(lr=args.lr)
+
+    @jax.jit
+    def step(params, opt, batch):
+        (loss, metr), grads = jax.value_and_grad(
+            lambda p: registry.lm_loss(p, cfg, batch), has_aux=True)(params)
+        params, opt = adamw_update(grads, opt, params, acfg)
+        return params, opt, loss
+
+    data = SyntheticLM(SyntheticLMConfig(cfg.vocab_size, args.seq,
+                                         seed=args.seed))
+    t0 = time.time()
+    history = []
+    for i in range(args.steps):
+        raw = data.batch(i, args.batch)
+        batch = model_batch(cfg, raw, key=jax.random.PRNGKey(i))
+        params, opt, loss = step(params, opt, batch)
+        history.append(float(loss))
+        if i % args.log_every == 0 or i == args.steps - 1:
+            print(f"step {i:4d}  loss={float(loss):.4f}  "
+                  f"({(time.time() - t0) / (i + 1):.2f}s/step)")
+        if args.ckpt_dir and (i + 1) % args.ckpt_every == 0:
+            ckpt.save(args.ckpt_dir, i + 1, params)
+    if args.ckpt_dir:
+        ckpt.save(args.ckpt_dir, args.steps, params)
+    return {"final_loss": history[-1], "history": history,
+            "total_bits": 0.0}
+
+
+def main(argv=None) -> dict:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default="tinyllama-1.1b",
+                    choices=base.list_architectures())
+    ap.add_argument("--smoke", action="store_true",
+                    help="use the reduced config (CPU-sized)")
+    ap.add_argument("--mode", default="admm", choices=("admm", "fsdp"))
+    ap.add_argument("--workers", type=int, default=4)
+    ap.add_argument("--topology", default="random",
+                    choices=("random", "chain", "complete"))
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--rho", type=float, default=0.01)
+    ap.add_argument("--local-steps", type=int, default=4)
+    ap.add_argument("--tau0", type=float, default=5.0)
+    ap.add_argument("--xi", type=float, default=0.995)
+    ap.add_argument("--quantize", action="store_true", default=True)
+    ap.add_argument("--no-quantize", dest="quantize", action="store_false")
+    ap.add_argument("--bits", type=int, default=4)
+    ap.add_argument("--omega", type=float, default=0.999)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--log-every", type=int, default=5)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=100)
+    args = ap.parse_args(argv)
+
+    cfg = (base.get_smoke_config(args.arch) if args.smoke
+           else base.get_config(args.arch))
+    print(f"[train] arch={cfg.name} mode={args.mode} workers={args.workers} "
+          f"batch={args.batch} seq={args.seq} steps={args.steps}")
+    if args.mode == "admm":
+        assert args.batch % args.workers == 0
+        return run_admm(cfg, args)
+    return run_fsdp(cfg, args)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,292 @@
+"""Shared neural-net layers: norms, projections, rotary embeddings, GQA
+attention (full / sliding-window / cross), gated MLP.
+
+Functional style: params are nested dicts of jnp arrays; every layer is a
+pair of ``<name>_init(key, ...) -> params`` and ``<name>(params, x, ...)``.
+Sharding is applied by the runtime through ``repro.runtime.partitioning``
+activation constraints — model code stays mesh-agnostic.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.runtime import partitioning as P
+
+
+# ---------------------------------------------------------------- basics --
+def dense_init(key, in_dim: int, out_dim: int, scale: Optional[float] = None):
+    scale = scale if scale is not None else (1.0 / jnp.sqrt(in_dim))
+    return {"w": (jax.random.normal(key, (in_dim, out_dim), jnp.float32)
+                  * scale)}
+
+
+def dense(params, x):
+    return jnp.einsum("...d,df->...f", x, params["w"].astype(x.dtype))
+
+
+def rmsnorm_init(dim: int):
+    return {"scale": jnp.ones((dim,), jnp.float32)}
+
+
+def rmsnorm(params, x, eps: float = 1e-6):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    y = x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"]).astype(x.dtype)
+
+
+def embed_init(key, vocab: int, dim: int):
+    return {"table": jax.random.normal(key, (vocab, dim), jnp.float32) * 0.02}
+
+
+def embed(params, tokens):
+    """Embedding lookup. Under a mesh the table is vocab-sharded (TP): a
+    plain gather makes GSPMD replicate the gathered activations ("involuntary
+    full rematerialization"); the TPU-idiomatic form is a one-hot matmul —
+    each shard contracts its vocab slice on the MXU and the partial results
+    reduce-scatter, so nothing is ever replicated."""
+    table = params["table"]
+    if P.current_mesh() is None:
+        return jnp.take(table, tokens, axis=0)
+    onehot = jax.nn.one_hot(tokens, table.shape[0], dtype=jnp.bfloat16)
+    onehot = P.constrain(onehot, ("batch", "seq", "vocab"))
+    return jnp.einsum("...v,vd->...d", onehot, table.astype(jnp.bfloat16))
+
+
+def unembed(params, x):
+    """Tied unembedding: logits = x @ table^T, sharded over vocab."""
+    logits = jnp.einsum("...d,vd->...v", x, params["table"].astype(x.dtype))
+    return P.constrain(logits, ("batch", None, "vocab"))
+
+
+# ----------------------------------------------------------------- rotary --
+def _rope_angles(positions, head_dim: int, theta: float):
+    """positions (...,) -> (..., head_dim/2) angles."""
+    half = head_dim // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    return positions.astype(jnp.float32)[..., None] * freqs
+
+
+def apply_rope(x, positions, theta: float,
+               mrope_sections: Optional[Tuple[int, int, int]] = None):
+    """Rotary embedding. x: (B, S, H, D). positions: (B, S) or (B, S, 3)
+    for M-RoPE, where the three planes are (temporal, height, width) and
+    `mrope_sections` splits the D/2 frequency bands among them
+    (qwen2-vl, arXiv:2409.12191)."""
+    head_dim = x.shape[-1]
+    if mrope_sections is not None:
+        assert positions.ndim == 3 and positions.shape[-1] == 3
+        angles_per_plane = _rope_angles(
+            jnp.moveaxis(positions, -1, 0), head_dim, theta)  # (3, B, S, D/2)
+        sections = jnp.concatenate([
+            jnp.full((n,), i, jnp.int32)
+            for i, n in enumerate(mrope_sections)])           # (D/2,)
+        angles = jnp.take_along_axis(
+            jnp.moveaxis(angles_per_plane, 0, -1),            # (B, S, D/2, 3)
+            sections[None, None, :, None], axis=-1)[..., 0]
+    else:
+        if positions.ndim == 3:            # text-only M-RoPE degenerate case
+            positions = positions[..., 0]
+        angles = _rope_angles(positions, head_dim, theta)     # (B, S, D/2)
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], -1)
+    return out.astype(x.dtype)
+
+
+# -------------------------------------------------------------- attention --
+@dataclasses.dataclass(frozen=True)
+class AttnDims:
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    head_dim: int
+
+
+def attention_init(key, dims: AttnDims):
+    ks = jax.random.split(key, 4)
+    d, h, kv, hd = dims.d_model, dims.num_heads, dims.num_kv_heads, dims.head_dim
+    return {
+        "q": dense_init(ks[0], d, h * hd),
+        "k": dense_init(ks[1], d, kv * hd),
+        "v": dense_init(ks[2], d, kv * hd),
+        "o": dense_init(ks[3], h * hd, d, scale=1.0 / jnp.sqrt(h * hd)),
+    }
+
+
+def _attn_mask(q_positions, kv_positions, causal: bool,
+               window: Optional[int]):
+    """(B, Sq, Skv) boolean mask (True = attend). kv_position -1 = unwritten."""
+    q = q_positions[:, :, None]
+    k = kv_positions[:, None, :] if kv_positions.ndim == 2 \
+        else kv_positions[None, None, :]
+    mask = (k >= 0)
+    if causal:
+        mask = mask & (k <= q)
+    if window is not None:
+        mask = mask & ((q - k) < window)
+    return jnp.broadcast_to(mask, (q.shape[0], q.shape[1], k.shape[-1]))
+
+
+def mha(q, k, v, mask):
+    """q (B,Sq,H,D), k/v (B,Skv,KV,D), mask (B,Sq,Skv) -> (B,Sq,H,D)."""
+    b, sq, h, d = q.shape
+    kv = k.shape[2]
+    groups = h // kv
+    q = q.reshape(b, sq, kv, groups, d)
+    logits = jnp.einsum("bqkgd,bskd->bkgqs", q, k).astype(jnp.float32)
+    logits = logits / jnp.sqrt(d).astype(jnp.float32)
+    logits = jnp.where(mask[:, None, None, :, :], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", probs, v)
+    return out.reshape(b, sq, h, d)
+
+
+# Query-chunk threshold above which attention runs blockwise. Dense
+# attention materializes (B, H, Sq, Skv) f32 logits — at 32k prefill that is
+# tens of GB per chip; the blockwise path scans q in chunks of BLOCK_Q so
+# only (B, H, BLOCK_Q, Skv) is ever live (exact, not an approximation).
+# 2048 also routes the 4k TRAIN length through the blockwise path: with the
+# per-chunk remat below, backward peak attention memory drops from
+# O(S^2) to O(BLOCK_Q * S) per layer.
+MHA_BLOCKWISE_THRESHOLD = 2048
+BLOCK_Q = 512
+
+
+def mha_blockwise(q, k, v, q_positions, kv_positions, causal, window,
+                  block_q: int = BLOCK_Q):
+    """Exact attention with the query axis processed in chunks.
+
+    q (B,Sq,H,D), k/v (B,Skv,KV,D); q_positions (B,Sq); kv_positions (B,Skv)
+    or (Skv,). The per-chunk mask is built from positions so no (Sq,Skv)
+    tensor is ever materialized. TPU adaptation of flash attention: chunk
+    work is MXU einsums; the chunk loop is a lax.scan (sequential grid), and
+    softmax over the full kv axis inside a chunk avoids the online-rescale
+    bookkeeping that GPUs need for shared-memory tiling.
+    """
+    b, sq, h, d = q.shape
+    pad = (-sq) % block_q
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        # padded queries get position -1 -> they attend only to slot 0
+        q_positions = jnp.pad(q_positions, ((0, 0), (0, pad)),
+                              constant_values=0)
+    nc = q.shape[1] // block_q
+    q_c = q.reshape(b, nc, block_q, h, d).swapaxes(0, 1)
+    qp_c = q_positions.reshape(b, nc, block_q).swapaxes(0, 1)
+
+    @jax.checkpoint
+    def chunk_body(qc, qpc, k, v):
+        mask = _attn_mask(qpc, kv_positions, causal, window)
+        return mha(qc, k, v, mask)
+
+    def chunk(_, inp):
+        qc, qpc = inp                                   # (B,bq,H,D), (B,bq)
+        return None, chunk_body(qc, qpc, k, v)
+
+    _, outs = jax.lax.scan(chunk, None, (q_c, qp_c))
+    out = outs.swapaxes(0, 1).reshape(b, nc * block_q, h, d)
+    return out[:, :sq]
+
+
+def init_kv_cache(batch: int, cache_len: int, num_kv: int, head_dim: int,
+                  dtype=jnp.bfloat16):
+    """Ring-buffer KV cache. kv_pos tracks the absolute position stored in
+    each slot (-1 = empty); entry for position p lives at slot p % cache_len,
+    so a cache_len == sliding_window ring serves SWA decode in O(window)
+    memory and a cache_len == seq_len ring is an ordinary linear cache."""
+    return {
+        "k": jnp.zeros((batch, cache_len, num_kv, head_dim), dtype),
+        "v": jnp.zeros((batch, cache_len, num_kv, head_dim), dtype),
+        "kv_pos": jnp.full((batch, cache_len), -1, jnp.int32),
+    }
+
+
+def _cache_write(cache, k, v, q_positions):
+    """Scatter S new (k, v) entries at slots positions % cache_len."""
+    w = cache["k"].shape[1]
+    slots = q_positions % w                                   # (B, S)
+    bidx = jnp.arange(k.shape[0])[:, None]
+    ck = cache["k"].at[bidx, slots].set(k.astype(cache["k"].dtype))
+    cv = cache["v"].at[bidx, slots].set(v.astype(cache["v"].dtype))
+    cpos = cache["kv_pos"].at[bidx, slots].set(q_positions)
+    return {"k": ck, "v": cv, "kv_pos": cpos}
+
+
+def attention_apply(params, dims: AttnDims, x, positions, *,
+                    causal: bool = True, window: Optional[int] = None,
+                    rope_theta: float = 10000.0,
+                    mrope_sections=None, use_rope: bool = True,
+                    cache: Optional[dict] = None,
+                    kv_override: Optional[Tuple[jax.Array, jax.Array]] = None):
+    """Self- (or cross-, via kv_override) attention with optional ring cache.
+
+    Returns (out, new_cache). `positions` is (B, S) absolute (or (B, S, 3)
+    for M-RoPE; plane 0 = temporal is used for masking).
+    """
+    b, s, _ = x.shape
+    h, kv, hd = dims.num_heads, dims.num_kv_heads, dims.head_dim
+    q_positions = positions if positions.ndim == 2 else positions[..., 0]
+    x = P.gather_tokens(x)       # sequence-parallel boundary (no-op unless
+    #                              the res_seq rule is active)
+    q = dense(params["q"], x).reshape(b, s, h, hd)
+
+    new_cache = None
+    if kv_override is not None:                       # cross-attention
+        k, v = kv_override
+        kv_positions = jnp.zeros((b, k.shape[1]), jnp.int32)  # all visible
+        eff_causal, eff_window = False, None
+    else:
+        k = P.gather_tokens(dense(params["k"], x).reshape(b, s, kv, hd),
+                            dim=1)
+        v = P.gather_tokens(dense(params["v"], x).reshape(b, s, kv, hd),
+                            dim=1)
+        if use_rope:
+            q = apply_rope(q, positions, rope_theta, mrope_sections)
+            k = apply_rope(k, positions, rope_theta, mrope_sections)
+        if cache is not None:
+            new_cache = _cache_write(cache, k, v, q_positions)
+            k, v = new_cache["k"], new_cache["v"]
+            kv_positions = new_cache["kv_pos"]
+        else:
+            kv_positions = q_positions
+        eff_causal, eff_window = causal, window
+
+    q = P.constrain(q, ("batch", "seq", "heads", None))
+    k, v = k.astype(q.dtype), v.astype(q.dtype)
+    if s > MHA_BLOCKWISE_THRESHOLD:
+        out = mha_blockwise(q, k, v, q_positions, kv_positions,
+                            eff_causal, eff_window)
+    else:
+        mask = _attn_mask(q_positions, kv_positions, eff_causal, eff_window)
+        out = mha(q, k, v, mask)
+    out = dense(params["o"], out.reshape(b, s, h * hd))
+    # "res_seq" is the sequence-parallel residual point: after the
+    # row-parallel o-proj the runtime may shard S over the model axis, so
+    # the TP all-reduce lowers to a reduce-scatter (half the wire bytes)
+    # and the norms between blocks run on S/TP tokens per chip.
+    return P.constrain(out, ("batch", "res_seq", "embed")), new_cache
+
+
+# -------------------------------------------------------------------- MLP --
+def mlp_init(key, d_model: int, d_ff: int):
+    ks = jax.random.split(key, 3)
+    return {
+        "wi_gate": dense_init(ks[0], d_model, d_ff),
+        "wi_up": dense_init(ks[1], d_model, d_ff),
+        "wo": dense_init(ks[2], d_ff, d_model, scale=1.0 / jnp.sqrt(d_ff)),
+    }
+
+
+def mlp_apply(params, x, activation: str = "silu"):
+    x = P.gather_tokens(x)       # sequence-parallel boundary
+    gate = dense(params["wi_gate"], x)
+    up = dense(params["wi_up"], x)
+    act = jax.nn.silu(gate) if activation == "silu" else jax.nn.gelu(gate)
+    h = P.constrain(act * up, ("batch", "seq", "ff"))
+    return P.constrain(dense(params["wo"], h),
+                       ("batch", "res_seq", "embed"))

@@ -1,0 +1,90 @@
+"""Mixture-of-Experts MLP with scatter-based token dispatch.
+
+Top-k token-choice routing with a static per-expert capacity
+C = ceil(T * k / E * capacity_factor). Dispatch avoids the (T, E, C) one-hot
+tensor (prohibitive at 1M-token prefill): instead it computes each
+assignment's rank within its expert via a cumulative count and scatter-adds
+tokens into an (E * C, D) buffer — O(T*k*D) memory, MXU-friendly per-expert
+einsums, and GSPMD shards the buffer over the expert axis (expert
+parallelism; see launch/sharding.py).
+
+Also returns the standard load-balancing auxiliary loss
+(mean_e frac_tokens_e * mean_router_prob_e * E) used by the train loop.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+from repro.runtime import partitioning as P
+
+
+def moe_init(key, d_model: int, d_ff: int, num_experts: int):
+    ks = jax.random.split(key, 4)
+    e, d, f = num_experts, d_model, d_ff
+
+    def expert_stack(k, shape, scale):
+        return jax.random.normal(k, shape, jnp.float32) * scale
+
+    return {
+        "router": layers.dense_init(ks[0], d, e),
+        "wi_gate": {"w": expert_stack(ks[1], (e, d, f), 1.0 / jnp.sqrt(d))},
+        "wi_up": {"w": expert_stack(ks[2], (e, d, f), 1.0 / jnp.sqrt(d))},
+        "wo": {"w": expert_stack(ks[3], (e, f, d), 1.0 / jnp.sqrt(f))},
+    }
+
+
+def moe_apply(params, x, *, num_experts: int, experts_per_token: int,
+              capacity_factor: float = 1.25) -> Tuple[jax.Array, jax.Array]:
+    """x: (B, S, D) -> (out (B, S, D), aux_loss scalar)."""
+    b, s, d = x.shape
+    t = b * s
+    e, k = num_experts, experts_per_token
+    cap = max(int(t * k / e * capacity_factor), k)
+
+    xf = x.reshape(t, d)
+    logits = layers.dense(params["router"], xf).astype(jnp.float32)  # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(probs, k)                  # (T, k)
+    gate_vals = (gate_vals / jnp.sum(gate_vals, -1, keepdims=True)
+                 ).astype(x.dtype)
+
+    # ---- load balance aux (Shazeer-style) --------------------------------
+    assign_onehot = jax.nn.one_hot(expert_idx, e, dtype=jnp.float32)  # (T,k,E)
+    frac_tokens = jnp.mean(jnp.sum(assign_onehot, axis=1), axis=0)    # (E,)
+    mean_probs = jnp.mean(probs, axis=0)
+    aux = jnp.sum(frac_tokens * mean_probs) * e
+
+    # ---- dispatch: rank of each assignment within its expert -------------
+    flat_e = expert_idx.reshape(-1)                                   # (T*k,)
+    onehot = assign_onehot.reshape(t * k, e)
+    ranks = jnp.cumsum(onehot, axis=0) - onehot                       # (T*k,E)
+    rank = jnp.take_along_axis(
+        ranks, flat_e[:, None], axis=1)[:, 0].astype(jnp.int32)
+    valid = (rank < cap)
+    slot = flat_e * cap + jnp.where(valid, rank, 0)
+
+    x_rep = jnp.repeat(xf, k, axis=0)                                 # (T*k,D)
+    buf = jnp.zeros((e * cap, d), x.dtype)
+    buf = buf.at[slot].add(x_rep * valid[:, None].astype(x.dtype))
+    h = buf.reshape(e, cap, d)
+    h = P.constrain(h, ("expert", "expert_cap", "embed"))
+
+    # ---- expert FFN (gated) ----------------------------------------------
+    wg = params["wi_gate"]["w"].astype(x.dtype)
+    wu = params["wi_up"]["w"].astype(x.dtype)
+    wo = params["wo"]["w"].astype(x.dtype)
+    gate = jnp.einsum("ecd,edf->ecf", h, wg)
+    up = jnp.einsum("ecd,edf->ecf", h, wu)
+    act = P.constrain(jax.nn.silu(gate) * up, ("expert", None, "ff"))
+    out_e = jnp.einsum("ecf,efd->ecd", act, wo)
+
+    # ---- combine ----------------------------------------------------------
+    gathered = out_e.reshape(e * cap, d)[slot]                        # (T*k,D)
+    gathered = gathered * (gate_vals.reshape(-1)[:, None]
+                           * valid[:, None].astype(x.dtype))
+    y = jnp.sum(gathered.reshape(t, k, d), axis=1)
+    return y.reshape(b, s, d), aux.astype(jnp.float32)

@@ -1,0 +1,178 @@
+"""Mamba2 (SSD) block — chunked parallel scan for train/prefill, O(1)-state
+recurrent step for decode.
+
+Structure follows the Mamba2 design (state-space duality): the input
+projection emits (z gate, x, B, C, dt); (x, B, C) pass through a short
+causal depthwise conv; the SSD recurrence uses a per-head scalar decay
+alpha_t = exp(-exp(A_log) * dt_t). Train/prefill computes the recurrence in
+chunks of `chunk_size`: intra-chunk attention-like contraction (materializes
+only a (B, cs, cs, H) decay tensor per chunk inside a lax.scan) plus an
+inter-chunk carried state (B, H, P, N) — this is the TPU adaptation of the
+paper-family's GPU kernel: chunk-local work is MXU einsums, the sequential
+dependency is a scan over chunks, and no (S, S) global tensor is ever built,
+which is what makes `long_500k` lowerable.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+from repro.runtime import partitioning as P
+
+CHUNK = 256
+
+
+def dims(cfg):
+    d_inner = cfg.ssm_expand * cfg.d_model
+    nheads = d_inner // cfg.ssm_head_dim
+    return d_inner, nheads, cfg.ssm_state
+
+
+def mamba2_init(key, cfg):
+    d_inner, nheads, n = dims(cfg)
+    conv_ch = d_inner + 2 * n
+    ks = jax.random.split(key, 5)
+    return {
+        "in_proj": layers.dense_init(
+            ks[0], cfg.d_model, 2 * d_inner + 2 * n + nheads),
+        "conv": {"w": jax.random.normal(
+            ks[1], (cfg.ssm_conv, conv_ch), jnp.float32) / cfg.ssm_conv},
+        "a_log": jnp.zeros((nheads,), jnp.float32),          # exp() = 1.0
+        "d_skip": jnp.ones((nheads,), jnp.float32),
+        "dt_bias": jnp.full((nheads,), -2.0, jnp.float32),   # small initial dt
+        "norm": layers.rmsnorm_init(d_inner),
+        "out_proj": layers.dense_init(ks[4], d_inner, cfg.d_model),
+    }
+
+
+def _causal_conv(x, w, tail: Optional[jax.Array]):
+    """Depthwise causal conv. x (B,S,C), w (K,C), tail (B,K-1,C) or None.
+
+    Returns (y (B,S,C), new_tail (B,K-1,C)).
+    """
+    k = w.shape[0]
+    if tail is None:
+        tail = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    full = jnp.concatenate([tail.astype(x.dtype), x], axis=1)   # (B,S+K-1,C)
+    # windowed sum: y_t = sum_j w_j * full_{t+j}
+    y = jnp.zeros_like(x)
+    for j in range(k):
+        y = y + full[:, j:j + x.shape[1], :] * w[j][None, None, :]
+    new_tail = full[:, -(k - 1):, :] if k > 1 else tail
+    return y, new_tail
+
+
+def _ssd_chunked(xbar, log_alpha, b_mat, c_mat, init_state, chunk: int):
+    """Chunked SSD scan.
+
+    xbar: (B, S, H, P) inputs scaled by dt; log_alpha: (B, S, H) <= 0;
+    b_mat, c_mat: (B, S, N); init_state: (B, H, P, N).
+    Returns (y (B,S,H,P), final_state).
+    """
+    bsz, s, h, p = xbar.shape
+    n = b_mat.shape[-1]
+    pad = (-s) % chunk
+    if pad:
+        xbar = jnp.pad(xbar, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        log_alpha = jnp.pad(log_alpha, ((0, 0), (0, pad), (0, 0)))
+        b_mat = jnp.pad(b_mat, ((0, 0), (0, pad), (0, 0)))
+        c_mat = jnp.pad(c_mat, ((0, 0), (0, pad), (0, 0)))
+    nc = xbar.shape[1] // chunk
+
+    def resh(t):
+        return t.reshape((bsz, nc) + (chunk,) + t.shape[2:]).swapaxes(0, 1)
+
+    xb_c, la_c, b_c, c_c = map(resh, (xbar, log_alpha, b_mat, c_mat))
+
+    def chunk_body(state, inp):
+        xb, la, bm, cm = inp                       # (B,cs,H,P), (B,cs,H), ...
+        la_cum = jnp.cumsum(la, axis=1)            # inclusive
+        # intra-chunk: y_i += sum_{j<=i} (C_i.B_j) exp(la_i - la_j) xbar_j
+        seg = la_cum[:, :, None, :] - la_cum[:, None, :, :]   # (B,i,j,H)
+        idx = jnp.arange(xb.shape[1])
+        causal = (idx[:, None] >= idx[None, :])[None, :, :, None]
+        w = jnp.exp(seg) * causal.astype(seg.dtype)
+        scores = jnp.einsum("bin,bjn->bij", cm, bm)
+        y_intra = jnp.einsum("bij,bijh,bjhp->bihp",
+                             scores.astype(jnp.float32),
+                             w.astype(jnp.float32),
+                             xb.astype(jnp.float32))
+        # inter-chunk: y_i += exp(la_i) * C_i . state
+        y_inter = jnp.einsum("bin,bhpn->bihp", cm.astype(jnp.float32),
+                             state) * jnp.exp(la_cum)[..., None]
+        # state' = exp(la_total) * state + sum_j exp(la_total - la_j) B_j xbar_j
+        la_tot = la_cum[:, -1, :]                  # (B,H)
+        decay_to_end = jnp.exp(la_tot[:, None, :] - la_cum)   # (B,cs,H)
+        state_inc = jnp.einsum("bjn,bjhp->bhpn", bm.astype(jnp.float32),
+                               (xb * decay_to_end[..., None]).astype(
+                                   jnp.float32))
+        state_new = state * jnp.exp(la_tot)[:, :, None, None] + state_inc
+        return state_new, (y_intra + y_inter).astype(xbar.dtype)
+
+    final_state, ys = jax.lax.scan(
+        chunk_body, init_state.astype(jnp.float32), (xb_c, la_c, b_c, c_c))
+    y = ys.swapaxes(0, 1).reshape(bsz, nc * chunk, h, p)
+    return y[:, :s], final_state
+
+
+def mamba2_apply(params, cfg, x, *, cache: Optional[dict] = None,
+                 chunk: int = CHUNK) -> Tuple[jax.Array, Optional[dict]]:
+    """x: (B, S, D). cache: {"state": (B,H,P,N), "conv": (B,K-1,C)} or None.
+
+    Returns (out (B,S,D), new_cache).
+    """
+    d_inner, nheads, n = dims(cfg)
+    p = cfg.ssm_head_dim
+    b, s, _ = x.shape
+    zxbcdt = layers.dense(params["in_proj"], x)
+    z, xc, bmat, cmat, dt = jnp.split(
+        zxbcdt, [d_inner, 2 * d_inner, 2 * d_inner + n, 2 * d_inner + 2 * n],
+        axis=-1)
+    conv_in = jnp.concatenate([xc, bmat, cmat], axis=-1)
+    conv_tail = cache["conv"] if cache is not None else None
+    conv_out, new_tail = _causal_conv(
+        conv_in, params["conv"]["w"].astype(x.dtype), conv_tail)
+    conv_out = jax.nn.silu(conv_out)
+    xc, bmat, cmat = jnp.split(conv_out, [d_inner, d_inner + n], axis=-1)
+    xh = xc.reshape(b, s, nheads, p)
+    xh = P.constrain(xh, ("batch", "seq", "heads", None))
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + params["dt_bias"][None, None, :])      # (B,S,H)
+    log_alpha = -jnp.exp(params["a_log"])[None, None, :] * dt
+    xbar = xh * dt[..., None].astype(x.dtype)
+
+    init_state = (cache["state"] if cache is not None else
+                  jnp.zeros((b, nheads, p, n), jnp.float32))
+    if s == 1 and cache is not None:
+        # pure recurrent decode step
+        alpha = jnp.exp(log_alpha[:, 0, :])                        # (B,H)
+        inc = jnp.einsum("bn,bhp->bhpn", bmat[:, 0].astype(jnp.float32),
+                         xbar[:, 0].astype(jnp.float32))
+        state = init_state * alpha[:, :, None, None] + inc
+        y = jnp.einsum("bhpn,bn->bhp", state,
+                       cmat[:, 0].astype(jnp.float32))[:, None]
+        final_state = state
+        y = y.astype(x.dtype)
+    else:
+        y, final_state = _ssd_chunked(xbar, log_alpha, bmat, cmat,
+                                      init_state, chunk)
+    y = y + params["d_skip"][None, None, :, None].astype(x.dtype) * xh
+    y = y.reshape(b, s, d_inner)
+    y = layers.rmsnorm(params["norm"], y * jax.nn.silu(z))
+    out = layers.dense(params["out_proj"], y)
+    new_cache = ({"state": final_state, "conv": new_tail}
+                 if cache is not None else None)
+    return P.constrain(out, ("batch", "seq", "embed")), new_cache
+
+
+def mamba2_cache(cfg, batch: int, dtype=jnp.bfloat16):
+    d_inner, nheads, n = dims(cfg)
+    conv_ch = d_inner + 2 * n
+    return {
+        "state": jnp.zeros((batch, nheads, cfg.ssm_head_dim, n), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, conv_ch), dtype),
+    }

@@ -1,0 +1,68 @@
+"""Minimal AdamW + SGD over pytrees (optax is not available offline).
+
+Used both as the baseline trainer and as the inexact local primal solver
+inside the consensus (CQ-GGADMM) train step.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.0
+
+
+class AdamWState(NamedTuple):
+    mu: Any
+    nu: Any
+    count: jax.Array
+
+
+def adamw_init(params) -> AdamWState:
+    zeros = jax.tree_util.tree_map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return AdamWState(mu=zeros, nu=jax.tree_util.tree_map(jnp.copy, zeros),
+                      count=jnp.zeros((), jnp.int32))
+
+
+def adamw_update(grads, state: AdamWState, params,
+                 cfg: AdamWConfig) -> Tuple[Any, AdamWState]:
+    count = state.count + 1
+    b1c = 1.0 - cfg.b1 ** count.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** count.astype(jnp.float32)
+
+    def upd(g, m, v, p):
+        g32 = g.astype(jnp.float32)
+        m_new = cfg.b1 * m + (1 - cfg.b1) * g32
+        v_new = cfg.b2 * v + (1 - cfg.b2) * jnp.square(g32)
+        step = (m_new / b1c) / (jnp.sqrt(v_new / b2c) + cfg.eps)
+        step = step + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - cfg.lr * step).astype(p.dtype), \
+            m_new, v_new
+
+    g_flat, treedef = jax.tree_util.tree_flatten(grads)
+    m_flat = treedef.flatten_up_to(state.mu)
+    v_flat = treedef.flatten_up_to(state.nu)
+    p_flat = treedef.flatten_up_to(params)
+    out = [upd(g, m, v, p) for g, m, v, p in
+           zip(g_flat, m_flat, v_flat, p_flat)]
+    new_params = jax.tree_util.tree_unflatten(treedef, [t[0] for t in out])
+    new_mu = jax.tree_util.tree_unflatten(treedef, [t[1] for t in out])
+    new_nu = jax.tree_util.tree_unflatten(treedef, [t[2] for t in out])
+    return new_params, AdamWState(new_mu, new_nu, count)
+
+
+def sgd_update(grads, params, lr: float):
+    return jax.tree_util.tree_map(
+        lambda p, g: (p.astype(jnp.float32)
+                      - lr * g.astype(jnp.float32)).astype(p.dtype),
+        params, grads)

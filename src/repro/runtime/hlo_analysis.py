@@ -1,0 +1,279 @@
+"""HLO-text cost walker: loop-aware FLOPs / HBM-traffic / collective bytes.
+
+XLA's ``compiled.cost_analysis()`` counts every while-loop body exactly ONCE
+and reports per-device numbers — useless for a scanned-layers transformer
+(an 88-layer model shows up as one layer). This module re-derives the
+roofline inputs from ``compiled.as_text()`` by walking the computation call
+graph and multiplying each while body by its ``known_trip_count``:
+
+  * FLOPs            — 2 * prod(result dims) * prod(contracting dims) per
+                       ``dot`` (matmuls dominate; elementwise ignored).
+  * HBM traffic      — operand + result bytes of every op at a fusion
+                       boundary (fusion bodies excluded: XLA materializes
+                       exactly at fusion boundaries, so this is the
+                       compiled program's actual load/store volume).
+  * collective bytes — operand bytes of all-gather / all-reduce /
+                       reduce-scatter / all-to-all / collective-permute
+                       (``-done`` halves of async pairs skipped).
+
+All totals are per-device (the partitioned module is the per-device
+program). Conditional branches count once each (upper bound); while loops
+without a known trip count count once (logged in ``warnings``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+    "token": 0, "opaque": 0,
+}
+
+_SHAPE_RE = re.compile(r"\b([a-z]+\d*)\[([\d,]*)\]")
+_COMP_HEADER_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s+\(.*\)\s+->")
+_OP_LINE_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s+=\s+(\(.*?\)|\S+)\s+([\w\-]+)\(")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_CALLS_RE = re.compile(r"calls=%?([\w.\-]+)")
+_BODY_RE = re.compile(r"body=%?([\w.\-]+)")
+_COND_RE = re.compile(r"condition=%?([\w.\-]+)")
+_TO_APPLY_RE = re.compile(r"to_apply=%?([\w.\-]+)")
+_BRANCHES_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_LHS_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+_FREE_OPS = {"parameter", "get-tuple-element", "tuple", "constant",
+             "bitcast", "after-all", "iota", "partition-id", "replica-id",
+             "opt-barrier"}
+
+
+def _type_bytes(type_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        n = _DTYPE_BYTES.get(m.group(1), 0)
+        for d in (m.group(2).split(",") if m.group(2) else []):
+            n *= int(d)
+        total += n
+    return total
+
+
+def _type_dims(type_str: str) -> Optional[List[int]]:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return None
+    return [int(d) for d in m.group(2).split(",")] if m.group(2) else []
+
+
+@dataclasses.dataclass
+class _Op:
+    name: str
+    result_type: str
+    opcode: str
+    operands: List[str]
+    line: str
+
+
+@dataclasses.dataclass
+class _Computation:
+    name: str
+    ops: List[_Op]
+    is_fusion_body: bool = False
+
+
+def _split_operands(args: str) -> List[str]:
+    """Top-level comma split of the operand list, names only."""
+    out, depth, cur = [], 0, []
+    for ch in args:
+        if ch in "([{":
+            depth += 1
+        elif ch in ")]}":
+            depth -= 1
+        if ch == "," and depth == 0:
+            out.append("".join(cur).strip())
+            cur = []
+        else:
+            cur.append(ch)
+    if cur:
+        out.append("".join(cur).strip())
+    names = []
+    for tok in out:
+        m = re.search(r"%([\w.\-]+)\s*$", tok)
+        if m:
+            names.append(m.group(1))
+    return names
+
+
+def parse_module(hlo_text: str) -> Tuple[Dict[str, _Computation], str]:
+    """Parse computations; return ({name: comp}, entry_name)."""
+    comps: Dict[str, _Computation] = {}
+    entry = ""
+    current: Optional[_Computation] = None
+    for raw in hlo_text.splitlines():
+        line = raw.rstrip()
+        if not line:
+            continue
+        if not line[0].isspace():
+            mh = _COMP_HEADER_RE.match(line)
+            if mh and line.endswith("{"):
+                current = _Computation(mh.group(1), [])
+                comps[current.name] = current
+                if line.startswith("ENTRY"):
+                    entry = current.name
+                continue
+            current = None
+            continue
+        if current is None:
+            continue
+        if line.strip() == "}":
+            current = None
+            continue
+        mo = _OP_LINE_RE.match(line)
+        if not mo:
+            continue
+        name, rtype, opcode = mo.group(1), mo.group(2), mo.group(3)
+        # operand list: text within the top-level parens after opcode
+        start = line.index(f"{opcode}(", mo.end(2)) + len(opcode) + 1
+        depth, end = 1, start
+        while end < len(line) and depth:
+            if line[end] == "(":
+                depth += 1
+            elif line[end] == ")":
+                depth -= 1
+            end += 1
+        operands = _split_operands(line[start:end - 1])
+        current.ops.append(_Op(name, rtype, opcode, operands, line))
+    # mark fusion bodies + reduce appliers (not materialization boundaries)
+    called_inline = set()
+    for comp in comps.values():
+        for op in comp.ops:
+            if op.opcode == "fusion":
+                mc = _CALLS_RE.search(op.line)
+                if mc:
+                    called_inline.add(mc.group(1))
+            for m in _TO_APPLY_RE.finditer(op.line):
+                called_inline.add(m.group(1))
+    for name in called_inline:
+        if name in comps:
+            comps[name].is_fusion_body = True
+    return comps, entry
+
+
+@dataclasses.dataclass
+class HloCost:
+    flops: float = 0.0
+    traffic_bytes: float = 0.0
+    coll_bytes: float = 0.0
+    coll_breakdown: Dict[str, float] = dataclasses.field(
+        default_factory=dict)
+    warnings: List[str] = dataclasses.field(default_factory=list)
+
+    def add(self, other: "HloCost", mult: float = 1.0) -> None:
+        self.flops += mult * other.flops
+        self.traffic_bytes += mult * other.traffic_bytes
+        self.coll_bytes += mult * other.coll_bytes
+        for k, v in other.coll_breakdown.items():
+            self.coll_breakdown[k] = self.coll_breakdown.get(k, 0.0) \
+                + mult * v
+        self.warnings.extend(other.warnings)
+
+
+def _shape_table(comp: _Computation) -> Dict[str, str]:
+    return {op.name: op.result_type for op in comp.ops}
+
+
+def _own_cost(comp: _Computation, table: Dict[str, str]) -> HloCost:
+    cost = HloCost()
+    local = _shape_table(comp)
+
+    def resolve(name: str) -> str:
+        return local.get(name) or table.get(name) or ""
+
+    for op in comp.ops:
+        if op.opcode in _FREE_OPS:
+            continue
+        base = op.opcode.removesuffix("-start").removesuffix("-done")
+        if base in _COLLECTIVES:
+            if op.opcode.endswith("-done"):
+                continue
+            nbytes = sum(_type_bytes(resolve(o)) for o in op.operands)
+            cost.coll_bytes += nbytes
+            cost.coll_breakdown[base] = cost.coll_breakdown.get(base, 0.0) \
+                + nbytes
+        if op.opcode == "dot":
+            dims = _type_dims(op.result_type) or []
+            lhs_dims = _type_dims(resolve(op.operands[0])) if op.operands \
+                else None
+            mc = _LHS_CONTRACT_RE.search(op.line)
+            contract = 1
+            if lhs_dims is not None and mc and mc.group(1):
+                for i in mc.group(1).split(","):
+                    contract *= lhs_dims[int(i)]
+            result = 1
+            for d in dims:
+                result *= d
+            cost.flops += 2.0 * result * contract
+        elif op.opcode == "convolution":
+            cost.warnings.append(f"convolution not counted: {op.name}")
+        if not comp.is_fusion_body:
+            if op.opcode == "dynamic-update-slice":
+                # in-place in XLA: traffic = the written slice (x2 for
+                # read-modify-write), NOT the whole buffer
+                upd = _type_bytes(resolve(op.operands[1])) if \
+                    len(op.operands) > 1 else 0
+                nbytes = 2 * upd
+            elif op.opcode == "dynamic-slice":
+                nbytes = 2 * _type_bytes(op.result_type)
+            else:
+                nbytes = _type_bytes(op.result_type)
+                nbytes += sum(_type_bytes(resolve(o)) for o in op.operands)
+            cost.traffic_bytes += nbytes
+    return cost
+
+
+def analyze_hlo(hlo_text: str) -> HloCost:
+    comps, entry = parse_module(hlo_text)
+    table: Dict[str, str] = {}
+    for comp in comps.values():
+        table.update(_shape_table(comp))
+    own = {name: _own_cost(c, table) for name, c in comps.items()}
+    memo: Dict[str, HloCost] = {}
+
+    def total(name: str, stack: Tuple[str, ...] = ()) -> HloCost:
+        if name in memo:
+            return memo[name]
+        if name not in comps or name in stack:
+            return HloCost()
+        cost = HloCost()
+        cost.add(own[name])
+        for op in comps[name].ops:
+            if op.opcode == "while":
+                mb, mcnd = _BODY_RE.search(op.line), _COND_RE.search(op.line)
+                mt = _TRIP_RE.search(op.line)
+                trips = int(mt.group(1)) if mt else 1
+                if not mt:
+                    cost.warnings.append(
+                        f"while {op.name}: unknown trip count, counted once")
+                if mb:
+                    cost.add(total(mb.group(1), stack + (name,)), trips)
+                if mcnd:
+                    cost.add(total(mcnd.group(1), stack + (name,)),
+                             trips + 1)
+            elif op.opcode in ("fusion", "call", "async-start"):
+                mc = _CALLS_RE.search(op.line) or _TO_APPLY_RE.search(op.line)
+                if mc:
+                    cost.add(total(mc.group(1), stack + (name,)))
+            elif op.opcode == "conditional":
+                mbr = _BRANCHES_RE.search(op.line)
+                if mbr:
+                    for branch in re.findall(r"%?([\w.\-]+)", mbr.group(1)):
+                        cost.add(total(branch, stack + (name,)))
+        memo[name] = cost
+        return cost
+
+    return total(entry)

@@ -1,0 +1,84 @@
+"""Logical-axis sharding: model code names axes, the runtime maps them.
+
+Model code calls ``constrain(x, ("batch", "seq", "embed"))``; if a mesh
+context is active (set by the launcher / dry-run), the logical names are
+translated to mesh axes through the current rule set and a
+``with_sharding_constraint`` is applied. Without a context (unit tests,
+single-device smoke runs) it is the identity, so models stay mesh-agnostic.
+
+Rule sets are plain dicts  logical name -> mesh axis (or None / tuple).
+The standard rules for the production meshes live in
+``repro.launch.sharding``.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Dict, Optional, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+MeshAxis = Union[None, str, Tuple[str, ...]]
+
+_ctx = threading.local()
+
+
+def current_mesh() -> Optional[Mesh]:
+    return getattr(_ctx, "mesh", None)
+
+
+def current_rules() -> Dict[str, MeshAxis]:
+    return getattr(_ctx, "rules", {})
+
+
+@contextlib.contextmanager
+def logical_sharding(mesh: Mesh, rules: Dict[str, MeshAxis]):
+    prev = (current_mesh(), current_rules())
+    _ctx.mesh, _ctx.rules = mesh, rules
+    try:
+        yield
+    finally:
+        _ctx.mesh, _ctx.rules = prev
+
+
+def spec_for(logical_axes: Tuple[Optional[str], ...],
+             rules: Optional[Dict[str, MeshAxis]] = None) -> PartitionSpec:
+    rules = rules if rules is not None else current_rules()
+    return PartitionSpec(*[
+        rules.get(name) if name is not None else None
+        for name in logical_axes
+    ])
+
+
+def constrain(x: jax.Array, logical_axes: Tuple[Optional[str], ...]):
+    mesh = current_mesh()
+    if mesh is None:
+        return x
+    if len(logical_axes) != x.ndim:
+        # model code sometimes annotates the canonical rank; skip mismatches
+        return x
+    spec = spec_for(logical_axes)
+    if all(s is None for s in spec):
+        # an all-None constraint would FORCE replication — never what we
+        # want; let GSPMD propagate instead.
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, spec))
+
+
+def gather_tokens(x: jax.Array, dim: int = -2):
+    """Sequence-parallel gather boundary (Megatron-SP): force dim `dim`
+    (the token axis) replicated, leaving every other dim unconstrained.
+    Active only when the 'res_seq' rule shards the residual stream —
+    GSPMD then lowers the preceding TP all-reduce to reduce-scatter and
+    inserts the matching all-gather exactly here (before qkv / wi), instead
+    of leaking seq-sharding into attention."""
+    mesh = current_mesh()
+    if mesh is None or current_rules().get("res_seq") is None:
+        return x
+    spec = [PartitionSpec.UNCONSTRAINED] * x.ndim
+    dim = dim % x.ndim
+    spec[dim] = None
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, PartitionSpec(*spec)))

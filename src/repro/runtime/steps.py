@@ -1,0 +1,412 @@
+"""train_step / prefill_step / serve_step builders + abstract input specs.
+
+This is the piece the multi-pod dry-run lowers: for every assigned
+(architecture x input shape) we produce a ``StepBundle`` — a jittable step
+function, its ``in_shardings`` over the production mesh, and
+``ShapeDtypeStruct`` stand-ins for every input (no allocation) — so
+
+    jax.jit(bundle.fn, in_shardings=bundle.in_shardings)
+        .lower(*bundle.abstract_inputs).compile()
+
+is the whole dry run.
+
+Train modes:
+  * "admm"  — the paper's technique: CQ-GGADMM consensus training with the
+    worker graph laid along a mesh axis ("data" on the single pod: 16
+    workers; "pod" across pods: 2 workers with FSDP x TP inside each pod).
+  * "fsdp"  — standard data-parallel + FSDP x TP baseline; also used on the
+    single pod for the two giant archs whose 16 per-worker replicas cannot
+    fit (grok-1-314b, mistral-large-123b; see DESIGN.md §Arch-applicability).
+
+Serve shapes lower ``serve_step`` (ONE token against a seq_len KV cache);
+``prefill_32k`` lowers a cache-building forward.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec
+
+from repro.configs.base import INPUT_SHAPES, ModelConfig, ShapeConfig
+from repro.core import consensus as CC
+from repro.core import graph as G
+from repro.core.censoring import CensorConfig
+from repro.core.quantization import QuantConfig
+from repro.launch import sharding as SH
+from repro.models import registry
+from repro.optim.adamw import AdamWConfig, AdamWState, adamw_init, adamw_update
+from repro.runtime import partitioning as P
+
+GIANT_ARCHS = ("grok-1-314b", "mistral-large-123b")
+
+
+@dataclasses.dataclass
+class StepBundle:
+    """Everything the dry-run / launcher needs for one (arch, shape, mesh)."""
+
+    name: str
+    fn: Callable
+    in_shardings: Tuple[Any, ...]
+    abstract_inputs: Tuple[Any, ...]
+    mesh: Any
+    donate_argnums: Tuple[int, ...] = ()
+
+    def lower(self):
+        jitted = jax.jit(self.fn, in_shardings=self.in_shardings,
+                         donate_argnums=self.donate_argnums)
+        return jitted.lower(*self.abstract_inputs)
+
+
+# -------------------------------------------------------------- helpers --
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(int(s) for s in shape), dtype)
+
+
+def _abstract_tree(tree):
+    return jax.tree_util.tree_map(
+        lambda x: _sds(x.shape, x.dtype), tree)
+
+
+def _replicated(mesh, tree):
+    return jax.tree_util.tree_map(
+        lambda _: NamedSharding(mesh, PartitionSpec()), tree)
+
+
+def train_mode_for(arch: str, multi_pod: bool) -> str:
+    """ADMM consensus everywhere it fits; giants fall back to FSDP on the
+    single pod (a 16-replica worker set cannot hold a 123B/314B model)."""
+    if arch in GIANT_ARCHS and not multi_pod:
+        return "fsdp"
+    return "admm"
+
+
+def _batch_axes(multi_pod: bool):
+    return ("pod", "data") if multi_pod else ("data",)
+
+
+def _consensus_cfg(arch: str, multi_pod: bool) -> CC.ConsensusConfig:
+    """Production ADMM config. The REPRO_ADMM_* env knobs drive the §Perf
+    iterations (the dry-run re-lowers with a knob flipped and compares
+    roofline terms)."""
+    import os
+    lean = arch in GIANT_ARCHS     # 314B: SGD local solver + bf16 replicas
+    hat = os.environ.get("REPRO_ADMM_HAT_DTYPE",
+                         "bfloat16" if lean else "")
+    return CC.ConsensusConfig(
+        rho=0.01,
+        censor=CensorConfig(tau0=5.0, xi=0.995),
+        quantize=QuantConfig(b0=4, omega=0.999),
+        local_steps=int(os.environ.get("REPRO_ADMM_LOCAL_STEPS", "4")),
+        local_lr=1e-3,
+        use_adam=(not lean) and not int(
+            os.environ.get("REPRO_ADMM_SGD", "0")),
+        hat_dtype=hat or None,
+    )
+
+
+def worker_graph(n_workers: int, topology: str = "random") -> G.WorkerGraph:
+    if n_workers == 2:
+        return G.pod_pair_graph()
+    if topology == "chain":
+        return G.chain_graph(n_workers)
+    if topology == "complete":
+        return G.complete_bipartite_graph(n_workers // 2,
+                                          n_workers - n_workers // 2)
+    return G.random_bipartite_graph(n_workers, p=0.4, seed=0)
+
+
+# -------------------------------------------------------------- batches --
+def token_batch_specs(cfg: ModelConfig, batch: int, seq: int,
+                      *, with_labels: bool) -> Dict[str, Any]:
+    """Abstract model inputs for one (batch, seq) slab."""
+    specs: Dict[str, Any] = {"tokens": _sds((batch, seq), jnp.int32)}
+    if with_labels:
+        specs["labels"] = _sds((batch, seq), jnp.int32)
+    if cfg.mrope_sections is not None:
+        specs["positions"] = _sds((batch, seq, 3), jnp.int32)
+    if cfg.vision_tokens:
+        specs["vision_embeds"] = _sds(
+            (batch, cfg.vision_tokens, cfg.d_model), jnp.bfloat16)
+    if cfg.is_encoder_decoder:
+        specs["frames"] = _sds(
+            (batch, cfg.source_positions, cfg.d_model), jnp.bfloat16)
+    return specs
+
+
+def _batch_shardings(specs, mesh, batch_axis):
+    def leaf(x):
+        axes = [None] * len(x.shape)
+        bsz = x.shape[0]
+        size = int(np.prod([mesh.shape[a] for a in (
+            batch_axis if isinstance(batch_axis, tuple) else (batch_axis,))]))
+        if bsz % max(size, 1) == 0:
+            axes[0] = batch_axis
+        return NamedSharding(mesh, PartitionSpec(*axes))
+    return jax.tree_util.tree_map(leaf, specs)
+
+
+def _worker_batch_shardings(specs, mesh, worker_axis, inner_axis):
+    """Leading axis = workers; second axis = per-worker batch."""
+    def leaf(x):
+        axes: list = [worker_axis] + [None] * (len(x.shape) - 1)
+        if inner_axis is not None and len(x.shape) > 1:
+            size = mesh.shape[inner_axis]
+            if x.shape[1] % max(size, 1) == 0:
+                axes[1] = inner_axis
+        return NamedSharding(mesh, PartitionSpec(*axes))
+    return jax.tree_util.tree_map(leaf, specs)
+
+
+# ------------------------------------------------------------ fsdp train --
+def make_fsdp_train_bundle(cfg: ModelConfig, shape: ShapeConfig, mesh, *,
+                           multi_pod: bool, name: str = "") -> StepBundle:
+    batch_axes = _batch_axes(multi_pod)
+    batch_axis = batch_axes if len(batch_axes) > 1 else batch_axes[0]
+    fsdp_axis = batch_axis
+    rules = SH.activation_rules(mesh, cfg, batch_axes=batch_axes)
+    acfg = AdamWConfig(lr=3e-4)
+
+    param_shapes = jax.eval_shape(
+        lambda: registry.init_params(cfg, jax.random.PRNGKey(0)))
+    p_shard = SH.params_shardings(param_shapes, mesh, cfg,
+                                  fsdp_axis=fsdp_axis)
+    opt_shapes = jax.eval_shape(lambda: adamw_init(param_shapes))
+    o_shard = AdamWState(mu=p_shard, nu=p_shard,
+                         count=NamedSharding(mesh, PartitionSpec()))
+
+    batch_specs = token_batch_specs(cfg, shape.global_batch, shape.seq_len,
+                                    with_labels=True)
+    b_shard = _batch_shardings(batch_specs, mesh, batch_axis)
+
+    def train_step(params, opt, batch):
+        with P.logical_sharding(mesh, rules):
+            (loss, metr), grads = jax.value_and_grad(
+                lambda p: registry.lm_loss(p, cfg, batch), has_aux=True
+            )(params)
+            new_params, new_opt = adamw_update(grads, opt, params, acfg)
+        metrics = {"loss": loss, **metr}
+        return new_params, new_opt, metrics
+
+    return StepBundle(
+        name=name or f"{cfg.name}:{shape.name}:fsdp",
+        fn=train_step,
+        in_shardings=(p_shard, o_shard, b_shard),
+        abstract_inputs=(param_shapes, opt_shapes, batch_specs),
+        mesh=mesh,
+        donate_argnums=(0, 1),
+    )
+
+
+# ------------------------------------------------------------ admm train --
+def make_admm_train_bundle(cfg: ModelConfig, shape: ShapeConfig, mesh, *,
+                           multi_pod: bool, arch: Optional[str] = None,
+                           ccfg: Optional[CC.ConsensusConfig] = None,
+                           topology: str = "random",
+                           name: str = "") -> StepBundle:
+    """The paper's technique as the production train step.
+
+    Single pod: 16 ADMM workers along the "data" axis (each worker a full
+    TP-sharded replica). Multi-pod: pods ARE the workers — the censored,
+    quantized exchanges ride exactly the slow inter-pod links.
+    """
+    worker_axis = "pod" if multi_pod else "data"
+    inner_axis = "data" if multi_pod else None   # per-worker batch sharding
+    fsdp_axis = "data" if multi_pod else None
+    n_workers = mesh.shape[worker_axis]
+    graph = worker_graph(n_workers, topology)
+    ccfg = ccfg or _consensus_cfg(arch or cfg.name, multi_pod)
+    rules = SH.activation_rules(mesh, cfg, batch_axes=(inner_axis,)
+                                if inner_axis else (), worker_mode=True)
+
+    # --- state: per-worker stacked params + ADMM auxiliaries --------------
+    param_shapes = jax.eval_shape(
+        lambda: registry.init_params(cfg, jax.random.PRNGKey(0)))
+    stacked_shapes = jax.tree_util.tree_map(
+        lambda x: _sds((n_workers,) + x.shape, x.dtype), param_shapes)
+    state_shapes = jax.eval_shape(
+        lambda t: CC.init_consensus_state(t, ccfg), stacked_shapes)
+
+    p_shard_stacked = SH.params_shardings(
+        stacked_shapes, mesh, cfg, worker_axis=worker_axis,
+        fsdp_axis=fsdp_axis)
+
+    def worker_vec(_):
+        return NamedSharding(mesh, PartitionSpec(worker_axis))
+
+    quant_shard = CC.TreeQuantState(
+        q_hat=p_shard_stacked,
+        range_prev=worker_vec(None), bits_prev=worker_vec(None),
+        delta_prev=worker_vec(None), initialized=worker_vec(None))
+    opt_shard = p_shard_stacked if ccfg.use_adam else ()
+    state_shard = CC.ConsensusState(
+        theta=p_shard_stacked, theta_hat=p_shard_stacked,
+        alpha=p_shard_stacked, quant=quant_shard,
+        opt_mu=opt_shard,
+        opt_nu=jax.tree_util.tree_map(lambda s: s, opt_shard),
+        k=NamedSharding(mesh, PartitionSpec()))
+
+    # --- per-worker batch --------------------------------------------------
+    assert shape.global_batch % n_workers == 0
+    per_worker = shape.global_batch // n_workers
+    inner = token_batch_specs(cfg, per_worker, shape.seq_len,
+                              with_labels=True)
+    batch_specs = jax.tree_util.tree_map(
+        lambda x: _sds((n_workers,) + x.shape, x.dtype), inner)
+    b_shard = _worker_batch_shardings(batch_specs, mesh, worker_axis,
+                                      inner_axis)
+    key_spec = _sds((2,), jnp.uint32)
+    key_shard = NamedSharding(mesh, PartitionSpec())
+
+    def grad_fn(theta, batch):
+        def one(p, b):
+            return jax.grad(
+                lambda pp: registry.lm_loss(pp, cfg, b)[0])(p)
+        return jax.vmap(one)(theta, batch)
+
+    def loss_fn(theta, batch):
+        def one(p, b):
+            return registry.lm_loss(p, cfg, b)[0]
+        return jnp.mean(jax.vmap(one)(theta, batch))
+
+    inner_step = CC.make_consensus_step(graph, ccfg, grad_fn, loss_fn)
+
+    def train_step(state, batch, key):
+        with P.logical_sharding(mesh, rules):
+            return inner_step(state, batch, key)
+
+    return StepBundle(
+        name=name or f"{cfg.name}:{shape.name}:admm",
+        fn=train_step,
+        in_shardings=(state_shard, b_shard, key_shard),
+        abstract_inputs=(state_shapes, batch_specs, key_spec),
+        mesh=mesh,
+        donate_argnums=(0,),
+    )
+
+
+# -------------------------------------------------------------- serving --
+def _serve_param_shardings(cfg, mesh, multi_pod: bool, arch: str):
+    fsdp = None
+    if arch in GIANT_ARCHS:           # weights cannot replicate per data slice
+        fsdp = ("pod", "data") if multi_pod else "data"
+    param_shapes = jax.eval_shape(
+        lambda: registry.init_params(cfg, jax.random.PRNGKey(0)))
+    return param_shapes, SH.params_shardings(param_shapes, mesh, cfg,
+                                             fsdp_axis=fsdp)
+
+
+def make_prefill_bundle(cfg: ModelConfig, shape: ShapeConfig, mesh, *,
+                        multi_pod: bool, arch: str = "",
+                        name: str = "") -> StepBundle:
+    batch_axes = _batch_axes(multi_pod)
+    batch_axis = batch_axes if len(batch_axes) > 1 else batch_axes[0]
+    rules = SH.activation_rules(mesh, cfg, batch_axes=batch_axes)
+    param_shapes, p_shard = _serve_param_shardings(cfg, mesh, multi_pod,
+                                                   arch or cfg.name)
+    cache_shapes = jax.eval_shape(
+        lambda: registry.init_cache(cfg, shape.global_batch, shape.seq_len))
+    c_shard = SH.cache_shardings(cache_shapes, mesh, cfg,
+                                 batch_axis=batch_axis)
+    batch_specs = token_batch_specs(cfg, shape.global_batch, shape.seq_len,
+                                    with_labels=False)
+    b_shard = _batch_shardings(batch_specs, mesh, batch_axis)
+
+    def prefill_step(params, cache, batch):
+        with P.logical_sharding(mesh, rules):
+            if cfg.is_encoder_decoder:
+                cache = registry.prefill_cross_cache(
+                    params, cfg, batch["frames"], cache)
+            logits, _, new_cache = registry.apply_model(
+                params, cfg, batch, caches=cache)
+            # serving returns only the last position's logits
+            return logits[:, -1, :], new_cache
+
+    return StepBundle(
+        name=name or f"{cfg.name}:{shape.name}:prefill",
+        fn=prefill_step,
+        in_shardings=(p_shard, c_shard, b_shard),
+        abstract_inputs=(param_shapes, cache_shapes, batch_specs),
+        mesh=mesh,
+        donate_argnums=(1,),
+    )
+
+
+def make_serve_bundle(cfg: ModelConfig, shape: ShapeConfig, mesh, *,
+                      multi_pod: bool, arch: str = "",
+                      long_context: bool = False,
+                      name: str = "") -> StepBundle:
+    """One decode step: a single new token against a seq_len KV state."""
+    batch_axes = _batch_axes(multi_pod)
+    batch_axis = batch_axes if len(batch_axes) > 1 else batch_axes[0]
+    rules = SH.activation_rules(mesh, cfg, batch_axes=batch_axes)
+    param_shapes, p_shard = _serve_param_shardings(cfg, mesh, multi_pod,
+                                                   arch or cfg.name)
+    window = cfg.long_context_window if long_context else None
+    cache_shapes = jax.eval_shape(
+        lambda: registry.init_cache(cfg, shape.global_batch, shape.seq_len,
+                                    window_override=window))
+    c_shard = SH.cache_shardings(cache_shapes, mesh, cfg,
+                                 batch_axis=batch_axis)
+
+    b = shape.global_batch
+    tok_spec = _sds((b, 1), jnp.int32)
+    pos_spec = _sds((b, 1, 3) if cfg.mrope_sections is not None else (b, 1),
+                    jnp.int32)
+    tok_shard = _batch_shardings(tok_spec, mesh, batch_axis)
+    pos_shard = _batch_shardings(pos_spec, mesh, batch_axis)
+
+    def serve_step(params, cache, tokens, positions):
+        with P.logical_sharding(mesh, rules):
+            logits, new_cache = registry.decode_step(
+                params, cfg, tokens, positions, cache,
+                window_override=window)
+            return logits[:, -1, :], new_cache
+
+    return StepBundle(
+        name=name or f"{cfg.name}:{shape.name}:serve",
+        fn=serve_step,
+        in_shardings=(p_shard, c_shard, tok_shard, pos_shard),
+        abstract_inputs=(param_shapes, cache_shapes, tok_spec, pos_spec),
+        mesh=mesh,
+        donate_argnums=(1,),
+    )
+
+
+# ------------------------------------------------------------- dispatch --
+def supports(arch: str, cfg: ModelConfig, shape: ShapeConfig) -> bool:
+    """long_500k is skipped only where DESIGN.md records the skip."""
+    if shape.name == "long_500k" and cfg.long_context == "skip":
+        return False
+    return True
+
+
+def make_bundle(arch: str, shape_name: str, mesh, *, multi_pod: bool,
+                cfg: Optional[ModelConfig] = None,
+                mode: Optional[str] = None) -> StepBundle:
+    """Bundle for one (architecture, input shape, mesh) combination."""
+    from repro.configs import base
+    cfg = cfg or base.get_config(arch)
+    shape = INPUT_SHAPES[shape_name]
+    if not supports(arch, cfg, shape):
+        raise ValueError(f"{arch} skips {shape_name} (policy: "
+                         f"{cfg.long_context}; see DESIGN.md)")
+    name = f"{arch}:{shape_name}:{'multi' if multi_pod else 'single'}"
+    if shape.kind == "train":
+        mode = mode or train_mode_for(arch, multi_pod)
+        if mode == "admm":
+            return make_admm_train_bundle(cfg, shape, mesh,
+                                          multi_pod=multi_pod, arch=arch,
+                                          name=name + ":admm")
+        return make_fsdp_train_bundle(cfg, shape, mesh, multi_pod=multi_pod,
+                                      name=name + ":fsdp")
+    if shape.kind == "prefill":
+        return make_prefill_bundle(cfg, shape, mesh, multi_pod=multi_pod,
+                                   arch=arch, name=name)
+    return make_serve_bundle(cfg, shape, mesh, multi_pod=multi_pod,
+                             arch=arch,
+                             long_context=(shape.name == "long_500k"),
+                             name=name)

@@ -1,0 +1,51 @@
+"""Censoring schedule + mask semantics (paper Sec. 4)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.censoring import (CensorConfig, apply_censoring, censor_mask,
+                                  threshold)
+
+
+def test_threshold_geometric_decay():
+    cfg = CensorConfig(tau0=2.0, xi=0.5)
+    ks = jnp.arange(5.0)
+    np.testing.assert_allclose(np.asarray(threshold(cfg, ks)),
+                               2.0 * 0.5 ** np.arange(5), rtol=1e-6)
+
+
+def test_mask_transmits_large_updates_only():
+    cfg = CensorConfig(tau0=1.0, xi=0.5)
+    last = jnp.zeros((3, 4))
+    cand = jnp.stack([jnp.full((4,), 1.0),     # norm 2.0 >= tau
+                      jnp.full((4,), 0.01),    # norm .02 < tau
+                      jnp.zeros((4,))])
+    k = jnp.asarray(1.0)                       # tau^1 = 0.5
+    mask = censor_mask(last, cand, cfg, k)
+    assert mask.tolist() == [1.0, 0.0, 0.0]
+    out = apply_censoring(last, cand, mask)
+    np.testing.assert_allclose(np.asarray(out[0]), 1.0)
+    np.testing.assert_allclose(np.asarray(out[1]), 0.0)
+
+
+def test_disabled_censoring_always_transmits():
+    cfg = CensorConfig(tau0=0.0)
+    mask = censor_mask(jnp.zeros((5, 2)), jnp.zeros((5, 2)), cfg,
+                       jnp.asarray(3.0))
+    assert mask.tolist() == [1.0] * 5
+
+
+def test_late_iterations_transmit_small_updates():
+    """tau^k -> 0, so any fixed nonzero update eventually transmits."""
+    cfg = CensorConfig(tau0=10.0, xi=0.5)
+    last = jnp.zeros((1, 2))
+    cand = jnp.full((1, 2), 0.01)
+    assert float(censor_mask(last, cand, cfg, jnp.asarray(1.0))[0]) == 0.0
+    assert float(censor_mask(last, cand, cfg, jnp.asarray(20.0))[0]) == 1.0
+
+
+def test_invalid_configs_rejected():
+    with pytest.raises(AssertionError):
+        CensorConfig(tau0=-1.0)
+    with pytest.raises(AssertionError):
+        CensorConfig(tau0=1.0, xi=1.5)

@@ -1,0 +1,52 @@
+"""npz checkpointer roundtrip + pruning + validation."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import npz as ckpt
+
+
+def _tree(seed=0):
+    k = jax.random.PRNGKey(seed)
+    return {"w": jax.random.normal(k, (4, 3)),
+            "nested": {"b": jnp.arange(5, dtype=jnp.int32)}}
+
+
+def test_roundtrip(tmp_path):
+    t = _tree()
+    ckpt.save(tmp_path, 10, t)
+    restored, step = ckpt.restore(tmp_path, t)
+    assert step == 10
+    np.testing.assert_array_equal(np.asarray(t["w"]),
+                                  np.asarray(restored["w"]))
+    np.testing.assert_array_equal(np.asarray(t["nested"]["b"]),
+                                  np.asarray(restored["nested"]["b"]))
+
+
+def test_latest_and_prune(tmp_path):
+    t = _tree()
+    for s in (1, 2, 3, 4, 5):
+        ckpt.save(tmp_path, s, t, keep=3)
+    assert ckpt.latest_step(tmp_path) == 5
+    assert sorted(ckpt.all_steps(tmp_path)) == [3, 4, 5]
+
+
+def test_restore_specific_step(tmp_path):
+    ckpt.save(tmp_path, 1, _tree(0))
+    ckpt.save(tmp_path, 2, _tree(1))
+    r1, _ = ckpt.restore(tmp_path, _tree(), step=1)
+    r2, _ = ckpt.restore(tmp_path, _tree(), step=2)
+    assert not np.array_equal(np.asarray(r1["w"]), np.asarray(r2["w"]))
+
+
+def test_shape_mismatch_raises(tmp_path):
+    ckpt.save(tmp_path, 1, _tree())
+    bad = {"w": jnp.zeros((2, 2)), "nested": {"b": jnp.zeros(5, jnp.int32)}}
+    with pytest.raises(ValueError):
+        ckpt.restore(tmp_path, bad)
+
+
+def test_missing_dir_raises(tmp_path):
+    with pytest.raises(FileNotFoundError):
+        ckpt.restore(tmp_path / "nope", _tree())

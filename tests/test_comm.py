@@ -1,0 +1,49 @@
+"""Communication accounting (Sec. 7 energy model)."""
+import numpy as np
+
+from repro.core.comm import CommLog, EnergyModel, build_comm_log
+from repro.core.graph import random_bipartite_graph
+
+
+def test_bandwidth_split():
+    m = EnergyModel()
+    assert m.worker_bandwidth(24, 0.5) == 2e6 / 12   # GGADMM: half transmit
+    assert m.worker_bandwidth(24, 1.0) == 2e6 / 24   # C-ADMM: all transmit
+
+
+def test_energy_monotone_in_payload_and_distance():
+    m = EnergyModel()
+    bw = m.worker_bandwidth(24, 0.5)
+    e_small = m.energy_per_transmission(np.asarray([2 * 50.0]),
+                                        np.asarray([50.0]), bw)   # 2-bit
+    e_big = m.energy_per_transmission(np.asarray([32 * 50.0]),
+                                      np.asarray([50.0]), bw)     # 32-bit
+    e_far = m.energy_per_transmission(np.asarray([2 * 50.0]),
+                                      np.asarray([100.0]), bw)
+    assert e_big > e_small
+    assert e_far > e_small
+    # Shannon exponent: quantized payloads save energy super-linearly
+    assert e_big / e_small > 16.0
+
+
+def test_comm_log_cumulative():
+    g = random_bipartite_graph(8, 0.5, seed=0)
+    k, n = 5, 8
+    tx = np.ones((k, n))
+    tx[2] = 0.0                        # a fully censored round
+    payload = np.full((k, n), 100.0)
+    log = build_comm_log(tx, payload, g)
+    assert log.transmissions.tolist() == [8, 8, 0, 8, 8]
+    np.testing.assert_allclose(log.cumulative_rounds,
+                               np.cumsum([8, 8, 0, 8, 8]))
+    assert log.bits[2] == 0.0
+    assert log.energy[2] == 0.0
+    assert (np.diff(log.cumulative_energy) >= 0).all()
+
+
+def test_worst_link_distance_symmetry():
+    g = random_bipartite_graph(10, 0.4, seed=3)
+    m = EnergyModel(seed=1)
+    d = m.worst_link_distance(g)
+    assert d.shape == (10,)
+    assert (d > 0).all()

@@ -1,0 +1,132 @@
+"""Pytree CQ-GGADMM (core/consensus.py): tree utils + convergence on a
+quadratic consensus problem with a known optimum."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import consensus as C
+from repro.core import graph as G
+from repro.core.censoring import CensorConfig
+from repro.core.quantization import QuantConfig
+
+N_WORKERS = 6
+
+
+def _tree(n=N_WORKERS):
+    key = jax.random.PRNGKey(0)
+    return {"a": jax.random.normal(key, (n, 3, 4)),
+            "b": {"c": jax.random.normal(jax.random.fold_in(key, 1),
+                                         (n, 5))}}
+
+
+def test_tree_utils():
+    t = _tree()
+    d = C.tree_dim(t)
+    assert d == 3 * 4 + 5
+    sq = C.tree_worker_sqnorm(t)
+    flat = np.concatenate([np.asarray(t["a"]).reshape(N_WORKERS, -1),
+                           np.asarray(t["b"]["c"])], axis=1)
+    np.testing.assert_allclose(np.asarray(sq), (flat ** 2).sum(1),
+                               rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(C.tree_worker_maxabs(t)),
+                               np.abs(flat).max(1), rtol=1e-6)
+
+
+def test_tree_mix_is_adjacency_matmul():
+    g = G.random_bipartite_graph(N_WORKERS, 0.5, seed=0)
+    t = _tree()
+    mixed = C.tree_mix(jnp.asarray(g.adjacency), t)
+    flat = np.asarray(t["a"]).reshape(N_WORKERS, -1)
+    np.testing.assert_allclose(
+        np.asarray(mixed["a"]).reshape(N_WORKERS, -1),
+        g.adjacency @ flat, rtol=1e-5)
+
+
+def test_tree_quantize_error_bound():
+    t = _tree()
+    state = C.TreeQuantState.create(t, b0=4)
+    cfg = QuantConfig(b0=4, omega=0.99)
+    new_state, q_hat, bits, payload = C.tree_quantize_step(
+        state, t, jax.random.PRNGKey(0), cfg)
+    err = jax.tree_util.tree_map(lambda a, b: jnp.abs(a - b), t, q_hat)
+    max_err = float(C.tree_worker_maxabs(err).max())
+    delta = float(new_state.delta_prev.max())
+    assert max_err <= delta + 1e-6
+    d = C.tree_dim(t)
+    np.testing.assert_allclose(np.asarray(payload),
+                               np.asarray(bits) * d + cfg.b_overhead)
+
+
+def _quadratic_problem(n=N_WORKERS, seed=0):
+    """f_n(theta) = 0.5 ||theta - c_n||^2 over a pytree; optimum = mean c."""
+    key = jax.random.PRNGKey(seed)
+    targets = {"w": jax.random.normal(key, (n, 4, 4)),
+               "b": jax.random.normal(jax.random.fold_in(key, 1), (n, 6))}
+
+    def grad_fn(theta, batch):
+        del batch
+        return jax.tree_util.tree_map(lambda th, c: th - c, theta, targets)
+
+    opt = jax.tree_util.tree_map(lambda c: c.mean(0), targets)
+    return targets, grad_fn, opt
+
+
+@pytest.mark.parametrize("variant", ["plain", "censored", "cq"])
+def test_consensus_converges_to_mean(variant):
+    targets, grad_fn, opt = _quadratic_problem()
+    g = G.random_bipartite_graph(N_WORKERS, 0.5, seed=0)
+    ccfg = C.ConsensusConfig(
+        rho=0.5,
+        censor=CensorConfig(tau0=1.0, xi=0.9) if variant != "plain"
+        else CensorConfig(),
+        quantize=QuantConfig(b0=6, omega=0.99) if variant == "cq" else None,
+        local_steps=10, local_lr=0.3)
+    theta0 = jax.tree_util.tree_map(jnp.zeros_like, targets)
+    state = C.init_consensus_state(theta0, ccfg)
+    step = jax.jit(C.make_consensus_step(g, ccfg, grad_fn))
+    for i in range(150):
+        state, m = step(state, None, jax.random.PRNGKey(i))
+    err = jax.tree_util.tree_map(
+        lambda th, o: th - o[None], state.theta, opt)
+    final = float(C.tree_worker_sqnorm(err).sum())
+    scale = float(C.tree_worker_sqnorm(
+        jax.tree_util.tree_map(lambda o: o[None], opt)).sum())
+    assert final < 2e-2 * max(scale, 1.0), final
+    assert float(m["consensus_err"]) < 1e-2 * max(scale, 1.0)
+
+
+def test_censoring_skips_transmissions_tree():
+    targets, grad_fn, _ = _quadratic_problem()
+    g = G.random_bipartite_graph(N_WORKERS, 0.5, seed=0)
+    ccfg = C.ConsensusConfig(rho=0.5, censor=CensorConfig(tau0=50.0, xi=0.9),
+                             local_steps=5, local_lr=0.3)
+    theta0 = jax.tree_util.tree_map(jnp.zeros_like, targets)
+    state = C.init_consensus_state(theta0, ccfg)
+    step = jax.jit(C.make_consensus_step(g, ccfg, grad_fn))
+    txs = []
+    for i in range(30):
+        state, m = step(state, None, jax.random.PRNGKey(i))
+        txs.append(float(m["tx_mask"].sum()))
+    assert sum(txs) < 30 * N_WORKERS      # some rounds censored
+
+
+def test_sgd_local_solver_and_bf16_hats():
+    targets, grad_fn, opt = _quadratic_problem()
+    g = G.random_bipartite_graph(N_WORKERS, 0.5, seed=0)
+    ccfg = C.ConsensusConfig(rho=0.5, local_steps=10, local_lr=0.3,
+                             use_adam=False, hat_dtype="bfloat16",
+                             quantize=QuantConfig(b0=8, omega=0.995))
+    theta0 = jax.tree_util.tree_map(jnp.zeros_like, targets)
+    state = C.init_consensus_state(theta0, ccfg)
+    assert state.opt_mu == ()
+    assert state.theta_hat["b"].dtype == jnp.bfloat16
+    step = jax.jit(C.make_consensus_step(g, ccfg, grad_fn))
+    for i in range(100):
+        state, m = step(state, None, jax.random.PRNGKey(i))
+    err = jax.tree_util.tree_map(
+        lambda th, o: th - o[None], state.theta, opt)
+    final = float(C.tree_worker_sqnorm(err).sum())
+    assert final < 0.1, final      # bf16 replicas: looser tolerance

@@ -1,0 +1,85 @@
+"""Worker-graph properties (paper Assumption 1 + Appendix D identities)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import graph as G
+
+
+def test_chain_graph_matches_gadmm():
+    g = G.chain_graph(6)
+    assert g.num_edges == 5
+    assert g.head_mask.tolist() == [True, False] * 3
+    # every edge connects adjacent workers
+    for h, t in g.edges:
+        assert abs(h - t) == 1
+
+
+def test_complete_bipartite():
+    g = G.complete_bipartite_graph(3, 4)
+    assert g.num_edges == 12
+    assert g.degrees[:3].tolist() == [4.0] * 3
+    assert g.degrees[3:].tolist() == [3.0] * 4
+
+
+def test_star_graph():
+    g = G.star_graph(5)
+    assert g.degrees[0] == 4
+    assert (g.degrees[1:] == 1).all()
+
+
+def test_pod_pair():
+    g = G.pod_pair_graph()
+    assert g.n == 2 and g.num_edges == 1
+
+
+@settings(max_examples=25, deadline=None)
+@given(n=st.integers(4, 40), p=st.floats(0.05, 0.9),
+       seed=st.integers(0, 10_000))
+def test_random_graph_bipartite_connected(n, p, seed):
+    g = G.random_bipartite_graph(n, p, seed=seed)
+    g.validate()          # asserts bipartite + connected + identities
+    assert g.n == n
+    assert G.is_connected(g.adjacency)
+
+
+@settings(max_examples=15, deadline=None)
+@given(n=st.integers(4, 24), seed=st.integers(0, 100))
+def test_incidence_identities(n, seed):
+    """D - A = M- M-^T and A = (M+ M+^T - M- M-^T)/2 (Appendix D)."""
+    g = G.random_bipartite_graph(n, 0.4, seed=seed)
+    m_minus, m_plus = g.signed_incidence, g.unsigned_incidence
+    np.testing.assert_allclose(g.degree_matrix - g.adjacency,
+                               m_minus @ m_minus.T, atol=1e-5)
+    np.testing.assert_allclose(
+        g.adjacency, 0.5 * (m_plus @ m_plus.T - m_minus @ m_minus.T),
+        atol=1e-5)
+    c = g.c_matrix
+    np.testing.assert_allclose(g.adjacency, c + c.T, atol=1e-5)
+    # C only has head-row -> tail-col entries (Eq. 115)
+    assert c[g.tail_mask, :].sum() == 0
+    assert c[:, g.head_mask].sum() == 0
+
+
+def test_connectivity_ratio():
+    g = G.random_bipartite_graph(20, 0.3, seed=1)
+    # generator targets round(p * N(N-1)/2) edges but at least a spanning
+    # tree and at most the bipartite maximum
+    assert g.num_edges >= g.n - 1
+    assert 0 < g.connectivity_ratio() <= 1.0
+
+
+def test_density_affects_edges():
+    sparse = G.random_bipartite_graph(18, 0.2, seed=0)
+    dense = G.random_bipartite_graph(18, 0.4, seed=0)
+    assert dense.num_edges > sparse.num_edges
+
+
+def test_nonbipartite_rejected():
+    g = G.chain_graph(4)
+    bad = g.adjacency.copy()
+    bad[0, 2] = bad[2, 0] = 1.0   # head-head edge
+    with pytest.raises(AssertionError):
+        G.WorkerGraph(n=4, edges=g.edges, head_mask=g.head_mask,
+                      adjacency=bad,
+                      degrees=bad.sum(1).astype(np.float32)).validate()

@@ -1,0 +1,79 @@
+"""Loop-aware HLO cost walker: synthetic-text cases + a compiled program."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.runtime.hlo_analysis import analyze_hlo, parse_module
+
+SYNTH = """\
+HloModule jit_g, entry_computation_layout={(f32[8,8])->f32[]}
+
+%body (p: (s32[], f32[8,8])) -> (s32[], f32[8,8]) {
+  %p = (s32[], f32[8,8]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %x = f32[8,8] get-tuple-element(%p), index=1
+  %dot = f32[8,8] dot(%x, %x), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %ar = f32[8,8] all-reduce(%dot), replica_groups={}
+  ROOT %t = (s32[], f32[8,8]) tuple(%i, %ar)
+}
+
+%cond (p.1: (s32[], f32[8,8])) -> pred[] {
+  %p.1 = (s32[], f32[8,8]) parameter(0)
+  %i.1 = s32[] get-tuple-element(%p.1), index=0
+  %c = s32[] constant(5)
+  ROOT %lt = pred[] compare(%i.1, %c), direction=LT
+}
+
+ENTRY %main (arg: f32[8,8]) -> f32[] {
+  %arg = f32[8,8] parameter(0)
+  %zero = s32[] constant(0)
+  %init = (s32[], f32[8,8]) tuple(%zero, %arg)
+  %while = (s32[], f32[8,8]) while(%init), condition=%cond, body=%body, backend_config={"known_trip_count":{"n":"5"}}
+  %out = f32[8,8] get-tuple-element(%while), index=1
+  %red = f32[] reduce(%out, %zero), dimensions={0,1}, to_apply=%cond
+  ROOT %ag = f32[] all-gather(%red), replica_groups={}
+}
+"""
+
+
+def test_synthetic_while_multiplier():
+    cost = analyze_hlo(SYNTH)
+    # dot: 2*8*8*8 flops, executed 5 times
+    assert cost.flops == 5 * 2 * 8 * 8 * 8
+    # all-reduce operand 8*8*4 bytes x 5 trips + all-gather 4 bytes
+    assert cost.coll_bytes == 5 * 256 + 4
+    assert cost.coll_breakdown["all-reduce"] == 5 * 256
+    assert cost.coll_breakdown["all-gather"] == 4
+
+
+def test_parse_module_structure():
+    comps, entry = parse_module(SYNTH)
+    assert entry == "main"
+    assert set(comps) == {"body", "cond", "main"}
+    # to_apply target marked as fusion body (no traffic double count)
+    assert comps["cond"].is_fusion_body
+
+
+def test_compiled_scan_flops_exact():
+    """End-to-end: walker matches analytic flops of a scanned matmul."""
+    w = jnp.ones((32, 32))
+
+    def g(x):
+        def body(c, _):
+            return c @ w, None
+        c, _ = jax.lax.scan(body, x, None, length=9)
+        return c
+
+    compiled = jax.jit(g).lower(
+        jax.ShapeDtypeStruct((32, 32), jnp.float32)).compile()
+    cost = analyze_hlo(compiled.as_text())
+    assert cost.flops == 9 * 2 * 32 ** 3
+    assert cost.coll_bytes == 0
+
+
+def test_unknown_trip_count_warns():
+    txt = SYNTH.replace(', backend_config={"known_trip_count":{"n":"5"}}',
+                        "")
+    cost = analyze_hlo(txt)
+    assert cost.flops == 2 * 8 * 8 * 8       # counted once
+    assert any("unknown trip count" in w for w in cost.warnings)

@@ -1,0 +1,129 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps, bit-exactness."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ref
+from repro.kernels.bipartite_mix import bipartite_mix
+from repro.kernels.stoch_quant import stoch_quantize
+
+SHAPES = [(1, 1), (3, 7), (8, 512), (5, 513), (24, 50), (16, 2048),
+          (9, 1023)]
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_stoch_quant_matches_ref(shape, dtype):
+    n, d = shape
+    key = jax.random.PRNGKey(hash(shape) % 2**31)
+    theta = (10 * jax.random.normal(key, (n, d))).astype(dtype)
+    qprev = (10 * jax.random.normal(jax.random.fold_in(key, 1),
+                                    (n, d))).astype(dtype)
+    unif = jax.random.uniform(jax.random.fold_in(key, 2), (n, d),
+                              jnp.float32).astype(dtype)
+    qrange = jnp.max(jnp.abs((theta - qprev).astype(jnp.float32)), axis=-1)
+    bits = 3.0
+    delta = (2.0 * qrange / (2 ** bits - 1)).astype(jnp.float32)
+    got = stoch_quantize(theta, qprev, unif, delta, qrange, interpret=True)
+    want = ref.stoch_quantize_ref(theta, qprev, unif, delta, qrange)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_stoch_quant_bit_exact_f32():
+    """identical uniforms => bit-identical to the oracle in f32."""
+    n, d = 8, 640
+    key = jax.random.PRNGKey(0)
+    theta = 5 * jax.random.normal(key, (n, d))
+    qprev = jnp.zeros((n, d))
+    unif = jax.random.uniform(jax.random.fold_in(key, 1), (n, d))
+    qrange = jnp.max(jnp.abs(theta), axis=-1)
+    delta = 2.0 * qrange / 15.0
+    got = np.asarray(stoch_quantize(theta, qprev, unif, delta, qrange,
+                                    interpret=True))
+    want = np.asarray(ref.stoch_quantize_ref(theta, qprev, unif, delta,
+                                             qrange))
+    np.testing.assert_array_equal(got, want)
+
+
+@pytest.mark.parametrize("shape", [(2, 2, 3), (8, 8, 512), (24, 24, 50),
+                                   (16, 16, 130), (5, 5, 1024)])
+def test_bipartite_mix_matches_ref(shape):
+    n, _, d = shape
+    key = jax.random.PRNGKey(n * d)
+    adj = (jax.random.uniform(key, (n, n)) > 0.5).astype(jnp.float32)
+    adj = jnp.triu(adj, 1)
+    adj = adj + adj.T
+    v = jax.random.normal(jax.random.fold_in(key, 1), (n, d))
+    got = bipartite_mix(adj, v, interpret=True)
+    want = ref.bipartite_mix_ref(adj, v)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(n=st.integers(1, 12), d=st.integers(1, 300), seed=st.integers(0, 99))
+def test_bipartite_mix_property(n, d, seed):
+    key = jax.random.PRNGKey(seed)
+    adj = (jax.random.uniform(key, (n, n)) > 0.4).astype(jnp.float32)
+    v = jax.random.normal(jax.random.fold_in(key, 1), (n, d))
+    got = bipartite_mix(adj, v, interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(adj @ v),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_quant_kernel_used_inside_step():
+    """quantize_step(use_kernel=True) equals the jnp path bit-for-bit."""
+    from repro.core.quantization import QuantConfig, QuantizerState, \
+        quantize_step
+    n, d = 6, 700
+    key = jax.random.PRNGKey(3)
+    theta = jax.random.normal(key, (n, d))
+    state = QuantizerState.create(n, d, b0=3)
+    cfg = QuantConfig(b0=3, omega=0.95)
+    s1, q1, b1, p1 = quantize_step(state, theta, jax.random.PRNGKey(7), cfg,
+                                   use_kernel=False)
+    s2, q2, b2, p2 = quantize_step(state, theta, jax.random.PRNGKey(7), cfg,
+                                   use_kernel=True)
+    np.testing.assert_array_equal(np.asarray(q1), np.asarray(q2))
+    np.testing.assert_array_equal(np.asarray(b1), np.asarray(b2))
+
+
+@pytest.mark.parametrize("shape", [(3, 37, 2, 16), (1, 5, 1, 8),
+                                   (8, 64, 4, 32)])
+def test_slstm_cell_matches_ref(shape):
+    """Fused sLSTM cell kernel vs the sequential-scan oracle."""
+    from repro.kernels.slstm_cell import slstm_cell
+    b, s, h, dh = shape
+    key = jax.random.PRNGKey(b * s)
+    wx = 0.5 * jax.random.normal(key, (b, s, h, 4 * dh))
+    r_w = jax.random.normal(jax.random.fold_in(key, 1),
+                            (h, dh, 4 * dh)) / jnp.sqrt(dh)
+    fb = jnp.full((h, dh), 3.0)
+    c0 = n0 = h0 = jnp.zeros((b, h, dh))
+    m0 = jnp.full((b, h, dh), -1e30)
+    hs_k, st_k = slstm_cell(wx, r_w, fb, c0, n0, m0, h0, block_b=2,
+                            chunk_s=16, interpret=True)
+    hs_r, st_r = ref.slstm_cell_ref(wx, r_w, fb, c0, n0, m0, h0)
+    np.testing.assert_allclose(np.asarray(hs_k), np.asarray(hs_r),
+                               rtol=1e-5, atol=1e-5)
+    for a, b_ in zip(st_k, st_r):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b_),
+                                   rtol=1e-4, atol=1e-5)
+
+
+def test_slstm_model_kernel_path():
+    """slstm_apply(use_kernel=True) equals the scan path."""
+    from repro.configs import base
+    from repro.models import xlstm
+    cfg = base.get_smoke_config("xlstm-125m")
+    params = xlstm.slstm_init(jax.random.PRNGKey(0), cfg)
+    x = 0.3 * jax.random.normal(jax.random.PRNGKey(1), (2, 40, cfg.d_model))
+    a, _ = xlstm.slstm_apply(params, cfg, x, use_kernel=True)
+    b, _ = xlstm.slstm_apply(params, cfg, x, use_kernel=False)
+    np.testing.assert_allclose(np.asarray(a, np.float32),
+                               np.asarray(b, np.float32),
+                               rtol=1e-4, atol=1e-5)

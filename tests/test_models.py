@@ -1,0 +1,159 @@
+"""Per-architecture smoke tests: reduced configs, one forward + one train
+step on CPU, shape and NaN checks, and prefill/decode cache consistency."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import base
+from repro.data.lm import model_batch
+from repro.models import registry
+from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update
+
+ARCHS = base.list_architectures()
+B, S = 2, 16
+
+
+def _batch(cfg, key=0):
+    toks = jax.random.randint(jax.random.PRNGKey(key), (B, S), 0,
+                              cfg.vocab_size).astype(np.int32)
+    return model_batch(cfg, {"tokens": np.asarray(toks),
+                             "labels": np.asarray(toks)},
+                       key=jax.random.PRNGKey(key + 1))
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_forward_shapes_and_nans(arch):
+    cfg = base.get_smoke_config(arch)
+    assert cfg.num_layers <= 2 and cfg.d_model <= 512
+    if cfg.num_experts:
+        assert cfg.num_experts <= 4
+    params = registry.init_params(cfg, jax.random.PRNGKey(0))
+    batch = _batch(cfg)
+    logits, aux, _ = registry.apply_model(params, cfg, batch)
+    assert logits.shape == (B, S, cfg.vocab_size)
+    assert not bool(jnp.isnan(logits).any())
+    assert np.isfinite(float(aux))
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_train_step(arch):
+    """One AdamW step must run and produce a finite, changed loss."""
+    cfg = base.get_smoke_config(arch)
+    params = registry.init_params(cfg, jax.random.PRNGKey(0))
+    opt = adamw_init(params)
+    batch = _batch(cfg)
+
+    @jax.jit
+    def step(p, o):
+        (loss, _), grads = jax.value_and_grad(
+            lambda pp: registry.lm_loss(pp, cfg, batch),
+            has_aux=True)(p)
+        p2, o2 = adamw_update(grads, o, p, AdamWConfig(lr=1e-2))
+        return p2, o2, loss
+
+    params1, opt1, loss0 = step(params, opt)
+    _, _, loss1 = step(params1, opt1)
+    assert np.isfinite(float(loss0)) and np.isfinite(float(loss1))
+    assert float(loss1) != float(loss0)
+    assert float(loss1) < float(loss0) + 1.0   # no blow-up
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_prefill_decode_consistency(arch):
+    """Greedy logits from (prefill + cached decode) match the uncached full
+    forward at the same position (bf16-tolerant)."""
+    cfg = base.get_smoke_config(arch)
+    params = registry.init_params(cfg, jax.random.PRNGKey(0))
+    batch = _batch(cfg)
+    # text-only VLM mode: the vision stub occupies the leading S slots in
+    # the smoke config, and cached decode of a vision slot is undefined
+    batch.pop("vision_embeds", None)
+    tokens = batch["tokens"]
+
+    # uncached full forward
+    full_logits, _, _ = registry.apply_model(params, cfg, batch)
+
+    # prefill S-1 tokens, decode the last one
+    cache = registry.init_cache(cfg, B, S)
+    prefill = dict(batch)
+    prefill["tokens"] = tokens[:, : S - 1]
+    if "positions" in batch:
+        prefill["positions"] = batch["positions"][:, : S - 1]
+    if cfg.is_encoder_decoder:
+        cache = registry.prefill_cross_cache(params, cfg, batch["frames"],
+                                             cache)
+        prefill.pop("frames", None)
+    if cfg.vision_tokens:
+        # vision stub occupies the leading slots; keep it for the prefill
+        pass
+    _, _, cache = registry.apply_model(params, cfg, prefill, caches=cache)
+
+    last_tok = tokens[:, S - 1:]
+    if cfg.mrope_sections is not None:
+        pos = jnp.full((B, 1, 3), S - 1, jnp.int32)
+    else:
+        pos = jnp.full((B, 1), S - 1, jnp.int32)
+    step_logits, _ = registry.decode_step(params, cfg, last_tok, pos, cache)
+
+    want = np.asarray(full_logits[:, -1, :], np.float32)
+    got = np.asarray(step_logits[:, -1, :], np.float32)
+    if cfg.num_experts:
+        # MoE: the expert-capacity truncation depends on the token count,
+        # so prefill(S-1)+decode(1) routes (and drops) differently from the
+        # full S forward — logits match only in rank statistics.
+        corr = np.corrcoef(got.reshape(-1), want.reshape(-1))[0, 1]
+        assert corr > 0.7, corr
+    else:
+        # bf16 activations + chunked-vs-recurrent reordering => loose tol
+        np.testing.assert_allclose(got, want, rtol=0.15, atol=0.15)
+    agree = (got.argmax(-1) == want.argmax(-1)).mean()
+    assert agree >= 0.5
+
+
+def test_count_params_moe_active():
+    cfg = base.get_smoke_config("olmoe-1b-7b")
+    total = registry.count_params(cfg)
+    active = registry.count_params(cfg, active_only=True)
+    assert active < total
+
+
+def test_shared_attn_weights_are_shared():
+    """zamba2: the shared block's params appear once in the tree."""
+    cfg = base.get_smoke_config("zamba2-7b")
+    params = registry.init_params(cfg, jax.random.PRNGKey(0))
+    assert "shared" in params["stack"]
+
+
+def test_long_context_window_override():
+    cfg = base.get_smoke_config("tinyllama-1.1b")
+    params = registry.init_params(cfg, jax.random.PRNGKey(0))
+    batch = _batch(cfg)
+    a, _, _ = registry.apply_model(params, cfg, batch)
+    b, _, _ = registry.apply_model(params, cfg, batch, window_override=4)
+    # a window of 4 genuinely changes attention output
+    assert not np.allclose(np.asarray(a, np.float32),
+                           np.asarray(b, np.float32))
+
+
+def test_mlstm_chunked_matches_sequential():
+    """The chunkwise-parallel mLSTM (§Perf P3) is exact vs the per-token
+    scan, including the carried (C, n, m) state."""
+    import numpy as np
+    from repro.models import xlstm
+    cfg = base.get_smoke_config("xlstm-125m")
+    key = jax.random.PRNGKey(0)
+    params = xlstm.mlstm_init(key, cfg)
+    x = 0.5 * jax.random.normal(jax.random.fold_in(key, 1),
+                                (2, 70, cfg.d_model))
+    cache = xlstm.mlstm_cache(cfg, 2)
+    oc, sc = xlstm.mlstm_apply(params, cfg, x, cache=cache,
+                               use_chunked=True)
+    os_, ss = xlstm.mlstm_apply(params, cfg, x, cache=cache,
+                                use_chunked=False)
+    np.testing.assert_allclose(np.asarray(oc, np.float32),
+                               np.asarray(os_, np.float32),
+                               rtol=1e-4, atol=1e-5)
+    for k in ("c", "n", "m"):
+        np.testing.assert_allclose(np.asarray(sc[k]), np.asarray(ss[k]),
+                                   rtol=1e-4, atol=1e-5)

@@ -1,0 +1,114 @@
+"""Stochastic quantizer properties (paper Sec. 5, Eqs. 14-20 + (32))."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.quantization import (QuantConfig, QuantizerState,
+                                     quantize_step, required_bits,
+                                     stochastic_round)
+
+
+def _state(n, d, b0=2):
+    return QuantizerState.create(n, d, b0=b0)
+
+
+def test_stochastic_round_unbiased():
+    c = jnp.full((20_000,), 3.3)
+    u = jax.random.uniform(jax.random.PRNGKey(0), c.shape)
+    q = stochastic_round(c, u)
+    assert set(np.unique(np.asarray(q))) <= {3.0, 4.0}
+    np.testing.assert_allclose(float(q.mean()), 3.3, atol=0.01)
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(1, 6), d=st.integers(1, 64), b0=st.integers(1, 8),
+       seed=st.integers(0, 1000))
+def test_error_bounded_by_step(n, d, b0, seed):
+    """|Q̂ - theta| <= Δ per element => ||e||^2 <= d Δ^2 (paper Eq. 32)."""
+    key = jax.random.PRNGKey(seed)
+    theta = 10.0 * jax.random.normal(key, (n, d))
+    state = _state(n, d, b0)
+    cfg = QuantConfig(b0=b0, omega=0.99)
+    new_state, q_hat, bits, payload = quantize_step(state, theta,
+                                                    jax.random.fold_in(
+                                                        key, 1), cfg)
+    delta = np.asarray(new_state.delta_prev)
+    err = np.abs(np.asarray(theta - q_hat))
+    assert (err <= delta[:, None] + 1e-4 * np.abs(np.asarray(theta)).max()
+            ).all()
+
+
+def test_quantization_unbiased_in_expectation():
+    n, d = 1, 8
+    theta = jnp.asarray([[0.13, -0.7, 2.4, -3.3, 0.0, 1.01, -0.49, 5.0]])
+    state = _state(n, d, b0=2)
+    cfg = QuantConfig(b0=2, omega=0.99)
+    reps = 3000
+    acc = np.zeros((n, d))
+    for i in range(reps):
+        _, q_hat, _, _ = quantize_step(state, theta,
+                                       jax.random.PRNGKey(i), cfg)
+        acc += np.asarray(q_hat)
+    mean_err = acc / reps - np.asarray(theta)
+    # E[e] = 0 (Eq. 16/17); tolerance ~ Delta/sqrt(reps)
+    delta = 2 * 5.0 / (2 ** 2 - 1)
+    assert np.abs(mean_err).max() < 4 * delta / np.sqrt(reps) + 1e-3
+
+
+def test_bit_growth_enforces_shrinking_step():
+    """Δ_k <= ω Δ_{k-1} whenever a transmission happens (Eq. 18)."""
+    key = jax.random.PRNGKey(0)
+    n, d = 4, 32
+    cfg = QuantConfig(b0=2, omega=0.9, b_max=16)
+    state = _state(n, d, cfg.b0)
+    theta = jax.random.normal(key, (n, d))
+    deltas = []
+    for k in range(12):
+        theta = theta + 0.5 * jax.random.normal(jax.random.fold_in(key, k),
+                                                (n, d))
+        state, _, bits, _ = quantize_step(state, theta,
+                                          jax.random.fold_in(key, 100 + k),
+                                          cfg)
+        deltas.append(np.asarray(state.delta_prev).copy())
+    for k in range(1, len(deltas)):
+        capped = np.asarray(
+            jnp.exp2(jnp.asarray(float(cfg.b_max)))) - 1  # b_max saturation
+        ok = (deltas[k] <= cfg.omega * deltas[k - 1] + 1e-7)
+        # once bits saturate at b_max the contraction can no longer hold
+        saturated = deltas[k] > 0
+        bits_at_cap = np.asarray(state.bits_prev) >= cfg.b_max
+        assert (ok | bits_at_cap).all()
+
+
+def test_required_bits_first_iteration_uses_b0():
+    bits = required_bits(jnp.asarray([7.0]), jnp.asarray([3.0]),
+                         jnp.asarray([1.0]), 0.9, jnp.asarray([0.0]),
+                         b0=2, b_max=16)
+    assert float(bits[0]) == 2.0
+
+
+def test_payload_accounting():
+    n, d = 3, 50
+    cfg = QuantConfig(b0=4, omega=0.99, b_overhead=64)
+    state = _state(n, d, cfg.b0)
+    theta = jax.random.normal(jax.random.PRNGKey(0), (n, d))
+    _, _, bits, payload = quantize_step(state, theta, jax.random.PRNGKey(1),
+                                        cfg)
+    np.testing.assert_allclose(np.asarray(payload),
+                               np.asarray(bits) * d + 64)
+    assert (np.asarray(payload) < 32 * d).all()   # beats full precision
+
+
+def test_degenerate_zero_diff_keeps_state():
+    n, d = 2, 16
+    cfg = QuantConfig(b0=3)
+    state = _state(n, d, cfg.b0)
+    theta = jnp.zeros((n, d))
+    new_state, q_hat, _, _ = quantize_step(state, theta,
+                                           jax.random.PRNGKey(0), cfg)
+    np.testing.assert_array_equal(np.asarray(q_hat), 0.0)
+    np.testing.assert_array_equal(np.asarray(new_state.range_prev),
+                                  np.asarray(state.range_prev))

@@ -1,0 +1,75 @@
+"""Theorem 3 certificate vs measured contraction."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import admm_baselines as ab
+from repro.core import cq_ggadmm as cq
+from repro.core import theory
+from repro.core.graph import random_bipartite_graph
+from repro.core.solvers import LinearRegressionProblem
+from repro.data import regression as R
+
+
+@pytest.fixture(scope="module")
+def setup():
+    data = R.synth_linear(n=720, d=12, seed=5)
+    g = random_bipartite_graph(12, 0.4, seed=5)
+    x, y = R.partition_uniform(data, 12)
+    prob = LinearRegressionProblem(jnp.asarray(x), jnp.asarray(y))
+    mu, lips = theory.linreg_convexity(np.asarray(x))
+    return g, prob, mu, lips
+
+
+def test_topology_constants_sane(setup):
+    g, *_ = setup
+    tc = theory.topology_constants(g)
+    assert tc["sigma_max_C"] > 0
+    assert 0 < tc["sigma_min_M"] <= tc["sigma_max_M"]
+    # D - A = M- M-^T => sigma_max(M_-)^2 <= 2 * max degree
+    assert tc["sigma_max_M"] ** 2 <= 2 * g.degrees.max() + 1e-5
+
+
+def test_certificate_exists_for_small_rho(setup):
+    g, prob, mu, lips = setup
+    cert = theory.best_rate_bound(g, mu, lips, rho=1e-4)
+    assert cert is not None and cert.feasible
+    assert 0.5 <= cert.rate < 1.0          # a genuine linear rate
+    assert cert.rho_bar > 1e-4
+
+
+def test_measured_contraction_respects_certificate(setup):
+    """Empirical per-iteration contraction of ||theta - theta*||^2 must be
+    at least as fast as the certified (1+delta_2)/2 (the bound is valid,
+    not necessarily tight)."""
+    g, prob, mu, lips = setup
+    rho = 1e-3
+    cert = theory.best_rate_bound(g, mu, lips, rho=rho)
+    assert cert is not None
+    theta_star = prob.optimum()
+    _, out = cq.run(g, prob, ab.ggadmm(rho=rho), dim=prob.dim, iters=120,
+                    theta_star=theta_star)
+    d = np.maximum(out["dist_to_opt"], 1e-30)
+    # average contraction over a mid-run window
+    window = d[10:80]
+    measured = (window[-1] / window[0]) ** (1.0 / (len(window) - 1))
+    assert measured <= cert.rate + 1e-6, (measured, cert.rate)
+
+
+def test_denser_graph_certifies_no_worse(setup):
+    _, prob, mu, lips = setup
+    sparse = random_bipartite_graph(12, 0.2, seed=7)
+    dense = random_bipartite_graph(12, 0.5, seed=7)
+    tc_s = theory.topology_constants(sparse)
+    tc_d = theory.topology_constants(dense)
+    # denser bipartite graph has better algebraic connectivity
+    assert tc_d["sigma_min_M"] >= tc_s["sigma_min_M"] - 1e-9
+
+
+def test_cq_psi_loosens_rate(setup):
+    g, prob, mu, lips = setup
+    exact = theory.best_rate_bound(g, mu, lips, rho=1e-4, psi=0.0)
+    quant = theory.best_rate_bound(g, mu, lips, rho=1e-4, psi=0.995)
+    assert exact is not None and quant is not None
+    assert quant.rate >= exact.rate        # psi^2 can dominate delta_2
+    assert quant.rate < 1.0                # still linear (Thm 3)

@@ -1,0 +1,92 @@
+"""Attribute per-device HBM traffic / flops / collective bytes to source
+ops (loop-trip-aware), for one (arch, shape, mesh, mode) bundle."""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import re
+import sys
+from collections import defaultdict
+
+import jax
+
+from repro.configs import base
+from repro.launch.mesh import make_production_mesh
+from repro.runtime import hlo_analysis as HA
+from repro.runtime import steps as ST
+
+arch = sys.argv[1] if len(sys.argv) > 1 else "tinyllama-1.1b"
+shape = sys.argv[2] if len(sys.argv) > 2 else "train_4k"
+multi = len(sys.argv) > 3 and sys.argv[3] == "multi"
+mode = sys.argv[4] if len(sys.argv) > 4 else None
+
+mesh = make_production_mesh(multi_pod=multi)
+b = ST.make_bundle(arch, shape, mesh, multi_pod=multi, mode=mode)
+compiled = b.lower().compile()
+print("memory:", compiled.memory_analysis())
+txt = compiled.as_text()
+comps, entry = HA.parse_module(txt)
+table = {}
+for c in comps.values():
+    table.update({op.name: op.result_type for op in c.ops})
+
+# computation multipliers
+mult = {entry: 1.0}
+order, seen, i = [entry], {entry}, 0
+while i < len(order):
+    name = order[i]; i += 1
+    for op in comps[name].ops:
+        targets = []
+        if op.opcode == "while":
+            mt = HA._TRIP_RE.search(op.line)
+            trips = float(mt.group(1)) if mt else 1.0
+            mb = HA._BODY_RE.search(op.line)
+            if mb: targets.append((mb.group(1), trips))
+        elif op.opcode in ("fusion", "call"):
+            mc = HA._CALLS_RE.search(op.line) or HA._TO_APPLY_RE.search(op.line)
+            if mc: targets.append((mc.group(1), 1.0))
+        for t, tr in targets:
+            if t in comps:
+                mult[t] = mult.get(t, 0.0) + mult[name] * tr
+                if t not in seen:
+                    seen.add(t); order.append(t)
+
+traffic = defaultdict(float)
+coll = defaultdict(float)
+flops = defaultdict(float)
+for name, comp in comps.items():
+    m = mult.get(name, 0.0)
+    if m == 0:
+        continue
+    local = {op.name: op.result_type for op in comp.ops}
+    def resolve(o):
+        return local.get(o) or table.get(o) or ""
+    for op in comp.ops:
+        meta = re.search(r'op_name="([^"]*)"', op.line)
+        key = meta.group(1) if meta else op.opcode
+        key = re.sub(r"/while/body|/closed_call|/checkpoint|/rematted_computation|jit\(train_step\)/|jit\(\w+\)/", "", key)
+        key = key[:90]
+        base_op = op.opcode.removesuffix("-start").removesuffix("-done")
+        if base_op in HA._COLLECTIVES and not op.opcode.endswith("-done"):
+            coll[(base_op, key)] += m * sum(HA._type_bytes(resolve(o)) for o in op.operands)
+        if op.opcode == "dot":
+            dims = HA._type_dims(op.result_type) or []
+            lhs = HA._type_dims(resolve(op.operands[0])) if op.operands else None
+            mc = HA._LHS_CONTRACT_RE.search(op.line)
+            contract = 1
+            if lhs is not None and mc and mc.group(1):
+                for ix in mc.group(1).split(","):
+                    contract *= lhs[int(ix)]
+            r = 1
+            for d in dims:
+                r *= d
+            flops[key] += m * 2 * r * contract
+        if op.opcode in HA._FREE_OPS or comp.is_fusion_body:
+            continue
+        nbytes = HA._type_bytes(op.result_type) + sum(
+            HA._type_bytes(resolve(o)) for o in op.operands)
+        traffic[key] += m * nbytes
+
+for title, agg, unit in (("TRAFFIC", traffic, 1e12), ("COLLECTIVE", coll, 1e9),
+                         ("FLOPS", flops, 1e12)):
+    print(f"===== top {title} =====")
+    for k, v in sorted(agg.items(), key=lambda kv: -kv[1])[:15]:
+        print(f"{v/unit:10.2f} {'TB' if unit==1e12 else 'GB'}  {k}")
