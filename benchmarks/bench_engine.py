@@ -1,0 +1,113 @@
+"""Engine-refactor benchmark: (a) unified engine vs frozen seed stepper
+wall-time on the paper's flat workload, (b) whole-model (G=1) vs per-layer
+(G=num_leaves) payload bits on a heterogeneous-scale model.
+
+Emits ``BENCH_engine.json`` (cwd) with both comparisons plus claim checks:
+the engine must stay within a small factor of the seed stepper's wall time
+(it runs the identical math through the pytree path), and layer-wise
+quantization must not move more bits than whole-model on the
+heterogeneous-decay construction.
+
+    PYTHONPATH=src python -m benchmarks.bench_engine
+"""
+from __future__ import annotations
+
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import admm_baselines as ab
+from repro.core import engine as E
+from repro.core import seed_reference as ref
+from repro.core.graph import random_bipartite_graph
+from repro.core.quantization import QuantConfig
+from repro.core.solvers import LinearRegressionProblem
+from repro.data import regression as R
+
+OUT_PATH = "BENCH_engine.json"
+
+
+def _time_run(fn, repeats=3):
+    fn()                                   # compile / warm up
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = fn()
+        jax.block_until_ready(out)
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def bench_walltime(n_workers=16, dim=64, iters=200) -> dict:
+    data = R.synth_linear(n=n_workers * 40, d=dim, seed=0)
+    graph = random_bipartite_graph(n_workers, 0.4, seed=0)
+    x, y = R.partition_uniform(data, n_workers)
+    prob = LinearRegressionProblem(jnp.asarray(x), jnp.asarray(y))
+    cfg = ab.ALL_SCHEMES["cq-ggadmm"](rho=1.0)
+
+    theta0 = jnp.zeros((n_workers, dim), jnp.float32)
+    t_engine = _time_run(lambda: E.run(graph, cfg, E.ExactSolver(prob),
+                                       theta0, iters, seed=0)[1]["tx_mask"])
+    t_seed = _time_run(lambda: ref.run(graph, prob, cfg, dim=dim,
+                                       iters=iters, seed=0)[1]["tx_mask"])
+    return {"iters": iters, "n_workers": n_workers, "dim": dim,
+            "engine_s": t_engine, "seed_s": t_seed,
+            "engine_over_seed": t_engine / max(t_seed, 1e-9)}
+
+
+def bench_payload(n=4, iters=40) -> dict:
+    key = jax.random.PRNGKey(0)
+    cfg = QuantConfig(b0=4, omega=0.99, b_overhead=64)
+
+    def make_theta(t, k):
+        kw, kb = jax.random.split(k)
+        return {"w": 5.0 * (0.995 ** t) * jax.random.normal(kw, (n, 128)),
+                "b": 0.05 * (0.6 ** t) * jax.random.normal(kb, (n, 256))}
+
+    totals = {}
+    for groups in ("model", "leaf"):
+        theta0 = make_theta(0, jax.random.PRNGKey(99))
+        gids = E.resolve_groups(theta0, groups)
+        state = E.GroupQuantState.create(theta0, max(gids) + 1, b0=cfg.b0)
+        total = 0.0
+        for t in range(iters):
+            theta = make_theta(t, jax.random.fold_in(key, t))
+            state, _, _, payload = E.grouped_quantize_step(
+                state, theta, jax.random.fold_in(key, 1000 + t), cfg, gids)
+            total += float(payload.sum())
+        totals[groups] = total
+    return {"iters": iters,
+            "whole_model_bits": totals["model"],
+            "per_layer_bits": totals["leaf"],
+            "per_layer_over_whole": totals["leaf"] / totals["model"]}
+
+
+def main() -> int:
+    wall = bench_walltime()
+    payload = bench_payload()
+    claims = {
+        # the unified path runs the same math; allow modest pytree overhead
+        "engine_walltime_comparable": wall["engine_over_seed"] < 1.5,
+        "per_layer_leq_whole_model":
+            payload["per_layer_bits"] <= payload["whole_model_bits"],
+    }
+    result = {"walltime": wall, "payload": payload, "claims": claims}
+    with open(OUT_PATH, "w") as f:
+        json.dump(result, f, indent=2)
+    print(f"# engine: wall engine={wall['engine_s']:.3f}s "
+          f"seed={wall['seed_s']:.3f}s "
+          f"ratio={wall['engine_over_seed']:.2f}")
+    print(f"# engine: payload per-layer/whole-model="
+          f"{payload['per_layer_over_whole']:.2f}")
+    failures = 0
+    for claim, ok in claims.items():
+        print(f"claim,engine,{claim},{'PASS' if ok else 'FAIL'}")
+        failures += (not ok)
+    print(f"# wrote {OUT_PATH}")
+    return failures
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

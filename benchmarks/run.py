@@ -12,10 +12,20 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--skip-lm", action="store_true")
     ap.add_argument("--skip-roofline", action="store_true")
+    ap.add_argument("--engine-smoke", action="store_true",
+                    help="only the engine-vs-seed benchmark "
+                         "(emits BENCH_engine.json)")
     args = ap.parse_args()
 
     t0 = time.time()
     failures = 0
+
+    from benchmarks import bench_engine
+    failures += bench_engine.main()
+    if args.engine_smoke:
+        print(f"# engine smoke done in {time.time() - t0:.0f}s, "
+              f"{failures} claim failures")
+        sys.exit(1 if failures else 0)
 
     from benchmarks import bench_figures, bench_kernels
     failures += bench_figures.main()

@@ -1,10 +1,13 @@
 """Core library: the paper's contribution (CQ-GGADMM family) in JAX."""
-from repro.core import admm_baselines, censoring, comm, graph, quantization
+from repro.core import admm_baselines, censoring, comm, engine, graph, \
+    quantization
 from repro.core.censoring import CensorConfig
 from repro.core.consensus import (ConsensusConfig, ConsensusState,
                                   init_consensus_state, make_consensus_step)
 from repro.core.cq_ggadmm import ADMMConfig, ADMMState, init_state, \
     make_step, run
+from repro.core.engine import (EngineConfig, EngineState, ExactSolver,
+                               GroupQuantState, InexactSolver)
 from repro.core.dynamic import DynamicTopology, run_dynamic
 from repro.core.graph import (WorkerGraph, chain_graph,
                               complete_bipartite_graph,
@@ -17,8 +20,9 @@ from repro.core.theory import best_rate_bound, topology_constants
 
 __all__ = [
     "ADMMConfig", "ADMMState", "CensorConfig", "ConsensusConfig",
-    "ConsensusState", "DynamicTopology", "QuantConfig", "QuantizerState",
-    "WorkerGraph", "best_rate_bound", "chain_graph",
+    "ConsensusState", "DynamicTopology", "EngineConfig", "EngineState",
+    "ExactSolver", "GroupQuantState", "InexactSolver", "QuantConfig",
+    "QuantizerState", "WorkerGraph", "best_rate_bound", "chain_graph",
     "complete_bipartite_graph", "init_consensus_state", "init_state",
     "make_consensus_step", "make_step", "quantize_step",
     "random_bipartite_graph", "run", "run_dynamic", "star_graph",

@@ -2,16 +2,20 @@
 
 * C-ADMM (Liu et al., 2019b): censoring on top of the *Jacobian* decentralized
   ADMM — all workers update and (band-sharing-permitting) transmit in
-  parallel every iteration, no worker grouping, no quantization. In our
-  unified stepper this is ``alternating=False`` + censoring.
-* GGADMM / C-GGADMM ablations are ``ADMMConfig`` presets.
+  parallel every iteration, no worker grouping, no quantization. In the
+  unified engine this is ``alternating=False`` + censoring.
+* GGADMM / C-GGADMM ablations are ``EngineConfig`` presets (``ADMMConfig``
+  is its flat-adapter alias).
 * Q-GGADMM (quantization without censoring) is included as an extra ablation
   beyond the paper's plotted set (it is the GGADMM analogue of Q-GADMM).
+
+Every preset runs through ``core/engine.py`` — pass ``groups="leaf"`` /
+``censor_mode="group"`` to any of them for the layer-aware modes.
 """
 from __future__ import annotations
 
 from repro.core.censoring import CensorConfig
-from repro.core.cq_ggadmm import ADMMConfig
+from repro.core.engine import EngineConfig as ADMMConfig
 from repro.core.quantization import QuantConfig
 
 

@@ -1,18 +1,19 @@
 """CQ-GGADMM over model *pytrees* — decentralized training of the assigned
 architectures.
 
-The paper's consensus variable theta is a flat vector; for neural models it
-is the whole parameter pytree. Every per-worker quantity (theta_n, the last
-transmitted theta-hat_n, the quantizer replica Q-hat_n, the dual alpha_n)
-is stored as the *same pytree with a leading worker axis N*. The worker axis
-is what the launcher shards over a mesh axis ("data" on the single pod,
-"pod" across pods), so the neighbor contractions below lower to collectives
-on exactly the links the paper's censoring/quantization compresses.
+Thin adapter over the unified consensus engine (``core/engine.py``; see
+DESIGN.md §Engine). The paper's consensus variable theta is a flat vector;
+for neural models it is the whole parameter pytree — the engine treats both
+identically, and this module keeps the seed training API
+(:class:`ConsensusConfig`, ``init_consensus_state``,
+``make_consensus_step``) while delegating every update to the engine.
 
 Faithfulness notes:
-  * The censoring norm ||theta-hat_n - candidate_n|| and the quantizer range
-    R_n are *global over the whole model vector*, exactly as in the paper
-    (theta is one d-dimensional vector; we never censor per-layer).
+  * By default the censoring norm and the quantizer range are *global over
+    the whole model vector*, exactly as in the paper (``groups="model"``,
+    ``censor_mode="global"``). ``groups="leaf"`` opts into the L-FGADMM
+    layer-wise mode (per-layer ranges and payload accounting; DESIGN.md
+    §Groups).
   * The exact local argmin (Eqs. 21/22) is replaced by `local_steps` Adam
     iterations on the augmented Lagrangian g_n(theta) = f_n(theta) +
     <theta, v_n> + rho d_n / 2 ||theta||^2 — standard inexact-ADMM practice
@@ -24,75 +25,28 @@ Faithfulness notes:
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Any, Callable, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.censoring import CensorConfig, threshold
-from repro.core.graph import WorkerGraph
-from repro.core.quantization import QuantConfig, required_bits
-
-_EPS = 1e-12
+from repro.core import engine as E
+from repro.core.censoring import CensorConfig
+from repro.core.engine import (  # noqa: F401  (re-exported tree utils)
+    GroupQuantState, tree_dim, tree_mix, tree_where_worker, tree_worker_dot,
+    tree_worker_maxabs, tree_worker_sqnorm)
+from repro.core.quantization import QuantConfig
 
 Tree = Any
-
-
-# ------------------------------------------------------------- tree utils --
-def tree_worker_dot(a: Tree, b: Tree) -> jax.Array:
-    """Per-worker inner product over all leaves: (N,)."""
-    parts = jax.tree_util.tree_map(
-        lambda x, y: jnp.sum((x.astype(jnp.float32) * y.astype(jnp.float32))
-                             .reshape(x.shape[0], -1), axis=-1), a, b)
-    return sum(jax.tree_util.tree_leaves(parts))
-
-
-def tree_worker_sqnorm(a: Tree) -> jax.Array:
-    return tree_worker_dot(a, a)
-
-
-def tree_worker_maxabs(a: Tree) -> jax.Array:
-    """Per-worker max |.| over all leaves: (N,)."""
-    parts = jax.tree_util.tree_map(
-        lambda x: jnp.max(jnp.abs(x.astype(jnp.float32))
-                          .reshape(x.shape[0], -1), axis=-1), a)
-    leaves = jax.tree_util.tree_leaves(parts)
-    return jnp.max(jnp.stack(leaves, axis=0), axis=0)
-
-
-def tree_dim(a: Tree) -> int:
-    """Total model dimension d (per worker)."""
-    leaves = jax.tree_util.tree_leaves(a)
-    return sum(int(x.size // x.shape[0]) for x in leaves)
-
-
-def tree_mix(adjacency: jax.Array, a: Tree) -> Tree:
-    """Neighbor sum per leaf: out_n = sum_m A[n, m] leaf_m."""
-    def mix(x):
-        flat = x.reshape(x.shape[0], -1)
-        out = adjacency.astype(flat.dtype) @ flat
-        return out.reshape(x.shape)
-    return jax.tree_util.tree_map(mix, a)
-
-
-def tree_where_worker(mask: jax.Array, a: Tree, b: Tree) -> Tree:
-    """Select a_n where mask_n > 0 else b_n, leaf-wise."""
-    def sel(x, y):
-        m = mask.reshape((mask.shape[0],) + (1,) * (x.ndim - 1))
-        return jnp.where(m > 0, x, y)
-    return jax.tree_util.tree_map(sel, a, b)
 
 
 # -------------------------------------------------------- tree quantizer --
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass(frozen=True)
 class TreeQuantState:
-    """Pytree analogue of ``quantization.QuantizerState``.
-
-    q_hat mirrors the parameter pytree (leading worker axis); the scalar
-    side-information (range/bits/step) is one value per worker, as in the
-    paper (single R_n^k, b_n^k per transmission).
-    """
+    """Legacy whole-model quantizer state (G=1 view of the engine's
+    :class:`~repro.core.engine.GroupQuantState`): scalar side-information
+    per worker, as in the paper (single R_n^k, b_n^k per transmission)."""
 
     q_hat: Tree
     range_prev: jax.Array   # (N,)
@@ -102,65 +56,40 @@ class TreeQuantState:
 
     @staticmethod
     def create(theta: Tree, b0: int = 4) -> "TreeQuantState":
-        n = jax.tree_util.tree_leaves(theta)[0].shape[0]
+        g = GroupQuantState.create(theta, 1, b0=b0)
         return TreeQuantState(
-            q_hat=jax.tree_util.tree_map(jnp.zeros_like, theta),
-            range_prev=jnp.zeros((n,), jnp.float32),
-            bits_prev=jnp.full((n,), float(b0), jnp.float32),
-            delta_prev=jnp.zeros((n,), jnp.float32),
-            initialized=jnp.zeros((n,), jnp.float32),
-        )
+            q_hat=g.q_hat, range_prev=g.range_prev[:, 0],
+            bits_prev=g.bits_prev[:, 0], delta_prev=g.delta_prev[:, 0],
+            initialized=g.initialized[:, 0])
+
+    def as_grouped(self) -> GroupQuantState:
+        return GroupQuantState(
+            q_hat=self.q_hat, range_prev=self.range_prev[:, None],
+            bits_prev=self.bits_prev[:, None],
+            delta_prev=self.delta_prev[:, None],
+            initialized=self.initialized[:, None])
 
 
 def tree_quantize_step(
     state: TreeQuantState, theta: Tree, key: jax.Array, cfg: QuantConfig,
 ) -> Tuple[TreeQuantState, Tree, jax.Array, jax.Array]:
-    """Whole-model stochastic quantization (Eqs. 14-20) leaf-by-leaf with a
-    shared per-worker (R, Delta, b)."""
-    diff = jax.tree_util.tree_map(lambda t, q: t - q, theta, state.q_hat)
-    range_new = tree_worker_maxabs(diff)                       # (N,)
-    bits = required_bits(state.bits_prev, range_new, state.range_prev,
-                         cfg.omega, state.initialized, cfg.b0, cfg.b_max)
-    levels = jnp.exp2(bits) - 1.0
-    delta = 2.0 * range_new / jnp.maximum(levels, 1.0)
-
-    leaves, treedef = jax.tree_util.tree_flatten(theta)
-    keys = jax.random.split(key, len(leaves))
-
-    def quant_leaf(t, q, k):
-        shape1 = (t.shape[0],) + (1,) * (t.ndim - 1)
-        sd = jnp.maximum(delta, _EPS).reshape(shape1)
-        r = range_new.reshape(shape1)
-        lv = levels.reshape(shape1)
-        c = (t.astype(jnp.float32) - q.astype(jnp.float32) + r) / sd
-        u = jax.random.uniform(k, t.shape, jnp.float32)
-        fl = jnp.floor(c)
-        qq = jnp.clip(fl + (u < (c - fl)).astype(jnp.float32), 0.0, lv)
-        return (q.astype(jnp.float32) + sd * qq - r).astype(q.dtype)
-
-    q_leaves = jax.tree_util.tree_leaves(state.q_hat)
-    new_leaves = [quant_leaf(t, q, k)
-                  for t, q, k in zip(leaves, q_leaves, keys)]
-    q_hat_new = jax.tree_util.tree_unflatten(treedef, new_leaves)
-    degen = range_new <= _EPS
-    q_hat_new = tree_where_worker(1.0 - degen, q_hat_new, state.q_hat)
-
+    """Whole-model stochastic quantization (Eqs. 14-20) — the engine's
+    grouped quantizer with a single group."""
+    group_ids = E.resolve_groups(theta, "model")
+    new_g, q_hat, bits, payload = E.grouped_quantize_step(
+        state.as_grouped(), theta, key, cfg, group_ids)
     new_state = TreeQuantState(
-        q_hat=q_hat_new,
-        range_prev=jnp.where(degen, state.range_prev, range_new),
-        bits_prev=bits,
-        delta_prev=jnp.where(degen, state.delta_prev, delta),
-        initialized=jnp.ones_like(state.initialized),
-    )
-    d = tree_dim(theta)
-    payload_bits = bits * float(d) + float(cfg.b_overhead)
-    return new_state, q_hat_new, bits, payload_bits
+        q_hat=new_g.q_hat, range_prev=new_g.range_prev[:, 0],
+        bits_prev=new_g.bits_prev[:, 0], delta_prev=new_g.delta_prev[:, 0],
+        initialized=new_g.initialized[:, 0])
+    return new_state, q_hat, bits[:, 0], payload
 
 
 # --------------------------------------------------------- consensus step --
 @dataclasses.dataclass(frozen=True)
 class ConsensusConfig:
-    """Hyperparameters of pytree CQ-GGADMM."""
+    """Hyperparameters of pytree CQ-GGADMM (adapter view of
+    :class:`~repro.core.engine.EngineConfig` + the inexact local solver)."""
 
     rho: float = 0.01
     censor: CensorConfig = dataclasses.field(default_factory=CensorConfig)
@@ -174,112 +103,30 @@ class ConsensusConfig:
     #                               replicas at half width (paper accounting
     #                               is unchanged; only the SPMD replica
     #                               storage narrows)
+    groups: E.GroupSpec = "model"    # "leaf" => L-FGADMM layer-wise mode
+    censor_mode: str = "global"      # "group" => per-group censoring
+
+    def engine_config(self) -> E.EngineConfig:
+        return E.EngineConfig(
+            rho=self.rho, alternating=True, censor=self.censor,
+            quantize=self.quantize, groups=self.groups,
+            censor_mode=self.censor_mode, hat_dtype=self.hat_dtype)
+
+    def solver(self, grad_fn: Optional[Callable] = None) -> E.InexactSolver:
+        return E.InexactSolver(grad_fn=grad_fn,
+                               local_steps=self.local_steps,
+                               local_lr=self.local_lr,
+                               use_adam=self.use_adam)
 
 
-@jax.tree_util.register_dataclass
-@dataclasses.dataclass(frozen=True)
-class ConsensusState:
-    theta: Tree          # per-worker params, leading axis N
-    theta_hat: Tree      # last transmitted value per worker
-    alpha: Tree          # duals
-    quant: TreeQuantState
-    opt_mu: Tree         # local Adam state (reset each outer iteration is
-    opt_nu: Tree         # wasteful; we carry it across — inexact ADMM)
-    k: jax.Array
+ConsensusState = E.EngineState
 
 
 def init_consensus_state(theta: Tree, cfg: ConsensusConfig) -> ConsensusState:
-    qcfg = cfg.quantize or QuantConfig()
-    hat_dtype = jnp.dtype(cfg.hat_dtype) if cfg.hat_dtype else None
-
-    def hat_zeros(x):
-        return jnp.zeros(x.shape, hat_dtype or x.dtype)
-
-    if cfg.use_adam:
-        zeros = jax.tree_util.tree_map(
-            lambda x: jnp.zeros(x.shape, jnp.float32), theta)
-        mu, nu = zeros, jax.tree_util.tree_map(jnp.copy, zeros)
-    else:
-        mu, nu = (), ()
-    quant = TreeQuantState.create(theta, b0=qcfg.b0)
-    if hat_dtype is not None:
-        quant = dataclasses.replace(
-            quant, q_hat=jax.tree_util.tree_map(hat_zeros, theta))
-    return ConsensusState(
-        theta=theta,
-        theta_hat=jax.tree_util.tree_map(hat_zeros, theta),
-        alpha=jax.tree_util.tree_map(hat_zeros, theta),
-        quant=quant,
-        opt_mu=mu,
-        opt_nu=nu,
-        k=jnp.zeros((), jnp.int32),
-    )
+    return E.init_state(theta, cfg.engine_config(), cfg.solver())
 
 
-def _local_inexact_solve(theta0: Tree, v: Tree, rho_d: jax.Array,
-                         grad_fn: Callable[[Tree], Tree],
-                         mu0: Tree, nu0: Tree, cfg: ConsensusConfig,
-                         group_mask: jax.Array,
-                         ) -> Tuple[Tree, Tree, Tree]:
-    """K Adam steps on g(theta) = f(theta) + <theta, v> + rho d/2 ||theta||^2.
-
-    grad_fn returns the per-worker df/dtheta pytree (leading axis N).
-    Only workers in `group_mask` move; others keep theta/opt state.
-    """
-    b1, b2, eps = 0.9, 0.95, 1e-8
-
-    def aug_grad(th):
-        g = grad_fn(th)
-
-        def one(gl, thl, vl):
-            shape1 = (thl.shape[0],) + (1,) * (thl.ndim - 1)
-            return (gl.astype(jnp.float32) + vl.astype(jnp.float32)
-                    + rho_d.reshape(shape1) * thl.astype(jnp.float32))
-        return jax.tree_util.tree_map(one, g, th, v)
-
-    if not cfg.use_adam:                        # plain SGD, no moments
-        def sgd_body(i, th):
-            g = aug_grad(th)
-            return jax.tree_util.tree_map(
-                lambda p, gl: (p.astype(jnp.float32)
-                               - cfg.local_lr * gl).astype(p.dtype), th, g)
-
-        th = jax.lax.fori_loop(0, cfg.local_steps, sgd_body, theta0)
-        th = tree_where_worker(group_mask, th, theta0)
-        return th, mu0, nu0
-
-    def body(i, carry):
-        th, mu, nu = carry
-        g = aug_grad(th)
-        t = i + 1.0
-        b1c = 1.0 - b1 ** t
-        b2c = 1.0 - b2 ** t
-
-        def upd(p, gl, m, vv):
-            m_new = b1 * m + (1 - b1) * gl
-            v_new = b2 * vv + (1 - b2) * jnp.square(gl)
-            step = (m_new / b1c) / (jnp.sqrt(v_new / b2c) + eps)
-            return ((p.astype(jnp.float32) - cfg.local_lr * step)
-                    .astype(p.dtype), m_new, v_new)
-
-        out = jax.tree_util.tree_map(upd, th, g, mu, nu)
-        th2 = jax.tree_util.tree_map(lambda o: o[0], out,
-                                     is_leaf=lambda o: isinstance(o, tuple))
-        mu2 = jax.tree_util.tree_map(lambda o: o[1], out,
-                                     is_leaf=lambda o: isinstance(o, tuple))
-        nu2 = jax.tree_util.tree_map(lambda o: o[2], out,
-                                     is_leaf=lambda o: isinstance(o, tuple))
-        return th2, mu2, nu2
-
-    th, mu, nu = jax.lax.fori_loop(
-        0, cfg.local_steps, body, (theta0, mu0, nu0))
-    th = tree_where_worker(group_mask, th, theta0)
-    mu = tree_where_worker(group_mask, mu, mu0)
-    nu = tree_where_worker(group_mask, nu, nu0)
-    return th, mu, nu
-
-
-def make_consensus_step(graph: WorkerGraph, cfg: ConsensusConfig,
+def make_consensus_step(graph, cfg: ConsensusConfig,
                         grad_fn: Callable[[Tree, Any], Tree],
                         loss_fn: Optional[Callable] = None):
     """Build the jittable CQ-GGADMM training step over pytrees.
@@ -289,96 +136,5 @@ def make_consensus_step(graph: WorkerGraph, cfg: ConsensusConfig,
 
     step(state, batch, key) -> (state, metrics).
     """
-    adjacency = jnp.asarray(graph.adjacency)
-    degrees = jnp.asarray(graph.degrees)
-    head = jnp.asarray(graph.head_mask, jnp.float32)
-    tail = 1.0 - head
-    rho_d = cfg.rho * degrees
-
-    def phase(state: ConsensusState, group_mask, batch, key):
-        neigh = tree_mix(adjacency, state.theta_hat)
-        v = jax.tree_util.tree_map(
-            lambda a, nm: a.astype(jnp.float32)
-            - cfg.rho * nm.astype(jnp.float32), state.alpha, neigh)
-        theta, mu, nu = _local_inexact_solve(
-            state.theta, v, rho_d, lambda th: grad_fn(th, batch),
-            state.opt_mu, state.opt_nu, cfg, group_mask)
-
-        if cfg.quantize is not None:
-            quant_new, candidate, bits, payload = tree_quantize_step(
-                state.quant, theta, key, cfg.quantize)
-        else:
-            q_cast = jax.tree_util.tree_map(
-                lambda t, q: t.astype(q.dtype), theta, state.quant.q_hat)
-            quant_new = dataclasses.replace(
-                state.quant, q_hat=q_cast,
-                initialized=jnp.ones_like(state.quant.initialized))
-            candidate = theta
-            d = tree_dim(theta)
-            payload = jnp.full((graph.n,), 32.0 * d, jnp.float32)
-
-        k_next = (state.k + 1).astype(jnp.float32)
-        if cfg.censor.enabled:
-            delta_tree = jax.tree_util.tree_map(
-                lambda c, h: c.astype(jnp.float32) - h.astype(jnp.float32),
-                candidate, state.theta_hat)
-            change = jnp.sqrt(tree_worker_sqnorm(delta_tree))
-            cmask = (change >= threshold(cfg.censor, k_next)).astype(
-                jnp.float32)
-        else:
-            cmask = jnp.ones((graph.n,), jnp.float32)
-        tx_mask = cmask * group_mask
-        candidate = jax.tree_util.tree_map(
-            lambda c, h: c.astype(h.dtype), candidate, state.theta_hat)
-        theta_hat = tree_where_worker(tx_mask, candidate, state.theta_hat)
-        # quantizer replicas advance for the acting group only:
-        quant = TreeQuantState(
-            q_hat=tree_where_worker(group_mask, quant_new.q_hat,
-                                    state.quant.q_hat),
-            range_prev=jnp.where(group_mask > 0, quant_new.range_prev,
-                                 state.quant.range_prev),
-            bits_prev=jnp.where(group_mask > 0, quant_new.bits_prev,
-                                state.quant.bits_prev),
-            delta_prev=jnp.where(group_mask > 0, quant_new.delta_prev,
-                                 state.quant.delta_prev),
-            initialized=jnp.maximum(quant_new.initialized,
-                                    state.quant.initialized),
-        )
-        new_state = dataclasses.replace(
-            state, theta=theta, theta_hat=theta_hat, alpha=state.alpha,
-            quant=quant, opt_mu=mu, opt_nu=nu)
-        return new_state, tx_mask, payload * group_mask
-
-    def step(state: ConsensusState, batch, key):
-        k1, k2 = jax.random.split(key)
-        state, tx_h, pay_h = phase(state, head, batch, k1)
-        state, tx_t, pay_t = phase(state, tail, batch, k2)
-
-        # Dual update Eq. (23): alpha_n += rho sum_m (theta_hat_n - theta_hat_m)
-        neigh = tree_mix(adjacency, state.theta_hat)
-        alpha = jax.tree_util.tree_map(
-            lambda a, th, nm: (a.astype(jnp.float32) + cfg.rho * (
-                degrees.reshape((graph.n,) + (1,) * (th.ndim - 1))
-                * th.astype(jnp.float32) - nm.astype(jnp.float32))
-            ).astype(a.dtype),
-            state.alpha, state.theta_hat, neigh)
-        state = dataclasses.replace(state, alpha=alpha, k=state.k + 1)
-
-        # consensus diagnostic: mean pairwise deviation from the worker mean
-        mean_theta = jax.tree_util.tree_map(
-            lambda x: jnp.mean(x.astype(jnp.float32), axis=0, keepdims=True),
-            state.theta)
-        dev = jax.tree_util.tree_map(
-            lambda x, m: x.astype(jnp.float32) - m, state.theta, mean_theta)
-        consensus_err = jnp.sum(tree_worker_sqnorm(dev))
-
-        metrics = {
-            "tx_mask": tx_h + tx_t,
-            "payload_bits": pay_h + pay_t,
-            "consensus_err": consensus_err,
-        }
-        if loss_fn is not None:
-            metrics["loss"] = loss_fn(state.theta, batch)
-        return state, metrics
-
-    return step
+    return E.make_step(graph, cfg.engine_config(), cfg.solver(grad_fn),
+                       extra_metrics=E.consensus_metrics(loss_fn))

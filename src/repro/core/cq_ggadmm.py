@@ -1,196 +1,61 @@
 """GGADMM / C-GGADMM / CQ-GGADMM — the paper's Algorithms 1 and 2.
 
-One unified stepper covers the whole family (and the Jacobian C-ADMM
-baseline in ``admm_baselines``) through three orthogonal switches:
+Thin flat-vector adapter over the unified consensus engine
+(``core/engine.py``): a flat ``(N, d)`` parameter matrix is the trivial
+one-leaf pytree, and ``groups="model"`` (G=1) reproduces the seed flat
+stepper bit-for-bit (golden tests in ``tests/test_engine.py`` check this
+against the frozen ``core/seed_reference.py`` copy).
 
-  * alternating head/tail groups (GADMM-style)  vs  Jacobian (all-parallel),
-  * censoring  (tau0 > 0),
-  * stochastic quantization  (quantize=True).
+The public surface is unchanged from the seed:
 
-Per-iteration structure of CQ-GGADMM (Algorithm 2), fully vectorized over a
-leading worker axis, with group selection done by masks so the same traced
-program serves any bipartite graph:
+  * :class:`ADMMConfig` (now an alias of :class:`engine.EngineConfig`, so
+    the layer-aware ``groups`` / ``censor_mode`` switches are available on
+    the flat path too),
+  * ``init_state(n_workers, dim, cfg)`` / ``make_step(graph, solver, cfg)``
+    with the seed's ``step(state, key)`` signature,
+  * ``run(graph, solver, cfg, dim, iters, ...)`` with the same metrics
+    (tx_mask, payload_bits, primal_residual, objective, dist_to_opt).
 
-  phase 1 (heads):  theta_H <- argmin f + <theta, alpha - rho * A theta_hat> + rho d/2 ||theta||^2
-                    quantize -> Q_hat, censor -> theta_hat_H
-  phase 2 (tails):  same, but neighbors see the *fresh* head theta_hat
-  dual:             alpha += rho * (D - A) theta_hat        (Eq. 23)
-
-The stepper is scanned with ``jax.lax.scan``; all communication metrics
-(transmission masks, exact payload bits) are emitted per iteration so the
-benchmark harness can reproduce the paper's Figs. 2-6 axes.
+Three orthogonal config switches cover the whole family (plus the Jacobian
+C-ADMM baseline in ``admm_baselines``): alternating head/tail groups vs
+Jacobian, censoring (tau0 > 0), stochastic quantization (quantize=True).
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import Any, Dict, Optional, Protocol, Tuple
+from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.censoring import CensorConfig, apply_censoring, censor_mask
-from repro.core.graph import WorkerGraph
-from repro.core.quantization import (QuantConfig, QuantizerState,
-                                     identity_quantize_step, quantize_step)
+from repro.core import engine as E
+from repro.core.engine import ExactSolver, PrimalSolver  # noqa: F401
 
-
-class PrimalSolver(Protocol):
-    def primal_solve(self, v: jax.Array, rho_d: jax.Array,
-                     theta_init: Optional[jax.Array] = None) -> jax.Array:
-        ...
-
-
-@dataclasses.dataclass(frozen=True)
-class ADMMConfig:
-    rho: float = 1.0
-    alternating: bool = True          # GADMM grouping; False => Jacobian ADMM
-    censor: CensorConfig = dataclasses.field(default_factory=CensorConfig)
-    quantize: Optional[QuantConfig] = None
-    use_pallas_mix: bool = False      # route A @ theta_hat through the kernel
-    use_pallas_quant: bool = False
-
-    @property
-    def name(self) -> str:
-        if not self.alternating:
-            return "c-admm" if self.censor.enabled else "jacobian-admm"
-        tag = "ggadmm"
-        if self.censor.enabled:
-            tag = "c-" + tag
-        if self.quantize is not None:
-            tag = ("cq-" + tag[2:]) if tag.startswith("c-") else "q-" + tag
-        return tag
-
-
-@jax.tree_util.register_dataclass
-@dataclasses.dataclass(frozen=True)
-class ADMMState:
-    theta: jax.Array        # (N, d) primal variables theta_n^k
-    theta_hat: jax.Array    # (N, d) last *transmitted* value (theta-tilde / theta-hat)
-    alpha: jax.Array        # (N, d) duals alpha_n^k = sum_m lambda_{n,m}
-    quant: QuantizerState   # quantizer replicas (inert when quantize=None)
-    k: jax.Array            # iteration counter
+# The engine config/state are the flat API's config/state: a bare (N, d)
+# array is a one-leaf pytree, ``opt_mu``/``opt_nu`` are empty for the exact
+# convex solvers.
+ADMMConfig = E.EngineConfig
+ADMMState = E.EngineState
 
 
 def init_state(n_workers: int, dim: int, cfg: ADMMConfig,
                dtype=jnp.float32) -> ADMMState:
-    qcfg = cfg.quantize or QuantConfig()
-    return ADMMState(
-        theta=jnp.zeros((n_workers, dim), dtype),
-        theta_hat=jnp.zeros((n_workers, dim), dtype),
-        alpha=jnp.zeros((n_workers, dim), dtype),   # alpha^0 = 0 in col(M_-)
-        quant=QuantizerState.create(n_workers, dim, b0=qcfg.b0, dtype=dtype),
-        k=jnp.zeros((), jnp.int32),
-    )
+    return E.init_state(jnp.zeros((n_workers, dim), dtype), cfg)
 
 
-def _neighbor_sum(adjacency: jax.Array, theta_hat: jax.Array,
-                  use_kernel: bool) -> jax.Array:
-    """sum_{m in N_n} theta_hat_m  =  A @ theta_hat."""
-    if use_kernel:
-        from repro.kernels import ops as kernel_ops
-        return kernel_ops.bipartite_mix(adjacency, theta_hat)
-    return adjacency @ theta_hat
-
-
-def _phase(state: ADMMState, group_mask: jax.Array, solver: PrimalSolver,
-           adjacency: jax.Array, rho_d: jax.Array, cfg: ADMMConfig,
-           key: jax.Array) -> Tuple[ADMMState, jax.Array, jax.Array]:
-    """One group's primal update + (quantize) + (censor) + commit.
-
-    Returns (new_state, tx_mask, payload_bits) restricted to `group_mask`
-    (zeros elsewhere).
-    """
-    rho = cfg.rho
-    neigh = _neighbor_sum(adjacency, state.theta_hat, cfg.use_pallas_mix)
-    if cfg.alternating:
-        # GGADMM primal, Eqs. (11)/(12)/(21)/(22):
-        #   min f + <theta, alpha - rho * A theta_hat> + rho d/2 ||theta||^2
-        v = state.alpha - rho * neigh
-        quad = rho_d
-    else:
-        # Jacobian C-ADMM primal (Liu et al., 2019b): proximal self-anchoring
-        #   min f + <theta, alpha> + rho sum_j ||theta - (th_i + th_j)/2||^2
-        # => quadratic coeff 2 rho d_i, linear alpha - rho (d_i th_i + A th).
-        v = state.alpha - rho_d[:, None] * state.theta_hat - rho * neigh
-        quad = 2.0 * rho_d
-    theta_new_full = solver.primal_solve(v, quad, theta_init=state.theta)
-    gm = group_mask[:, None]
-    theta = jnp.where(gm > 0, theta_new_full, state.theta)
-
-    if cfg.quantize is not None:
-        quant_new, candidate, _, payload = quantize_step(
-            state.quant, theta, key, cfg.quantize,
-            use_kernel=cfg.use_pallas_quant)
-    else:
-        quant_new, candidate, _, payload = identity_quantize_step(
-            state.quant, theta, key, QuantConfig())
-
-    k_next = state.k + 1
-    cmask = censor_mask(state.theta_hat, candidate, cfg.censor,
-                        k_next.astype(jnp.float32))
-    tx_mask = cmask * group_mask                        # only this group acts
-    theta_hat = apply_censoring(state.theta_hat, candidate, tx_mask)
-
-    # Commit quantizer state only for this group's workers (they are the ones
-    # that ran Eq. (20) this phase).
-    def commit(new, old):
-        if new.ndim == old.ndim == 2:
-            return jnp.where(gm > 0, new, old)
-        return jnp.where(group_mask > 0, new, old)
-
-    quant = jax.tree_util.tree_map(commit, quant_new, state.quant)
-    new_state = dataclasses.replace(state, theta=theta, theta_hat=theta_hat,
-                                    quant=quant)
-    return new_state, tx_mask, payload * group_mask
-
-
-def make_step(graph: WorkerGraph, solver: PrimalSolver, cfg: ADMMConfig):
-    """Build the jittable per-iteration step function.
-
-    step(state, key) -> (state, metrics) where metrics carries per-worker
-    transmission masks and payload bits plus residual diagnostics.
-    """
-    adjacency = jnp.asarray(graph.adjacency)
-    degrees = jnp.asarray(graph.degrees)
-    head = jnp.asarray(graph.head_mask, jnp.float32)
-    tail = 1.0 - head
-    rho_d = cfg.rho * degrees
+def make_step(graph, solver: PrimalSolver, cfg: ADMMConfig):
+    """Build the jittable per-iteration step with the seed's
+    ``step(state, key) -> (state, metrics)`` signature."""
+    engine_step = E.make_step(graph, cfg, ExactSolver(solver),
+                              extra_metrics=E.flat_metrics(graph))
 
     def step(state: ADMMState, key: jax.Array):
-        k1, k2 = jax.random.split(key)
-        if cfg.alternating:
-            state, tx_h, pay_h = _phase(state, head, solver, adjacency,
-                                        rho_d, cfg, k1)
-            state, tx_t, pay_t = _phase(state, tail, solver, adjacency,
-                                        rho_d, cfg, k2)
-            tx_mask = tx_h + tx_t
-            payload = pay_h + pay_t
-        else:
-            all_mask = jnp.ones_like(head)
-            state, tx_mask, payload = _phase(state, all_mask, solver,
-                                             adjacency, rho_d, cfg, k1)
-
-        # Dual update, Eq. (23): alpha += rho * (D - A) theta_hat.
-        lap = degrees[:, None] * state.theta_hat - adjacency @ state.theta_hat
-        alpha = state.alpha + cfg.rho * lap
-        state = dataclasses.replace(state, alpha=alpha, k=state.k + 1)
-
-        # Residual diagnostics (Eq. 28): sum over edges ||theta_n - theta_m||^2.
-        diffs = state.theta[:, None, :] - state.theta[None, :, :]
-        primal_res = jnp.sum(adjacency * jnp.sum(diffs ** 2, axis=-1)) / 2.0
-        metrics = {
-            "tx_mask": tx_mask,
-            "payload_bits": payload,
-            "primal_residual": primal_res,
-            "theta": state.theta,
-        }
-        return state, metrics
+        return engine_step(state, None, key)
 
     return step
 
 
-def run(graph: WorkerGraph, solver: PrimalSolver, cfg: ADMMConfig,
+def run(graph, solver: PrimalSolver, cfg: ADMMConfig,
         dim: int, iters: int, seed: int = 0,
         theta_star: Optional[jax.Array] = None,
         local_loss=None) -> Tuple[ADMMState, Dict[str, Any]]:
@@ -199,15 +64,10 @@ def run(graph: WorkerGraph, solver: PrimalSolver, cfg: ADMMConfig,
     If `local_loss` (callable (N,d)->(N,)) and/or `theta_star` are given,
     objective-gap and distance-to-optimum trajectories are included.
     """
-    state = init_state(graph.n, dim, cfg)
-    step = make_step(graph, solver, cfg)
-    keys = jax.random.split(jax.random.PRNGKey(seed), iters)
-
-    def body(carry, key):
-        new_state, m = step(carry, key)
-        return new_state, m
-
-    final_state, metrics = jax.lax.scan(body, state, keys)
+    theta0 = jnp.zeros((graph.n, dim), jnp.float32)
+    final_state, metrics = E.run(graph, cfg, ExactSolver(solver), theta0,
+                                 iters, seed=seed,
+                                 extra_metrics=E.flat_metrics(graph))
     out: Dict[str, Any] = {
         "tx_mask": metrics["tx_mask"],
         "payload_bits": metrics["payload_bits"],

@@ -22,7 +22,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import cq_ggadmm as cq
+from repro.core import engine as E
 from repro.core.graph import WorkerGraph, random_bipartite_graph
 
 
@@ -38,19 +38,21 @@ class DynamicTopology:
                                       seed=self.seed + phase)
 
 
-def run_dynamic(topology: DynamicTopology, solver, cfg: cq.ADMMConfig,
+def run_dynamic(topology: DynamicTopology, solver, cfg: E.EngineConfig,
                 dim: int, iters: int, seed: int = 0,
                 theta_star: Optional[jax.Array] = None,
-                local_loss=None) -> Tuple[cq.ADMMState, Dict[str, Any]]:
+                local_loss=None) -> Tuple[E.EngineState, Dict[str, Any]]:
     """Run (CQ-G)GADMM with the topology redrawn every `refresh_every`
     iterations. Metrics match ``cq_ggadmm.run``."""
-    state = cq.init_state(topology.n_workers, dim, cfg)
+    state = E.init_state(
+        jnp.zeros((topology.n_workers, dim), jnp.float32), cfg)
     outs = []
     key = jax.random.PRNGKey(seed)
     n_phases = -(-iters // topology.refresh_every)
     for phase in range(n_phases):
         graph = topology.graph_at(phase)
-        step = cq.make_step(graph, solver, cfg)
+        step = E.make_step(graph, cfg, E.ExactSolver(solver),
+                           extra_metrics=E.flat_metrics(graph))
         # dual re-initialization: alpha = 0 lies in col(M_-) of ANY graph
         state = dataclasses.replace(
             state, alpha=jnp.zeros_like(state.alpha))
@@ -58,7 +60,7 @@ def run_dynamic(topology: DynamicTopology, solver, cfg: cq.ADMMConfig,
                    iters - phase * topology.refresh_every)
         keys = jax.random.split(jax.random.fold_in(key, phase), span)
         state, metrics = jax.lax.scan(
-            lambda s, k: step(s, k), state, keys)
+            lambda s, k: step(s, None, k), state, keys)
         outs.append(metrics)
 
     stacked = {k: np.concatenate([np.asarray(o[k]) for o in outs])

@@ -1,0 +1,733 @@
+"""Layer-aware unified CQ-GGADMM consensus engine (DESIGN.md §Engine).
+
+One pytree-native stepper serves the paper's whole algorithm family —
+GGADMM / C-GGADMM / Q-GGADMM / CQ-GGADMM (Algorithms 1 and 2) and the
+Jacobian C-ADMM baseline — for every workload in the repo: a flat ``(N, d)``
+vector is just the trivial one-leaf pytree, a transformer parameter tree is
+the general case. The two seed steppers (``core/cq_ggadmm.py`` flat,
+``core/consensus.py`` pytree) are thin adapters over this module.
+
+Structure per iteration (vectorized over the leading worker axis N, group
+selection by masks so one traced program serves any bipartite graph):
+
+  phase 1 (heads):  theta_H <- local argmin of the augmented Lagrangian
+                    quantize (grouped) -> candidate, censor -> theta_hat_H
+  phase 2 (tails):  same, neighbors see the fresh head theta_hat
+  dual:             alpha += rho * (D - A) theta_hat            (Eq. 23)
+
+Two orthogonal generalizations beyond the seed steppers:
+
+* **Quantization groups** (L-FGADMM-style, Elgabli et al. 2019): the
+  quantizer side-information ``(R, b, Δ)`` is shaped ``(N, G)`` where G is
+  the number of groups. ``groups="model"`` (G=1) reproduces the paper's
+  whole-model quantization bit-for-bit; ``groups="leaf"`` (G=num_leaves)
+  gives per-layer ranges — each layer gets its own range R_g, bit growth
+  per Eq. (18) applied group-wise, and payload
+  ``sum_g b_g d_g + G * overhead`` (QSGD-style accounting). Layers with
+  small dynamic range stop paying for the largest layer's range.
+* **Censoring modes**: ``censor_mode="global"`` is the paper's single
+  whole-model norm test; ``censor_mode="group"`` (a new scenario) censors
+  each group independently with thresholds tau_g = tau * sqrt(d_g / d), so
+  quiet layers stay silent while hot layers still transmit. The transmitted
+  payload counts only the groups that pass.
+
+Local solvers are pluggable: :class:`ExactSolver` wraps the closed-form /
+Newton ``PrimalSolver`` objects of ``core/solvers.py`` (convex experiments);
+:class:`InexactSolver` runs K Adam/SGD steps on the augmented Lagrangian
+(neural workloads; the inexact-ADMM deviation recorded in DESIGN.md §5).
+
+PRNG compatibility note: when the parameter tree has exactly one leaf the
+stochastic-rounding uniforms are drawn with the phase key directly (no
+per-leaf split), which makes the G=1 flat path reproduce the seed
+``cq_ggadmm`` trajectories bit-for-bit (golden tests in
+``tests/test_engine.py``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Protocol, Sequence, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.censoring import CensorConfig, threshold
+from repro.core.graph import WorkerGraph
+from repro.core.quantization import QuantConfig, required_bits
+
+_EPS = 1e-12
+
+Tree = Any
+
+
+# ------------------------------------------------------------- tree utils --
+def tree_worker_dot(a: Tree, b: Tree) -> jax.Array:
+    """Per-worker inner product over all leaves: (N,)."""
+    parts = jax.tree_util.tree_map(
+        lambda x, y: jnp.sum((x.astype(jnp.float32) * y.astype(jnp.float32))
+                             .reshape(x.shape[0], -1), axis=-1), a, b)
+    return sum(jax.tree_util.tree_leaves(parts))
+
+
+def tree_worker_sqnorm(a: Tree) -> jax.Array:
+    return tree_worker_dot(a, a)
+
+
+def tree_worker_maxabs(a: Tree) -> jax.Array:
+    """Per-worker max |.| over all leaves: (N,)."""
+    parts = jax.tree_util.tree_map(
+        lambda x: jnp.max(jnp.abs(x.astype(jnp.float32))
+                          .reshape(x.shape[0], -1), axis=-1), a)
+    leaves = jax.tree_util.tree_leaves(parts)
+    return jnp.max(jnp.stack(leaves, axis=0), axis=0)
+
+
+def tree_dim(a: Tree) -> int:
+    """Total model dimension d (per worker)."""
+    leaves = jax.tree_util.tree_leaves(a)
+    return sum(int(x.size // x.shape[0]) for x in leaves)
+
+
+def tree_mix(adjacency: jax.Array, a: Tree, use_kernel: bool = False) -> Tree:
+    """Neighbor sum per leaf: out_n = sum_m A[n, m] leaf_m (optionally via
+    the Pallas ``bipartite_mix`` kernel, leaf-wise)."""
+    def mix(x):
+        flat = x.reshape(x.shape[0], -1)
+        if use_kernel:
+            from repro.kernels import ops as kernel_ops
+            out = kernel_ops.bipartite_mix(adjacency, flat)
+        else:
+            out = adjacency.astype(flat.dtype) @ flat
+        return out.reshape(x.shape)
+    return jax.tree_util.tree_map(mix, a)
+
+
+def tree_where_worker(mask: jax.Array, a: Tree, b: Tree) -> Tree:
+    """Select a_n where mask_n > 0 else b_n, leaf-wise."""
+    def sel(x, y):
+        m = mask.reshape((mask.shape[0],) + (1,) * (x.ndim - 1))
+        return jnp.where(m > 0, x, y)
+    return jax.tree_util.tree_map(sel, a, b)
+
+
+# ------------------------------------------------------- group resolution --
+GroupSpec = Union[str, Tuple[int, ...]]
+
+
+def resolve_groups(theta: Tree, groups: GroupSpec) -> Tuple[int, ...]:
+    """Leaf index -> group id, aligned with ``tree_leaves`` order.
+
+    ``"model"``: every leaf in group 0 (G=1, the paper's whole-model mode).
+    ``"leaf"``: leaf i in group i (G=num_leaves, L-FGADMM layer-wise mode).
+    Explicit tuple: validated contiguous ids ``0..G-1``.
+    """
+    n_leaves = len(jax.tree_util.tree_leaves(theta))
+    if groups == "model":
+        return (0,) * n_leaves
+    if groups == "leaf":
+        return tuple(range(n_leaves))
+    ids = tuple(int(g) for g in groups)
+    if len(ids) != n_leaves:
+        raise ValueError(f"group spec covers {len(ids)} leaves, "
+                         f"tree has {n_leaves}")
+    n_groups = max(ids) + 1
+    if set(ids) != set(range(n_groups)):
+        raise ValueError(f"group ids must be contiguous 0..G-1, got {ids}")
+    return ids
+
+
+def group_dims(theta: Tree, group_ids: Sequence[int]) -> Tuple[int, ...]:
+    """Per-group parameter counts d_g (static)."""
+    leaves = jax.tree_util.tree_leaves(theta)
+    dims = [0] * (max(group_ids) + 1)
+    for leaf, g in zip(leaves, group_ids):
+        dims[g] += int(leaf.size // leaf.shape[0])
+    return tuple(dims)
+
+
+def _group_reduce(per_leaf: Sequence[jax.Array], group_ids: Sequence[int],
+                  n_groups: int, reduce_fn) -> jax.Array:
+    """Combine per-leaf (N,) stats into (N, G) via reduce_fn over each group."""
+    cols = []
+    for g in range(n_groups):
+        members = [per_leaf[i] for i, gi in enumerate(group_ids) if gi == g]
+        cols.append(members[0] if len(members) == 1
+                    else reduce_fn(jnp.stack(members, axis=0)))
+    return jnp.stack(cols, axis=1)
+
+
+# ------------------------------------------------------ grouped quantizer --
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class GroupQuantState:
+    """Grouped quantizer state: q_hat mirrors the parameter pytree (leading
+    worker axis N); side-information ``(R, b, Δ)`` is ``(N, G)`` — one value
+    per worker per quantization group. G=1 is the paper's single
+    ``(R_n^k, b_n^k)`` per transmission.
+    """
+
+    q_hat: Tree
+    range_prev: jax.Array   # (N, G)
+    bits_prev: jax.Array    # (N, G)
+    delta_prev: jax.Array   # (N, G)
+    initialized: jax.Array  # (N, G)
+
+    @property
+    def n_groups(self) -> int:
+        return int(self.range_prev.shape[-1])
+
+    @staticmethod
+    def create(theta: Tree, n_groups: int, b0: int = 2,
+               hat_dtype=None) -> "GroupQuantState":
+        n = jax.tree_util.tree_leaves(theta)[0].shape[0]
+        return GroupQuantState(
+            q_hat=jax.tree_util.tree_map(
+                lambda x: jnp.zeros(x.shape, hat_dtype or x.dtype), theta),
+            range_prev=jnp.zeros((n, n_groups), jnp.float32),
+            bits_prev=jnp.full((n, n_groups), float(b0), jnp.float32),
+            delta_prev=jnp.zeros((n, n_groups), jnp.float32),
+            initialized=jnp.zeros((n, n_groups), jnp.float32),
+        )
+
+
+def _leaf_keys(key: jax.Array, n_leaves: int):
+    # Single-leaf trees use the phase key directly so the G=1 flat path is
+    # bit-identical to the seed flat stepper (see module docstring).
+    if n_leaves == 1:
+        return [key]
+    return list(jax.random.split(key, n_leaves))
+
+
+def grouped_quantize_step(
+    state: GroupQuantState, theta: Tree, key: jax.Array, cfg: QuantConfig,
+    group_ids: Sequence[int], use_kernel: bool = False,
+) -> Tuple[GroupQuantState, Tree, jax.Array, jax.Array]:
+    """One grouped stochastic-quantization round (Eqs. 14-20, group-wise).
+
+    Returns ``(new_state, candidate_tree, bits (N, G), payload (N,))`` where
+    payload = sum_g b_g d_g + G * overhead — each group ships its own
+    ``(R_g, b_g)`` side information.
+    """
+    leaves, treedef = jax.tree_util.tree_flatten(theta)
+    q_leaves = jax.tree_util.tree_leaves(state.q_hat)
+    n_groups = state.n_groups
+    dims = group_dims(theta, group_ids)
+
+    diff_maxabs = [jnp.max(jnp.abs(t.astype(jnp.float32)
+                                   - q.astype(jnp.float32))
+                           .reshape(t.shape[0], -1), axis=-1)
+                   for t, q in zip(leaves, q_leaves)]
+    range_new = _group_reduce(diff_maxabs, group_ids, n_groups,
+                              lambda s: jnp.max(s, axis=0))       # (N, G)
+    bits = required_bits(state.bits_prev, range_new, state.range_prev,
+                         cfg.omega, state.initialized, cfg.b0, cfg.b_max)
+    levels = jnp.exp2(bits) - 1.0
+    delta = 2.0 * range_new / jnp.maximum(levels, 1.0)            # (N, G)
+    degen = range_new <= _EPS                                     # (N, G)
+
+    keys = _leaf_keys(key, len(leaves))
+
+    def quant_leaf(t, q, k, g):
+        n = t.shape[0]
+        shape1 = (n,) + (1,) * (t.ndim - 1)
+        d_g = jnp.maximum(delta[:, g], _EPS)
+        r_g = range_new[:, g]
+        uniforms = jax.random.uniform(k, t.shape, jnp.float32)
+        if use_kernel:
+            from repro.kernels import ops as kernel_ops
+            flat = t.reshape(n, -1)
+            out = kernel_ops.stoch_quantize(
+                flat.astype(jnp.float32),
+                q.reshape(n, -1).astype(jnp.float32),
+                uniforms.reshape(n, -1), d_g, r_g)
+            return out.reshape(t.shape).astype(q.dtype)
+        sd = d_g.reshape(shape1)
+        r = r_g.reshape(shape1)
+        lv = levels[:, g].reshape(shape1)
+        c = (t.astype(jnp.float32) - q.astype(jnp.float32) + r) / sd  # Eq. 14
+        fl = jnp.floor(c)
+        qq = jnp.clip(fl + (uniforms < (c - fl)).astype(jnp.float32),
+                      0.0, lv)                                        # Eq. 15
+        return (q.astype(jnp.float32) + sd * qq - r).astype(q.dtype)  # Eq. 20
+
+    new_leaves = []
+    for i, (t, q, k) in enumerate(zip(leaves, q_leaves, keys)):
+        g = group_ids[i]
+        fresh = quant_leaf(t, q, k, g)
+        # degenerate group (nothing moved): keep the old reconstruction
+        m = degen[:, g].reshape((t.shape[0],) + (1,) * (t.ndim - 1))
+        new_leaves.append(jnp.where(m, q, fresh))
+    q_hat_new = jax.tree_util.tree_unflatten(treedef, new_leaves)
+
+    new_state = GroupQuantState(
+        q_hat=q_hat_new,
+        range_prev=jnp.where(degen, state.range_prev, range_new),
+        bits_prev=bits,
+        delta_prev=jnp.where(degen, state.delta_prev, delta),
+        initialized=jnp.ones_like(state.initialized),
+    )
+    dims_arr = jnp.asarray(dims, jnp.float32)
+    payload = jnp.sum(bits * dims_arr[None, :], axis=-1) \
+        + float(n_groups * cfg.b_overhead)
+    return new_state, q_hat_new, bits, payload
+
+
+def identity_quantize_step(
+    state: GroupQuantState, theta: Tree,
+) -> Tuple[GroupQuantState, Tree, jax.Array, jax.Array]:
+    """Unquantized pass-through with 32-bit payload accounting (GGADMM)."""
+    n = state.range_prev.shape[0]
+    q_cast = jax.tree_util.tree_map(
+        lambda t, q: t.astype(q.dtype), theta, state.q_hat)
+    new_state = dataclasses.replace(
+        state, q_hat=q_cast, initialized=jnp.ones_like(state.initialized))
+    bits = jnp.full_like(state.bits_prev, 32.0)
+    payload = jnp.full((n,), 32.0 * tree_dim(theta), jnp.float32)
+    return new_state, theta, bits, payload
+
+
+# -------------------------------------------------------------- solvers --
+class PrimalSolver(Protocol):
+    """Flat exact solver (core/solvers.py): batched argmin of
+    f_n + <theta, v_n> + quad_n/2 ||theta||^2 over (N, d) arrays."""
+
+    def primal_solve(self, v: jax.Array, rho_d: jax.Array,
+                     theta_init: Optional[jax.Array] = None) -> jax.Array:
+        ...
+
+
+class LocalSolver(Protocol):
+    """Engine-facing local solver over pytrees."""
+
+    def init_opt(self, theta: Tree) -> Tuple[Tree, Tree]:
+        ...
+
+    def solve(self, theta0: Tree, v: Tree, quad: jax.Array,
+              mu: Tree, nu: Tree, batch: Any) -> Tuple[Tree, Tree, Tree]:
+        ...
+
+
+def _flatten_worker(tree: Tree) -> jax.Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    n = leaves[0].shape[0]
+    if len(leaves) == 1:
+        return leaves[0].reshape(n, -1)
+    return jnp.concatenate([x.reshape(n, -1) for x in leaves], axis=1)
+
+
+def _unflatten_worker(flat: jax.Array, like: Tree) -> Tree:
+    leaves, treedef = jax.tree_util.tree_flatten(like)
+    out, off = [], 0
+    for x in leaves:
+        d = int(x.size // x.shape[0])
+        out.append(flat[:, off:off + d].reshape(x.shape).astype(x.dtype))
+        off += d
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+@dataclasses.dataclass(frozen=True)
+class ExactSolver:
+    """Adapter: a flat ``PrimalSolver`` (closed form / Newton) as the
+    engine's local solver. The tree is raveled per worker, solved as one
+    (N, d) system, and unraveled — for a one-leaf (N, d) tree this is the
+    identity transform, so numerics match the seed flat stepper exactly."""
+
+    problem: PrimalSolver
+
+    def init_opt(self, theta: Tree) -> Tuple[Tree, Tree]:
+        del theta
+        return (), ()
+
+    def solve(self, theta0, v, quad, mu, nu, batch):
+        del batch
+        flat = self.problem.primal_solve(
+            _flatten_worker(v), quad, theta_init=_flatten_worker(theta0))
+        return _unflatten_worker(flat, theta0), mu, nu
+
+
+@dataclasses.dataclass(frozen=True)
+class InexactSolver:
+    """K Adam (or SGD) steps on g(theta) = f(theta) + <theta, v> +
+    quad/2 ||theta||^2 — the inexact-ADMM local solver for non-convex f_n
+    (DESIGN.md §5). Optimizer moments persist across outer iterations."""
+
+    grad_fn: Optional[Callable[[Tree, Any], Tree]] = None
+    local_steps: int = 4
+    local_lr: float = 1e-3
+    use_adam: bool = True
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+
+    def init_opt(self, theta: Tree) -> Tuple[Tree, Tree]:
+        if not self.use_adam:
+            return (), ()
+        zeros = jax.tree_util.tree_map(
+            lambda x: jnp.zeros(x.shape, jnp.float32), theta)
+        return zeros, jax.tree_util.tree_map(jnp.copy, zeros)
+
+    def solve(self, theta0, v, quad, mu0, nu0, batch):
+        def aug_grad(th):
+            g = self.grad_fn(th, batch)
+
+            def one(gl, thl, vl):
+                shape1 = (thl.shape[0],) + (1,) * (thl.ndim - 1)
+                return (gl.astype(jnp.float32) + vl.astype(jnp.float32)
+                        + quad.reshape(shape1) * thl.astype(jnp.float32))
+            return jax.tree_util.tree_map(one, g, th, v)
+
+        if not self.use_adam:                      # plain SGD, no moments
+            def sgd_body(i, th):
+                g = aug_grad(th)
+                return jax.tree_util.tree_map(
+                    lambda p, gl: (p.astype(jnp.float32)
+                                   - self.local_lr * gl).astype(p.dtype),
+                    th, g)
+
+            th = jax.lax.fori_loop(0, self.local_steps, sgd_body, theta0)
+            return th, mu0, nu0
+
+        b1, b2, eps = self.b1, self.b2, self.eps
+
+        def body(i, carry):
+            th, mu, nu = carry
+            g = aug_grad(th)
+            t = i + 1.0
+            b1c = 1.0 - b1 ** t
+            b2c = 1.0 - b2 ** t
+
+            def upd(p, gl, m, vv):
+                m_new = b1 * m + (1 - b1) * gl
+                v_new = b2 * vv + (1 - b2) * jnp.square(gl)
+                step = (m_new / b1c) / (jnp.sqrt(v_new / b2c) + eps)
+                return ((p.astype(jnp.float32) - self.local_lr * step)
+                        .astype(p.dtype), m_new, v_new)
+
+            out = jax.tree_util.tree_map(upd, th, g, mu, nu)
+            is_triple = lambda o: isinstance(o, tuple)  # noqa: E731
+            th2 = jax.tree_util.tree_map(lambda o: o[0], out,
+                                         is_leaf=is_triple)
+            mu2 = jax.tree_util.tree_map(lambda o: o[1], out,
+                                         is_leaf=is_triple)
+            nu2 = jax.tree_util.tree_map(lambda o: o[2], out,
+                                         is_leaf=is_triple)
+            return th2, mu2, nu2
+
+        return jax.lax.fori_loop(0, self.local_steps, body,
+                                 (theta0, mu0, nu0))
+
+
+# ------------------------------------------------------------- the engine --
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    """Hyperparameters of the unified stepper.
+
+    ``groups``/``censor_mode`` are the layer-aware switches; everything else
+    matches the seed ``ADMMConfig`` (the flat adapter aliases this class).
+    """
+
+    rho: float = 1.0
+    alternating: bool = True          # GADMM grouping; False => Jacobian ADMM
+    censor: CensorConfig = dataclasses.field(default_factory=CensorConfig)
+    quantize: Optional[QuantConfig] = None
+    groups: GroupSpec = "model"       # "model" (G=1) | "leaf" | explicit ids
+    censor_mode: str = "global"       # "global" (paper) | "group" (new)
+    use_pallas_mix: bool = False      # route A @ theta_hat through the kernel
+    use_pallas_quant: bool = False
+    hat_dtype: Optional[str] = None   # narrow theta_hat/q_hat/alpha replicas
+
+    def __post_init__(self):
+        assert self.censor_mode in ("global", "group")
+
+    @property
+    def name(self) -> str:
+        if not self.alternating:
+            return "c-admm" if self.censor.enabled else "jacobian-admm"
+        tag = "ggadmm"
+        if self.censor.enabled:
+            tag = "c-" + tag
+        if self.quantize is not None:
+            tag = ("cq-" + tag[2:]) if tag.startswith("c-") else "q-" + tag
+        return tag
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class EngineState:
+    """Every per-worker quantity as the same pytree with leading axis N.
+
+    ``opt_mu``/``opt_nu`` are the local solver's persistent moments (empty
+    tuples for exact solvers). For the flat adapter theta IS the (N, d)
+    array — a bare array is a one-leaf pytree."""
+
+    theta: Tree          # per-worker primal theta_n^k
+    theta_hat: Tree      # last *transmitted* value per worker
+    alpha: Tree          # duals alpha_n^k
+    quant: GroupQuantState
+    opt_mu: Tree
+    opt_nu: Tree
+    k: jax.Array         # iteration counter
+
+
+def n_groups_of(theta: Tree, groups: GroupSpec) -> int:
+    return max(resolve_groups(theta, groups)) + 1
+
+
+def init_state(theta: Tree, cfg: EngineConfig,
+               solver: Optional[LocalSolver] = None) -> EngineState:
+    """Engine state from per-worker initial parameters (leading axis N)."""
+    qcfg = cfg.quantize or QuantConfig()
+    hat_dtype = jnp.dtype(cfg.hat_dtype) if cfg.hat_dtype else None
+    g = n_groups_of(theta, cfg.groups)
+    mu, nu = solver.init_opt(theta) if solver is not None else ((), ())
+
+    def hat_zeros(x):
+        return jnp.zeros(x.shape, hat_dtype or x.dtype)
+
+    return EngineState(
+        theta=theta,
+        theta_hat=jax.tree_util.tree_map(hat_zeros, theta),
+        alpha=jax.tree_util.tree_map(hat_zeros, theta),  # alpha^0 in col(M_-)
+        quant=GroupQuantState.create(theta, g, b0=qcfg.b0,
+                                     hat_dtype=hat_dtype),
+        opt_mu=mu,
+        opt_nu=nu,
+        k=jnp.zeros((), jnp.int32),
+    )
+
+
+def _censor_masks(state: EngineState, candidate: Tree, cfg: EngineConfig,
+                  group_ids: Sequence[int], n_groups: int,
+                  k_next: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Returns ``(worker_mask (N,), group_mask (N, G))`` censoring decisions."""
+    leaves = jax.tree_util.tree_leaves(candidate)
+    n = leaves[0].shape[0]
+    if not cfg.censor.enabled:
+        ones = jnp.ones((n,), jnp.float32)
+        return ones, jnp.ones((n, n_groups), jnp.float32)
+
+    diff = jax.tree_util.tree_map(
+        lambda c, h: c.astype(jnp.float32) - h.astype(jnp.float32),
+        candidate, state.theta_hat)
+    tau = threshold(cfg.censor, k_next)
+    if cfg.censor_mode == "global":
+        dleaves = jax.tree_util.tree_leaves(diff)
+        if len(dleaves) == 1 and dleaves[0].ndim == 2:
+            # bit-compatible with the seed flat path's jnp.linalg.norm
+            change = jnp.linalg.norm(dleaves[0], axis=-1)
+        else:
+            change = jnp.sqrt(tree_worker_sqnorm(diff))
+        cmask = (change >= tau).astype(jnp.float32)
+        return cmask, jnp.broadcast_to(cmask[:, None], (n, n_groups))
+
+    # per-group censoring: tau_g^2 proportional to d_g so the group
+    # thresholds partition the global budget (sum_g tau_g^2 = tau^2).
+    sq_leaves = [jnp.sum(jnp.square(x.astype(jnp.float32))
+                         .reshape(x.shape[0], -1), axis=-1)
+                 for x in jax.tree_util.tree_leaves(diff)]
+    change_g = jnp.sqrt(_group_reduce(sq_leaves, group_ids, n_groups,
+                                      lambda s: jnp.sum(s, axis=0)))
+    d_total = float(tree_dim(candidate))
+    dims = jnp.asarray(group_dims(candidate, group_ids), jnp.float32)
+    tau_g = tau * jnp.sqrt(dims / max(d_total, 1.0))
+    gmask = (change_g >= tau_g[None, :]).astype(jnp.float32)
+    return jnp.max(gmask, axis=-1), gmask
+
+
+def _phase(state: EngineState, phase_mask: jax.Array, solver: LocalSolver,
+           adjacency: jax.Array, rho_d: jax.Array, cfg: EngineConfig,
+           key: jax.Array, batch: Any,
+           ) -> Tuple[EngineState, jax.Array, jax.Array, jax.Array]:
+    """One group's primal update + (grouped quantize) + (censor) + commit.
+
+    Returns ``(new_state, tx_mask (N,), payload_bits (N,), bits (N, G),
+    group_tx (N, G))`` restricted to ``phase_mask`` (zeros elsewhere).
+    """
+    group_ids = resolve_groups(state.theta, cfg.groups)
+    n_groups = max(group_ids) + 1
+    rho = cfg.rho
+    neigh = tree_mix(adjacency, state.theta_hat,
+                     use_kernel=cfg.use_pallas_mix)
+
+    if cfg.alternating:
+        # GGADMM primal, Eqs. (11)/(12)/(21)/(22)
+        v = jax.tree_util.tree_map(
+            lambda a, nm: a.astype(jnp.float32)
+            - rho * nm.astype(jnp.float32), state.alpha, neigh)
+        quad = rho_d
+    else:
+        # Jacobian C-ADMM primal (Liu et al., 2019b): proximal self-anchor
+        def jac_v(a, th, nm):
+            shape1 = (th.shape[0],) + (1,) * (th.ndim - 1)
+            return (a.astype(jnp.float32)
+                    - rho_d.reshape(shape1) * th.astype(jnp.float32)
+                    - rho * nm.astype(jnp.float32))
+        v = jax.tree_util.tree_map(jac_v, state.alpha, state.theta_hat,
+                                   neigh)
+        quad = 2.0 * rho_d
+
+    theta_full, mu_full, nu_full = solver.solve(
+        state.theta, v, quad, state.opt_mu, state.opt_nu, batch)
+    theta = tree_where_worker(phase_mask, theta_full, state.theta)
+    mu = tree_where_worker(phase_mask, mu_full, state.opt_mu)
+    nu = tree_where_worker(phase_mask, nu_full, state.opt_nu)
+
+    if cfg.quantize is not None:
+        quant_new, candidate, bits, payload = grouped_quantize_step(
+            state.quant, theta, key, cfg.quantize, group_ids,
+            use_kernel=cfg.use_pallas_quant)
+    else:
+        quant_new, candidate, bits, payload = identity_quantize_step(
+            state.quant, theta)
+
+    k_next = (state.k + 1).astype(jnp.float32)
+    cmask, group_cmask = _censor_masks(state, candidate, cfg, group_ids,
+                                       n_groups, k_next)
+    tx_mask = cmask * phase_mask                   # only this phase acts
+    group_tx = group_cmask * phase_mask[:, None]
+    if cfg.censor_mode == "group" and cfg.censor.enabled:
+        # payload counts only the transmitted groups (+ their overhead)
+        dims = jnp.asarray(group_dims(theta, group_ids), jnp.float32)
+        overhead = float(cfg.quantize.b_overhead) \
+            if cfg.quantize is not None else 0.0
+        per_group = bits * dims[None, :] + overhead
+        payload = jnp.sum(per_group * group_cmask, axis=-1)
+
+    # theta_hat: each leaf commits where its group transmitted
+    hat_leaves, treedef = jax.tree_util.tree_flatten(state.theta_hat)
+    cand_leaves = jax.tree_util.tree_leaves(candidate)
+    new_hat = []
+    for i, (h, c) in enumerate(zip(hat_leaves, cand_leaves)):
+        m = group_tx[:, group_ids[i]].reshape(
+            (h.shape[0],) + (1,) * (h.ndim - 1))
+        new_hat.append(jnp.where(m > 0, c.astype(h.dtype), h))
+    theta_hat = jax.tree_util.tree_unflatten(treedef, new_hat)
+
+    # quantizer replicas advance for the acting phase's workers only (they
+    # ran Eq. (20) this phase; censoring does not roll the chain back).
+    pm_col = phase_mask[:, None]
+    quant = GroupQuantState(
+        q_hat=tree_where_worker(phase_mask, quant_new.q_hat,
+                                state.quant.q_hat),
+        range_prev=jnp.where(pm_col > 0, quant_new.range_prev,
+                             state.quant.range_prev),
+        bits_prev=jnp.where(pm_col > 0, quant_new.bits_prev,
+                            state.quant.bits_prev),
+        delta_prev=jnp.where(pm_col > 0, quant_new.delta_prev,
+                             state.quant.delta_prev),
+        initialized=jnp.where(pm_col > 0, quant_new.initialized,
+                              state.quant.initialized),
+    )
+    new_state = dataclasses.replace(state, theta=theta, theta_hat=theta_hat,
+                                    quant=quant, opt_mu=mu, opt_nu=nu)
+    return (new_state, tx_mask, payload * phase_mask, bits * pm_col,
+            group_tx)
+
+
+MetricsFn = Callable[[EngineState, Any], Dict[str, jax.Array]]
+
+
+def make_step(graph: WorkerGraph, cfg: EngineConfig, solver: LocalSolver,
+              extra_metrics: Optional[MetricsFn] = None):
+    """Build the jittable per-iteration engine step.
+
+    ``step(state, batch, key) -> (state, metrics)``; ``batch`` is forwarded
+    to the local solver (None for data-free exact solvers). Metrics always
+    carry per-worker ``tx_mask`` and ``payload_bits`` plus the layer-aware
+    ``group_tx``/``bits_per_group`` diagnostics; ``extra_metrics(state,
+    batch)`` appends problem-specific entries (residuals, losses).
+    """
+    adjacency = jnp.asarray(graph.adjacency)
+    degrees = jnp.asarray(graph.degrees)
+    head = jnp.asarray(graph.head_mask, jnp.float32)
+    tail = 1.0 - head
+    rho_d = cfg.rho * degrees
+
+    def step(state: EngineState, batch, key: jax.Array):
+        k1, k2 = jax.random.split(key)
+        if cfg.alternating:
+            state, tx_h, pay_h, bits_h, gtx_h = _phase(
+                state, head, solver, adjacency, rho_d, cfg, k1, batch)
+            state, tx_t, pay_t, bits_t, gtx_t = _phase(
+                state, tail, solver, adjacency, rho_d, cfg, k2, batch)
+            tx_mask = tx_h + tx_t
+            payload = pay_h + pay_t
+            bits_g = bits_h + bits_t
+            group_tx = gtx_h + gtx_t
+        else:
+            all_mask = jnp.ones_like(head)
+            state, tx_mask, payload, bits_g, group_tx = _phase(
+                state, all_mask, solver, adjacency, rho_d, cfg, k1, batch)
+
+        # Dual update, Eq. (23): alpha += rho * (D - A) theta_hat.
+        neigh = tree_mix(adjacency, state.theta_hat)
+
+        def dual(a, th, nm):
+            shape1 = (th.shape[0],) + (1,) * (th.ndim - 1)
+            lap = (degrees.reshape(shape1) * th.astype(jnp.float32)
+                   - nm.astype(jnp.float32))
+            return (a.astype(jnp.float32) + cfg.rho * lap).astype(a.dtype)
+
+        alpha = jax.tree_util.tree_map(dual, state.alpha, state.theta_hat,
+                                       neigh)
+        state = dataclasses.replace(state, alpha=alpha, k=state.k + 1)
+
+        metrics = {
+            "tx_mask": tx_mask,
+            "payload_bits": payload,
+            "bits_per_group": bits_g,
+            "group_tx": group_tx,
+        }
+        if extra_metrics is not None:
+            metrics.update(extra_metrics(state, batch))
+        return state, metrics
+
+    return step
+
+
+def flat_metrics(graph: WorkerGraph) -> MetricsFn:
+    """Seed flat-stepper diagnostics: pairwise primal residual (Eq. 28) and
+    the theta trajectory (for objective / distance-to-optimum curves)."""
+    adjacency = jnp.asarray(graph.adjacency)
+
+    def fn(state: EngineState, batch) -> Dict[str, jax.Array]:
+        del batch
+        theta = _flatten_worker(state.theta)
+        diffs = theta[:, None, :] - theta[None, :, :]
+        primal_res = jnp.sum(adjacency * jnp.sum(diffs ** 2, axis=-1)) / 2.0
+        return {"primal_residual": primal_res, "theta": theta}
+
+    return fn
+
+
+def consensus_metrics(loss_fn: Optional[Callable] = None) -> MetricsFn:
+    """Training diagnostics: deviation from the worker mean (+ loss)."""
+
+    def fn(state: EngineState, batch) -> Dict[str, jax.Array]:
+        mean_theta = jax.tree_util.tree_map(
+            lambda x: jnp.mean(x.astype(jnp.float32), axis=0, keepdims=True),
+            state.theta)
+        dev = jax.tree_util.tree_map(
+            lambda x, m: x.astype(jnp.float32) - m, state.theta, mean_theta)
+        out = {"consensus_err": jnp.sum(tree_worker_sqnorm(dev))}
+        if loss_fn is not None:
+            out["loss"] = loss_fn(state.theta, batch)
+        return out
+
+    return fn
+
+
+def run(graph: WorkerGraph, cfg: EngineConfig, solver: LocalSolver,
+        theta0: Tree, iters: int, seed: int = 0,
+        extra_metrics: Optional[MetricsFn] = None,
+        ) -> Tuple[EngineState, Dict[str, jax.Array]]:
+    """Scan the engine step for ``iters`` iterations (batch-free problems)
+    and return the final state plus stacked per-iteration metrics."""
+    state = init_state(theta0, cfg, solver)
+    step = make_step(graph, cfg, solver, extra_metrics)
+    keys = jax.random.split(jax.random.PRNGKey(seed), iters)
+
+    def body(carry, key):
+        new_state, m = step(carry, None, key)
+        return new_state, m
+
+    return jax.lax.scan(body, state, keys)

@@ -1,0 +1,160 @@
+"""FROZEN seed flat stepper — golden reference, do not modify.
+
+This is a verbatim copy of the repo's original flat ``(N, d)`` CQ-GGADMM
+stepper (``core/cq_ggadmm.py`` before the engine refactor). It exists so
+that ``tests/test_engine.py`` and ``benchmarks/bench_engine.py`` can assert
+that the unified engine (``core/engine.py``) with a one-leaf pytree and
+G=1 reproduces the seed trajectories bit-for-bit, and so the benchmark can
+measure engine overhead against the original hot path.
+
+It consumes the same config object as the engine (it only reads the fields
+the seed ``ADMMConfig`` had: rho / alternating / censor / quantize /
+use_pallas_mix / use_pallas_quant).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.censoring import apply_censoring, censor_mask
+from repro.core.graph import WorkerGraph
+from repro.core.quantization import (QuantConfig, QuantizerState,
+                                     identity_quantize_step, quantize_step)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class SeedState:
+    theta: jax.Array        # (N, d) primal variables theta_n^k
+    theta_hat: jax.Array    # (N, d) last *transmitted* value
+    alpha: jax.Array        # (N, d) duals
+    quant: QuantizerState   # quantizer replicas (inert when quantize=None)
+    k: jax.Array            # iteration counter
+
+
+def init_state(n_workers: int, dim: int, cfg,
+               dtype=jnp.float32) -> SeedState:
+    qcfg = cfg.quantize or QuantConfig()
+    return SeedState(
+        theta=jnp.zeros((n_workers, dim), dtype),
+        theta_hat=jnp.zeros((n_workers, dim), dtype),
+        alpha=jnp.zeros((n_workers, dim), dtype),
+        quant=QuantizerState.create(n_workers, dim, b0=qcfg.b0, dtype=dtype),
+        k=jnp.zeros((), jnp.int32),
+    )
+
+
+def _neighbor_sum(adjacency: jax.Array, theta_hat: jax.Array,
+                  use_kernel: bool) -> jax.Array:
+    if use_kernel:
+        from repro.kernels import ops as kernel_ops
+        return kernel_ops.bipartite_mix(adjacency, theta_hat)
+    return adjacency @ theta_hat
+
+
+def _phase(state: SeedState, group_mask: jax.Array, solver,
+           adjacency: jax.Array, rho_d: jax.Array, cfg,
+           key: jax.Array) -> Tuple[SeedState, jax.Array, jax.Array]:
+    rho = cfg.rho
+    neigh = _neighbor_sum(adjacency, state.theta_hat, cfg.use_pallas_mix)
+    if cfg.alternating:
+        v = state.alpha - rho * neigh
+        quad = rho_d
+    else:
+        v = state.alpha - rho_d[:, None] * state.theta_hat - rho * neigh
+        quad = 2.0 * rho_d
+    theta_new_full = solver.primal_solve(v, quad, theta_init=state.theta)
+    gm = group_mask[:, None]
+    theta = jnp.where(gm > 0, theta_new_full, state.theta)
+
+    if cfg.quantize is not None:
+        quant_new, candidate, _, payload = quantize_step(
+            state.quant, theta, key, cfg.quantize,
+            use_kernel=cfg.use_pallas_quant)
+    else:
+        quant_new, candidate, _, payload = identity_quantize_step(
+            state.quant, theta, key, QuantConfig())
+
+    k_next = state.k + 1
+    cmask = censor_mask(state.theta_hat, candidate, cfg.censor,
+                        k_next.astype(jnp.float32))
+    tx_mask = cmask * group_mask
+    theta_hat = apply_censoring(state.theta_hat, candidate, tx_mask)
+
+    def commit(new, old):
+        if new.ndim == old.ndim == 2:
+            return jnp.where(gm > 0, new, old)
+        return jnp.where(group_mask > 0, new, old)
+
+    quant = jax.tree_util.tree_map(commit, quant_new, state.quant)
+    new_state = dataclasses.replace(state, theta=theta, theta_hat=theta_hat,
+                                    quant=quant)
+    return new_state, tx_mask, payload * group_mask
+
+
+def make_step(graph: WorkerGraph, solver, cfg):
+    adjacency = jnp.asarray(graph.adjacency)
+    degrees = jnp.asarray(graph.degrees)
+    head = jnp.asarray(graph.head_mask, jnp.float32)
+    tail = 1.0 - head
+    rho_d = cfg.rho * degrees
+
+    def step(state: SeedState, key: jax.Array):
+        k1, k2 = jax.random.split(key)
+        if cfg.alternating:
+            state, tx_h, pay_h = _phase(state, head, solver, adjacency,
+                                        rho_d, cfg, k1)
+            state, tx_t, pay_t = _phase(state, tail, solver, adjacency,
+                                        rho_d, cfg, k2)
+            tx_mask = tx_h + tx_t
+            payload = pay_h + pay_t
+        else:
+            all_mask = jnp.ones_like(head)
+            state, tx_mask, payload = _phase(state, all_mask, solver,
+                                             adjacency, rho_d, cfg, k1)
+
+        lap = degrees[:, None] * state.theta_hat - adjacency @ state.theta_hat
+        alpha = state.alpha + cfg.rho * lap
+        state = dataclasses.replace(state, alpha=alpha, k=state.k + 1)
+
+        diffs = state.theta[:, None, :] - state.theta[None, :, :]
+        primal_res = jnp.sum(adjacency * jnp.sum(diffs ** 2, axis=-1)) / 2.0
+        metrics = {
+            "tx_mask": tx_mask,
+            "payload_bits": payload,
+            "primal_residual": primal_res,
+            "theta": state.theta,
+        }
+        return state, metrics
+
+    return step
+
+
+def run(graph: WorkerGraph, solver, cfg, dim: int, iters: int, seed: int = 0,
+        theta_star: Optional[jax.Array] = None,
+        local_loss=None) -> Tuple[SeedState, Dict[str, Any]]:
+    state = init_state(graph.n, dim, cfg)
+    step = make_step(graph, solver, cfg)
+    keys = jax.random.split(jax.random.PRNGKey(seed), iters)
+
+    def body(carry, key):
+        new_state, m = step(carry, key)
+        return new_state, m
+
+    final_state, metrics = jax.lax.scan(body, state, keys)
+    out: Dict[str, Any] = {
+        "tx_mask": metrics["tx_mask"],
+        "payload_bits": metrics["payload_bits"],
+        "primal_residual": metrics["primal_residual"],
+    }
+    thetas = metrics["theta"]
+    if local_loss is not None:
+        out["objective"] = jax.vmap(lambda th: jnp.sum(local_loss(th)))(thetas)
+    if theta_star is not None:
+        err = thetas - theta_star[None, None, :]
+        out["dist_to_opt"] = jnp.sum(err ** 2, axis=(1, 2))
+    return final_state, jax.tree_util.tree_map(np.asarray, out)

@@ -21,7 +21,7 @@ import numpy as np
 
 from repro.checkpoint import npz as ckpt
 from repro.configs import base
-from repro.core import consensus as CC
+from repro.core import engine as E
 from repro.core.censoring import CensorConfig
 from repro.core.quantization import QuantConfig
 from repro.data.lm import SyntheticLM, SyntheticLMConfig, model_batch
@@ -32,20 +32,14 @@ from repro.runtime import steps as ST
 
 def run_admm(cfg, args) -> dict:
     graph = ST.worker_graph(args.workers, args.topology)
-    ccfg = CC.ConsensusConfig(
+    ecfg = E.EngineConfig(
         rho=args.rho,
         censor=CensorConfig(tau0=args.tau0, xi=args.xi)
         if args.tau0 > 0 else CensorConfig(),
         quantize=QuantConfig(b0=args.bits, omega=args.omega)
         if args.quantize else None,
-        local_steps=args.local_steps, local_lr=args.lr)
-
-    # identical worker initialization (the paper's theta_n^0 = 0 analog —
-    # one shared init; workers diverge only through their local data)
-    one = registry.init_params(cfg, jax.random.PRNGKey(args.seed))
-    params = jax.tree_util.tree_map(
-        lambda x: jnp.broadcast_to(x[None], (args.workers,) + x.shape), one)
-    state = CC.init_consensus_state(params, ccfg)
+        groups=args.groups,
+        censor_mode=args.censor_mode)
 
     def grad_fn(theta, batch):
         return jax.vmap(lambda p, b: jax.grad(
@@ -55,7 +49,19 @@ def run_admm(cfg, args) -> dict:
         return jnp.mean(jax.vmap(
             lambda p, b: registry.lm_loss(p, cfg, b)[0])(theta, batch))
 
-    step = jax.jit(CC.make_consensus_step(graph, ccfg, grad_fn, loss_fn))
+    solver = E.InexactSolver(grad_fn=grad_fn, local_steps=args.local_steps,
+                             local_lr=args.lr)
+
+    # identical worker initialization (the paper's theta_n^0 = 0 analog —
+    # one shared init; workers diverge only through their local data)
+    one = registry.init_params(cfg, jax.random.PRNGKey(args.seed))
+    params = jax.tree_util.tree_map(
+        lambda x: jnp.broadcast_to(x[None], (args.workers,) + x.shape), one)
+    state = E.init_state(params, ecfg, solver)
+    n_groups = state.quant.n_groups
+
+    step = jax.jit(E.make_step(graph, ecfg, solver,
+                               extra_metrics=E.consensus_metrics(loss_fn)))
     data = SyntheticLM(SyntheticLMConfig(cfg.vocab_size, args.seq,
                                          seed=args.seed))
     total_bits = 0.0
@@ -67,11 +73,13 @@ def run_admm(cfg, args) -> dict:
         state, m = step(state, batch, jax.random.PRNGKey(1000 + i))
         bits = float((m["payload_bits"] * m["tx_mask"]).sum())
         total_bits += bits
+        mean_bits = float(np.asarray(m["bits_per_group"]).mean())
         history.append(float(m["loss"]))
         if i % args.log_every == 0 or i == args.steps - 1:
             print(f"step {i:4d}  loss={float(m['loss']):.4f}  "
                   f"consensus_err={float(m['consensus_err']):.3e}  "
                   f"tx={int(m['tx_mask'].sum())}/{args.workers}  "
+                  f"groups={n_groups}  b/group={mean_bits:.1f}  "
                   f"cum_bits={total_bits:.3e}  "
                   f"({(time.time() - t0) / (i + 1):.2f}s/step)")
         if args.ckpt_dir and (i + 1) % args.ckpt_every == 0:
@@ -79,7 +87,7 @@ def run_admm(cfg, args) -> dict:
     if args.ckpt_dir:
         ckpt.save(args.ckpt_dir, args.steps, state.theta)
     return {"final_loss": history[-1], "history": history,
-            "total_bits": total_bits}
+            "total_bits": total_bits, "n_groups": n_groups}
 
 
 def run_fsdp(cfg, args) -> dict:
@@ -134,6 +142,13 @@ def main(argv=None) -> dict:
     ap.add_argument("--xi", type=float, default=0.995)
     ap.add_argument("--quantize", action="store_true", default=True)
     ap.add_argument("--no-quantize", dest="quantize", action="store_false")
+    ap.add_argument("--groups", default="model", choices=("model", "leaf"),
+                    help="quantization groups: 'model' = paper's whole-model"
+                         " mode (G=1), 'leaf' = L-FGADMM per-layer ranges")
+    ap.add_argument("--censor-mode", default="global",
+                    choices=("global", "group"),
+                    help="'global' = paper's whole-model censor norm; "
+                         "'group' = per-group censoring (new scenario)")
     ap.add_argument("--bits", type=int, default=4)
     ap.add_argument("--omega", type=float, default=0.999)
     ap.add_argument("--seed", type=int, default=0)

@@ -32,7 +32,7 @@ import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec
 
 from repro.configs.base import INPUT_SHAPES, ModelConfig, ShapeConfig
-from repro.core import consensus as CC
+from repro.core import engine as E
 from repro.core import graph as G
 from repro.core.censoring import CensorConfig
 from repro.core.quantization import QuantConfig
@@ -88,24 +88,31 @@ def _batch_axes(multi_pod: bool):
     return ("pod", "data") if multi_pod else ("data",)
 
 
-def _consensus_cfg(arch: str, multi_pod: bool) -> CC.ConsensusConfig:
-    """Production ADMM config. The REPRO_ADMM_* env knobs drive the §Perf
-    iterations (the dry-run re-lowers with a knob flipped and compares
-    roofline terms)."""
+def _consensus_cfg(arch: str, multi_pod: bool
+                   ) -> Tuple[E.EngineConfig, E.InexactSolver]:
+    """Production ADMM engine config + local solver. The REPRO_ADMM_* env
+    knobs drive the §Perf iterations (the dry-run re-lowers with a knob
+    flipped and compares roofline terms); REPRO_ADMM_GROUPS=leaf opts into
+    the L-FGADMM layer-wise quantization mode (DESIGN.md §Groups)."""
     import os
     lean = arch in GIANT_ARCHS     # 314B: SGD local solver + bf16 replicas
     hat = os.environ.get("REPRO_ADMM_HAT_DTYPE",
                          "bfloat16" if lean else "")
-    return CC.ConsensusConfig(
+    cfg = E.EngineConfig(
         rho=0.01,
         censor=CensorConfig(tau0=5.0, xi=0.995),
         quantize=QuantConfig(b0=4, omega=0.999),
+        groups=os.environ.get("REPRO_ADMM_GROUPS", "model"),
+        censor_mode=os.environ.get("REPRO_ADMM_CENSOR_MODE", "global"),
+        hat_dtype=hat or None,
+    )
+    solver = E.InexactSolver(
         local_steps=int(os.environ.get("REPRO_ADMM_LOCAL_STEPS", "4")),
         local_lr=1e-3,
         use_adam=(not lean) and not int(
             os.environ.get("REPRO_ADMM_SGD", "0")),
-        hat_dtype=hat or None,
     )
+    return cfg, solver
 
 
 def worker_graph(n_workers: int, topology: str = "random") -> G.WorkerGraph:
@@ -204,21 +211,25 @@ def make_fsdp_train_bundle(cfg: ModelConfig, shape: ShapeConfig, mesh, *,
 # ------------------------------------------------------------ admm train --
 def make_admm_train_bundle(cfg: ModelConfig, shape: ShapeConfig, mesh, *,
                            multi_pod: bool, arch: Optional[str] = None,
-                           ccfg: Optional[CC.ConsensusConfig] = None,
+                           ecfg: Optional[E.EngineConfig] = None,
+                           solver: Optional[E.InexactSolver] = None,
                            topology: str = "random",
                            name: str = "") -> StepBundle:
     """The paper's technique as the production train step.
 
     Single pod: 16 ADMM workers along the "data" axis (each worker a full
     TP-sharded replica). Multi-pod: pods ARE the workers — the censored,
-    quantized exchanges ride exactly the slow inter-pod links.
+    quantized exchanges ride exactly the slow inter-pod links. Built on the
+    unified engine: ``ecfg.groups="leaf"`` turns on per-layer quantization.
     """
     worker_axis = "pod" if multi_pod else "data"
     inner_axis = "data" if multi_pod else None   # per-worker batch sharding
     fsdp_axis = "data" if multi_pod else None
     n_workers = mesh.shape[worker_axis]
     graph = worker_graph(n_workers, topology)
-    ccfg = ccfg or _consensus_cfg(arch or cfg.name, multi_pod)
+    default_cfg, default_solver = _consensus_cfg(arch or cfg.name, multi_pod)
+    ecfg = ecfg or default_cfg
+    solver = solver or default_solver
     rules = SH.activation_rules(mesh, cfg, batch_axes=(inner_axis,)
                                 if inner_axis else (), worker_mode=True)
 
@@ -228,7 +239,7 @@ def make_admm_train_bundle(cfg: ModelConfig, shape: ShapeConfig, mesh, *,
     stacked_shapes = jax.tree_util.tree_map(
         lambda x: _sds((n_workers,) + x.shape, x.dtype), param_shapes)
     state_shapes = jax.eval_shape(
-        lambda t: CC.init_consensus_state(t, ccfg), stacked_shapes)
+        lambda t: E.init_state(t, ecfg, solver), stacked_shapes)
 
     p_shard_stacked = SH.params_shardings(
         stacked_shapes, mesh, cfg, worker_axis=worker_axis,
@@ -237,12 +248,12 @@ def make_admm_train_bundle(cfg: ModelConfig, shape: ShapeConfig, mesh, *,
     def worker_vec(_):
         return NamedSharding(mesh, PartitionSpec(worker_axis))
 
-    quant_shard = CC.TreeQuantState(
+    quant_shard = E.GroupQuantState(
         q_hat=p_shard_stacked,
         range_prev=worker_vec(None), bits_prev=worker_vec(None),
         delta_prev=worker_vec(None), initialized=worker_vec(None))
-    opt_shard = p_shard_stacked if ccfg.use_adam else ()
-    state_shard = CC.ConsensusState(
+    opt_shard = p_shard_stacked if solver.use_adam else ()
+    state_shard = E.EngineState(
         theta=p_shard_stacked, theta_hat=p_shard_stacked,
         alpha=p_shard_stacked, quant=quant_shard,
         opt_mu=opt_shard,
@@ -272,7 +283,9 @@ def make_admm_train_bundle(cfg: ModelConfig, shape: ShapeConfig, mesh, *,
             return registry.lm_loss(p, cfg, b)[0]
         return jnp.mean(jax.vmap(one)(theta, batch))
 
-    inner_step = CC.make_consensus_step(graph, ccfg, grad_fn, loss_fn)
+    inner_step = E.make_step(graph, ecfg, dataclasses.replace(
+        solver, grad_fn=grad_fn),
+        extra_metrics=E.consensus_metrics(loss_fn))
 
     def train_step(state, batch, key):
         with P.logical_sharding(mesh, rules):

@@ -5,6 +5,13 @@ import numpy as np
 import pytest
 
 
+def pytest_configure(config):
+    # also declared in pyproject.toml; kept here so running pytest from a
+    # different rootdir still knows the marker
+    config.addinivalue_line(
+        "markers", "slow: heavy convergence / end-to-end / compile tests")
+
+
 @pytest.fixture(scope="session")
 def rng():
     return np.random.default_rng(0)

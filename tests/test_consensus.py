@@ -83,7 +83,9 @@ def test_consensus_converges_to_mean(variant):
         censor=CensorConfig(tau0=1.0, xi=0.9) if variant != "plain"
         else CensorConfig(),
         quantize=QuantConfig(b0=6, omega=0.99) if variant == "cq" else None,
-        local_steps=10, local_lr=0.3)
+        # lr 0.1: Adam at 0.3 oscillates around a ~4e-2 consensus-error
+        # plateau and never settles below the assertion threshold
+        local_steps=10, local_lr=0.1)
     theta0 = jax.tree_util.tree_map(jnp.zeros_like, targets)
     state = C.init_consensus_state(theta0, ccfg)
     step = jax.jit(C.make_consensus_step(g, ccfg, grad_fn))

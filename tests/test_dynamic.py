@@ -1,6 +1,7 @@
 """D-GGADMM (time-varying topology) extension."""
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.core import admm_baselines as ab
 from repro.core.dynamic import DynamicTopology, run_dynamic
@@ -14,6 +15,7 @@ def _problem(n_workers=12):
     return LinearRegressionProblem(jnp.asarray(x), jnp.asarray(y))
 
 
+@pytest.mark.slow
 def test_dynamic_topology_converges():
     prob = _problem()
     topo = DynamicTopology(n_workers=12, p=0.35, refresh_every=40, seed=0)
@@ -27,6 +29,7 @@ def test_dynamic_topology_converges():
     assert out["dist_to_opt"][-1] < out["dist_to_opt"][30]
 
 
+@pytest.mark.slow
 def test_dynamic_topology_with_cq():
     prob = _problem()
     topo = DynamicTopology(n_workers=12, p=0.4, refresh_every=50, seed=1)

@@ -8,6 +8,7 @@ from repro.launch import serve as serve_mod
 from repro.launch import train as train_mod
 
 
+@pytest.mark.slow
 def test_train_admm_end_to_end(tmp_path):
     out = train_mod.main([
         "--arch", "tinyllama-1.1b", "--smoke", "--mode", "admm",
@@ -37,6 +38,7 @@ def test_serve_end_to_end():
     assert out["tokens"].shape == (2, 5)
 
 
+@pytest.mark.slow
 def test_quantized_admm_moves_fewer_bits():
     common = ["--arch", "tinyllama-1.1b", "--smoke", "--mode", "admm",
               "--workers", "2", "--steps", "4", "--batch", "4",
