@@ -67,7 +67,7 @@ for groups in ("model", "leaf"):
     total_bits = 0.0
     for i in range(60):
         state, m = step(state, None, jax.random.PRNGKey(i))
-        total_bits += float((m["payload_bits"] * m["tx_mask"]).sum())
+        total_bits += float(m["payload_bits"].sum())  # already tx-masked
     err = jax.tree_util.tree_map(
         lambda th, c: th - c.mean(0)[None], state.theta, targets)
     print(f"groups={groups:5s} (G={state.quant.n_groups:2d})  "

@@ -21,6 +21,9 @@ Faithfulness notes:
   * Quantizer-chain consistency under censoring: in SPMD both "sides" of a
     link share state, so the receiver replica of Q-hat_n is always in sync,
     matching the paper's error decomposition e + l (Sec. 6) bit-exactly.
+  * Metrics: ``payload_bits`` counts only transmitted bits (a censored
+    round costs zero); ``candidate_payload_bits`` carries the uncensored
+    what-if cost (DESIGN.md §Groups, payload accounting).
 """
 from __future__ import annotations
 

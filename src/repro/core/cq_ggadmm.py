@@ -63,6 +63,9 @@ def run(graph, solver: PrimalSolver, cfg: ADMMConfig,
 
     If `local_loss` (callable (N,d)->(N,)) and/or `theta_star` are given,
     objective-gap and distance-to-optimum trajectories are included.
+
+    ``payload_bits`` counts only transmitted bits (zero when censored);
+    ``candidate_payload_bits`` keeps the uncensored what-if cost.
     """
     theta0 = jnp.zeros((graph.n, dim), jnp.float32)
     final_state, metrics = E.run(graph, cfg, ExactSolver(solver), theta0,
@@ -71,6 +74,7 @@ def run(graph, solver: PrimalSolver, cfg: ADMMConfig,
     out: Dict[str, Any] = {
         "tx_mask": metrics["tx_mask"],
         "payload_bits": metrics["payload_bits"],
+        "candidate_payload_bits": metrics["candidate_payload_bits"],
         "primal_residual": metrics["primal_residual"],
     }
     thetas = metrics["theta"]                      # (K, N, d)

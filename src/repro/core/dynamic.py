@@ -68,6 +68,7 @@ def run_dynamic(topology: DynamicTopology, solver, cfg: E.EngineConfig,
     result: Dict[str, Any] = {
         "tx_mask": stacked["tx_mask"],
         "payload_bits": stacked["payload_bits"],
+        "candidate_payload_bits": stacked["candidate_payload_bits"],
         "primal_residual": stacked["primal_residual"],
     }
     thetas = stacked["theta"]

@@ -36,11 +36,31 @@ Newton ``PrimalSolver`` objects of ``core/solvers.py`` (convex experiments);
 :class:`InexactSolver` runs K Adam/SGD steps on the augmented Lagrangian
 (neural workloads; the inexact-ADMM deviation recorded in DESIGN.md §5).
 
-PRNG compatibility note: when the parameter tree has exactly one leaf the
-stochastic-rounding uniforms are drawn with the phase key directly (no
-per-leaf split), which makes the G=1 flat path reproduce the seed
+**Packed fast path** (DESIGN.md §Packing): multi-leaf trees do NOT loop
+over leaves. The whole tree is flattened into one contiguous ``(N, D)``
+buffer (``core/packing.py``), the per-group ranges come from one
+segment-reduced max, the stochastic-rounding uniforms are drawn once for
+the whole buffer with the phase key, and the quantize/reconstruct chain
+runs as ONE call — the fused Pallas kernel
+(``kernels.ops.stoch_quantize_grouped``) when ``use_pallas_quant=True``,
+its bit-identical jnp oracle otherwise. The group-censor norm reduction and
+``tree_mix`` ride the same packed view. The relevant
+:class:`EngineConfig` knobs:
+
+* ``groups``: ``"model"`` (G=1), ``"leaf"``, or an explicit leaf->group
+  tuple — any of them runs as one fused call on the packed buffer;
+* ``use_pallas_quant`` / ``use_pallas_mix``: route the packed buffer
+  through the Pallas kernels instead of the jnp oracles;
+* ``censor_mode="group"``: the per-group norm test reduces over the packed
+  buffer with one segment-sum.
+
+PRNG compatibility note: the stochastic-rounding uniforms are drawn with
+the phase key directly on the full model width — for a one-leaf tree this
+is exactly the seed draw, so the G=1 flat path reproduces the seed
 ``cq_ggadmm`` trajectories bit-for-bit (golden tests in
-``tests/test_engine.py``).
+``tests/test_engine.py``); for multi-leaf trees the packed draw replaces
+the per-leaf key split of the old unfused loop (kept as
+``grouped_quantize_step_unfused`` for parity benchmarks).
 """
 from __future__ import annotations
 
@@ -50,6 +70,7 @@ from typing import Any, Callable, Dict, Optional, Protocol, Sequence, Tuple, Uni
 import jax
 import jax.numpy as jnp
 
+from repro.core import packing
 from repro.core.censoring import CensorConfig, threshold
 from repro.core.graph import WorkerGraph
 from repro.core.quantization import QuantConfig, required_bits
@@ -88,8 +109,12 @@ def tree_dim(a: Tree) -> int:
 
 
 def tree_mix(adjacency: jax.Array, a: Tree, use_kernel: bool = False) -> Tree:
-    """Neighbor sum per leaf: out_n = sum_m A[n, m] leaf_m (optionally via
-    the Pallas ``bipartite_mix`` kernel, leaf-wise)."""
+    """Neighbor sum: out_n = sum_m A[n, m] leaf_m.
+
+    Multi-leaf trees with a uniform leaf dtype mix through the packed
+    ``(N, D)`` view — one matmul (or one Pallas ``bipartite_mix`` call)
+    for the whole tree instead of one per leaf. Mixed-dtype trees and
+    single leaves keep the leaf-wise path (identical semantics)."""
     def mix(x):
         flat = x.reshape(x.shape[0], -1)
         if use_kernel:
@@ -98,6 +123,12 @@ def tree_mix(adjacency: jax.Array, a: Tree, use_kernel: bool = False) -> Tree:
         else:
             out = adjacency.astype(flat.dtype) @ flat
         return out.reshape(x.shape)
+
+    leaves = jax.tree_util.tree_leaves(a)
+    if len(leaves) > 1 and len({x.dtype for x in leaves}) == 1:
+        pk = packing.make_packing(a, (0,) * len(leaves))
+        buf = packing.pack(pk, a, dtype=leaves[0].dtype)
+        return packing.unpack(pk, mix(buf), like=a)
     return jax.tree_util.tree_map(mix, a)
 
 
@@ -203,10 +234,78 @@ def grouped_quantize_step(
 ) -> Tuple[GroupQuantState, Tree, jax.Array, jax.Array]:
     """One grouped stochastic-quantization round (Eqs. 14-20, group-wise).
 
+    Single-leaf trees run the direct (seed-bit-compatible) path; multi-leaf
+    trees run the fused packed-buffer path — one segment-reduced range, one
+    uniform draw, one quantize call for the whole tree.
+
     Returns ``(new_state, candidate_tree, bits (N, G), payload (N,))`` where
     payload = sum_g b_g d_g + G * overhead — each group ships its own
     ``(R_g, b_g)`` side information.
     """
+    if len(jax.tree_util.tree_leaves(theta)) == 1:
+        return grouped_quantize_step_unfused(state, theta, key, cfg,
+                                             group_ids, use_kernel)
+    return _grouped_quantize_step_packed(state, theta, key, cfg, group_ids,
+                                         use_kernel)
+
+
+def _grouped_quantize_step_packed(
+    state: GroupQuantState, theta: Tree, key: jax.Array, cfg: QuantConfig,
+    group_ids: Sequence[int], use_kernel: bool = False,
+) -> Tuple[GroupQuantState, Tree, jax.Array, jax.Array]:
+    """Fused path: quantize every leaf of the tree in one packed call."""
+    pk = packing.make_packing(theta, group_ids)
+    n_groups = state.n_groups
+    theta_p = packing.pack(pk, theta)                     # (N, D) f32
+    qprev_p = packing.pack(pk, state.q_hat)               # (N, D) f32
+
+    range_new = packing.segment_maxabs(pk, theta_p - qprev_p)     # (N, G)
+    bits = required_bits(state.bits_prev, range_new, state.range_prev,
+                         cfg.omega, state.initialized, cfg.b0, cfg.b_max)
+    levels = jnp.exp2(bits) - 1.0
+    delta = 2.0 * range_new / jnp.maximum(levels, 1.0)            # (N, G)
+    degen = range_new <= _EPS                                     # (N, G)
+
+    # One draw for the whole packed buffer with the phase key (the fused
+    # analog of the seed's single whole-vector draw).
+    uniforms = jax.random.uniform(key, theta_p.shape, jnp.float32)
+    gid_cols = jnp.asarray(pk.col_group_ids)
+    if use_kernel:
+        from repro.kernels import ops as kernel_ops
+        out = kernel_ops.stoch_quantize_grouped(
+            theta_p, qprev_p, uniforms, delta, range_new, gid_cols)
+    else:
+        from repro.kernels import ref as kernel_ref
+        out = kernel_ref.stoch_quantize_grouped_ref(
+            theta_p, qprev_p, uniforms, delta, range_new, gid_cols)
+    # degenerate groups (nothing moved): keep the old reconstruction
+    out = jnp.where(jnp.take(degen, gid_cols, axis=1), qprev_p, out)
+    q_hat_new = packing.unpack(pk, out, like=state.q_hat)
+
+    new_state = GroupQuantState(
+        q_hat=q_hat_new,
+        range_prev=jnp.where(degen, state.range_prev, range_new),
+        bits_prev=bits,
+        delta_prev=jnp.where(degen, state.delta_prev, delta),
+        initialized=jnp.ones_like(state.initialized),
+    )
+    dims_arr = jnp.asarray(pk.group_dims, jnp.float32)
+    payload = jnp.sum(bits * dims_arr[None, :], axis=-1) \
+        + float(n_groups * cfg.b_overhead)
+    return new_state, q_hat_new, bits, payload
+
+
+def grouped_quantize_step_unfused(
+    state: GroupQuantState, theta: Tree, key: jax.Array, cfg: QuantConfig,
+    group_ids: Sequence[int], use_kernel: bool = False,
+) -> Tuple[GroupQuantState, Tree, jax.Array, jax.Array]:
+    """Per-leaf reference loop (one uniform draw + one quantize call per
+    leaf). Single-leaf trees MUST take this path — it draws with the phase
+    key directly, which is the seed-golden PRNG contract; for multi-leaf
+    trees it exists as the dispatch-overhead baseline
+    (``benchmarks/bench_engine.py``) and as a semantics reference. Note the
+    multi-leaf PRNG differs from the packed path (per-leaf key split vs one
+    packed draw), so the two are not bit-comparable across leaves."""
     leaves, treedef = jax.tree_util.tree_flatten(theta)
     q_leaves = jax.tree_util.tree_leaves(state.q_hat)
     n_groups = state.n_groups
@@ -307,21 +406,19 @@ class LocalSolver(Protocol):
 
 
 def _flatten_worker(tree: Tree) -> jax.Array:
+    """Tree -> (N, d) via the shared packed layout (one leaf: plain
+    reshape, dtype untouched; multi-leaf: concat in leaf order, promoted
+    dtype — matching jnp.concatenate's own promotion)."""
     leaves = jax.tree_util.tree_leaves(tree)
-    n = leaves[0].shape[0]
-    if len(leaves) == 1:
-        return leaves[0].reshape(n, -1)
-    return jnp.concatenate([x.reshape(n, -1) for x in leaves], axis=1)
+    pk = packing.make_packing(tree, (0,) * len(leaves))
+    return packing.pack(pk, tree,
+                        dtype=jnp.result_type(*[x.dtype for x in leaves]))
 
 
 def _unflatten_worker(flat: jax.Array, like: Tree) -> Tree:
-    leaves, treedef = jax.tree_util.tree_flatten(like)
-    out, off = [], 0
-    for x in leaves:
-        d = int(x.size // x.shape[0])
-        out.append(flat[:, off:off + d].reshape(x.shape).astype(x.dtype))
-        off += d
-    return jax.tree_util.tree_unflatten(treedef, out)
+    pk = packing.make_packing(
+        like, (0,) * len(jax.tree_util.tree_leaves(like)))
+    return packing.unpack(pk, flat, like=like)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -508,26 +605,22 @@ def _censor_masks(state: EngineState, candidate: Tree, cfg: EngineConfig,
     diff = jax.tree_util.tree_map(
         lambda c, h: c.astype(jnp.float32) - h.astype(jnp.float32),
         candidate, state.theta_hat)
+    pk = packing.make_packing(diff, group_ids)
+    diff_p = packing.pack(pk, diff)                       # (N, D) f32
     tau = threshold(cfg.censor, k_next)
     if cfg.censor_mode == "global":
-        dleaves = jax.tree_util.tree_leaves(diff)
-        if len(dleaves) == 1 and dleaves[0].ndim == 2:
-            # bit-compatible with the seed flat path's jnp.linalg.norm
-            change = jnp.linalg.norm(dleaves[0], axis=-1)
-        else:
-            change = jnp.sqrt(tree_worker_sqnorm(diff))
+        # the packed view makes the multi-leaf norm identical to the seed
+        # flat path's jnp.linalg.norm over the whole model vector
+        change = jnp.linalg.norm(diff_p, axis=-1)
         cmask = (change >= tau).astype(jnp.float32)
         return cmask, jnp.broadcast_to(cmask[:, None], (n, n_groups))
 
     # per-group censoring: tau_g^2 proportional to d_g so the group
-    # thresholds partition the global budget (sum_g tau_g^2 = tau^2).
-    sq_leaves = [jnp.sum(jnp.square(x.astype(jnp.float32))
-                         .reshape(x.shape[0], -1), axis=-1)
-                 for x in jax.tree_util.tree_leaves(diff)]
-    change_g = jnp.sqrt(_group_reduce(sq_leaves, group_ids, n_groups,
-                                      lambda s: jnp.sum(s, axis=0)))
-    d_total = float(tree_dim(candidate))
-    dims = jnp.asarray(group_dims(candidate, group_ids), jnp.float32)
+    # thresholds partition the global budget (sum_g tau_g^2 = tau^2); the
+    # per-group sums reduce over the packed buffer in one segment-sum.
+    change_g = jnp.sqrt(packing.segment_sqnorm(pk, diff_p))
+    d_total = float(pk.dim)
+    dims = jnp.asarray(pk.group_dims, jnp.float32)
     tau_g = tau * jnp.sqrt(dims / max(d_total, 1.0))
     gmask = (change_g >= tau_g[None, :]).astype(jnp.float32)
     return jnp.max(gmask, axis=-1), gmask
@@ -536,11 +629,17 @@ def _censor_masks(state: EngineState, candidate: Tree, cfg: EngineConfig,
 def _phase(state: EngineState, phase_mask: jax.Array, solver: LocalSolver,
            adjacency: jax.Array, rho_d: jax.Array, cfg: EngineConfig,
            key: jax.Array, batch: Any,
-           ) -> Tuple[EngineState, jax.Array, jax.Array, jax.Array]:
+           ) -> Tuple[EngineState, jax.Array, jax.Array, jax.Array,
+                      jax.Array, jax.Array]:
     """One group's primal update + (grouped quantize) + (censor) + commit.
 
-    Returns ``(new_state, tx_mask (N,), payload_bits (N,), bits (N, G),
-    group_tx (N, G))`` restricted to ``phase_mask`` (zeros elsewhere).
+    Returns the 6-tuple ``(new_state, tx_mask (N,), payload_bits (N,),
+    candidate_payload_bits (N,), bits (N, G), group_tx (N, G))`` restricted
+    to ``phase_mask`` (zeros elsewhere). ``payload_bits`` counts only bits
+    actually put on the wire — a censored worker contributes exactly zero;
+    ``candidate_payload_bits`` is what the transmission would have cost had
+    censoring not suppressed it (the pre-fix metric, kept for
+    energy-what-if accounting).
     """
     group_ids = resolve_groups(state.theta, cfg.groups)
     n_groups = max(group_ids) + 1
@@ -584,13 +683,18 @@ def _phase(state: EngineState, phase_mask: jax.Array, solver: LocalSolver,
                                        n_groups, k_next)
     tx_mask = cmask * phase_mask                   # only this phase acts
     group_tx = group_cmask * phase_mask[:, None]
+    candidate_payload = payload * phase_mask       # cost had nothing censored
     if cfg.censor_mode == "group" and cfg.censor.enabled:
         # payload counts only the transmitted groups (+ their overhead)
         dims = jnp.asarray(group_dims(theta, group_ids), jnp.float32)
         overhead = float(cfg.quantize.b_overhead) \
             if cfg.quantize is not None else 0.0
         per_group = bits * dims[None, :] + overhead
-        payload = jnp.sum(per_group * group_cmask, axis=-1)
+        payload_tx = jnp.sum(per_group * group_tx, axis=-1)
+    else:
+        # global mode: a censored link costs zero bits (censoring's whole
+        # value proposition) — mask by the transmit decision, not the phase
+        payload_tx = payload * tx_mask
 
     # theta_hat: each leaf commits where its group transmitted
     hat_leaves, treedef = jax.tree_util.tree_flatten(state.theta_hat)
@@ -619,8 +723,8 @@ def _phase(state: EngineState, phase_mask: jax.Array, solver: LocalSolver,
     )
     new_state = dataclasses.replace(state, theta=theta, theta_hat=theta_hat,
                                     quant=quant, opt_mu=mu, opt_nu=nu)
-    return (new_state, tx_mask, payload * phase_mask, bits * pm_col,
-            group_tx)
+    return (new_state, tx_mask, payload_tx, candidate_payload,
+            bits * pm_col, group_tx)
 
 
 MetricsFn = Callable[[EngineState, Any], Dict[str, jax.Array]]
@@ -632,7 +736,9 @@ def make_step(graph: WorkerGraph, cfg: EngineConfig, solver: LocalSolver,
 
     ``step(state, batch, key) -> (state, metrics)``; ``batch`` is forwarded
     to the local solver (None for data-free exact solvers). Metrics always
-    carry per-worker ``tx_mask`` and ``payload_bits`` plus the layer-aware
+    carry per-worker ``tx_mask``, ``payload_bits`` (bits actually
+    transmitted — zero for censored workers) and ``candidate_payload_bits``
+    (what the round would have cost uncensored), plus the layer-aware
     ``group_tx``/``bits_per_group`` diagnostics; ``extra_metrics(state,
     batch)`` appends problem-specific entries (residuals, losses).
     """
@@ -645,18 +751,20 @@ def make_step(graph: WorkerGraph, cfg: EngineConfig, solver: LocalSolver,
     def step(state: EngineState, batch, key: jax.Array):
         k1, k2 = jax.random.split(key)
         if cfg.alternating:
-            state, tx_h, pay_h, bits_h, gtx_h = _phase(
+            state, tx_h, pay_h, cand_h, bits_h, gtx_h = _phase(
                 state, head, solver, adjacency, rho_d, cfg, k1, batch)
-            state, tx_t, pay_t, bits_t, gtx_t = _phase(
+            state, tx_t, pay_t, cand_t, bits_t, gtx_t = _phase(
                 state, tail, solver, adjacency, rho_d, cfg, k2, batch)
             tx_mask = tx_h + tx_t
             payload = pay_h + pay_t
+            candidate_payload = cand_h + cand_t
             bits_g = bits_h + bits_t
             group_tx = gtx_h + gtx_t
         else:
             all_mask = jnp.ones_like(head)
-            state, tx_mask, payload, bits_g, group_tx = _phase(
-                state, all_mask, solver, adjacency, rho_d, cfg, k1, batch)
+            state, tx_mask, payload, candidate_payload, bits_g, group_tx = \
+                _phase(state, all_mask, solver, adjacency, rho_d, cfg, k1,
+                       batch)
 
         # Dual update, Eq. (23): alpha += rho * (D - A) theta_hat.
         neigh = tree_mix(adjacency, state.theta_hat)
@@ -674,6 +782,7 @@ def make_step(graph: WorkerGraph, cfg: EngineConfig, solver: LocalSolver,
         metrics = {
             "tx_mask": tx_mask,
             "payload_bits": payload,
+            "candidate_payload_bits": candidate_payload,
             "bits_per_group": bits_g,
             "group_tx": group_tx,
         }

@@ -1,0 +1,152 @@
+"""Packed buffer view of worker-stacked pytrees (DESIGN.md §Packing).
+
+The engine's hot quantize/censor/mix path used to dispatch one op chain per
+pytree leaf (one ``jax.random.uniform`` + one kernel/XLA launch each) —
+exactly the overhead that L-FGADMM-style layer-wise mode multiplies by the
+number of layers. This module flattens all leaves of a worker-stacked tree
+into ONE contiguous ``(N, D)`` buffer so grouped quantization runs as a
+single fused call:
+
+* :class:`Packing` holds the *static* layout metadata — leaf shapes/dtypes,
+  flat dims, column offsets, and the per-column group-id map ``col_group_ids``
+  that tells the fused kernel which quantization group each column belongs
+  to. Instances are cached by ``(treedef, shapes, dtypes, group_ids)`` via
+  :func:`make_packing`, so repeated traces reuse the same metadata (and the
+  same host-side id array).
+* :func:`pack` / :func:`unpack` move between the tree view and the buffer
+  view. Leaves are concatenated in ``tree_leaves`` order, each reshaped to
+  ``(N, d_leaf)``; a one-leaf tree packs to a plain reshape (no concat), so
+  the flat ``(N, d)`` seed workload is the identity transform.
+* :func:`segment_maxabs` / :func:`segment_sqnorm` are the single
+  segment-reduced side-information computations: per-worker per-group
+  ``max |.|`` (quantizer range R_g) and ``sum .^2`` (group-censor norm),
+  both ``(N, G)`` in one op instead of a per-leaf Python loop.
+
+Everything here is jit-traceable; the cache only avoids re-deriving static
+layout (and keeps ``col_group_ids`` as one host array per layout).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Tree = Any
+
+# Layout cache: (treedef, shapes, dtypes, group_ids) -> Packing. Layouts are
+# tiny and the set of distinct model/group structures per process is small,
+# so an unbounded dict is fine (mirrors jax's own tracing caches).
+_CACHE: Dict[Tuple, "Packing"] = {}
+
+
+@dataclasses.dataclass(frozen=True)
+class Packing:
+    """Static layout of a worker-stacked pytree as one ``(N, D)`` buffer."""
+
+    treedef: Any
+    shapes: Tuple[Tuple[int, ...], ...]    # per-leaf shapes (worker axis incl)
+    dtypes: Tuple[Any, ...]                # per-leaf dtypes
+    dims: Tuple[int, ...]                  # per-leaf flat dim d_i
+    offsets: Tuple[int, ...]               # per-leaf column offset
+    group_ids: Tuple[int, ...]             # leaf index -> group id
+    n_groups: int
+    group_dims: Tuple[int, ...]            # per-group parameter counts d_g
+    # (D,) int32 column -> group id map; one host array per cached layout
+    col_group_ids: np.ndarray = dataclasses.field(compare=False, repr=False)
+
+    @property
+    def dim(self) -> int:
+        """Total packed width D (= model dimension per worker)."""
+        return sum(self.dims)
+
+    @property
+    def n_leaves(self) -> int:
+        return len(self.dims)
+
+    @property
+    def sorted_ids(self) -> bool:
+        """Whether column group ids are non-decreasing (lets the segment
+        reductions use the faster sorted path)."""
+        ids = self.group_ids
+        return all(ids[i] <= ids[i + 1] for i in range(len(ids) - 1))
+
+
+def make_packing(tree: Tree, group_ids: Sequence[int]) -> Packing:
+    """Build (or fetch the cached) packing for ``tree`` with per-leaf
+    quantization ``group_ids`` (aligned with ``tree_leaves`` order)."""
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    if not leaves:
+        raise ValueError("cannot pack an empty pytree")
+    shapes = tuple(tuple(int(s) for s in x.shape) for x in leaves)
+    dtypes = tuple(jnp.dtype(x.dtype) for x in leaves)
+    ids = tuple(int(g) for g in group_ids)
+    if len(ids) != len(leaves):
+        raise ValueError(f"group spec covers {len(ids)} leaves, "
+                         f"tree has {len(leaves)}")
+    key = (treedef, shapes, dtypes, ids)
+    hit = _CACHE.get(key)
+    if hit is not None:
+        return hit
+
+    dims = tuple(int(np.prod(s[1:], dtype=np.int64)) for s in shapes)
+    offsets, off = [], 0
+    for d in dims:
+        offsets.append(off)
+        off += d
+    n_groups = max(ids) + 1
+    gdims = [0] * n_groups
+    for d, g in zip(dims, ids):
+        gdims[g] += d
+    cols = np.concatenate([np.full(d, g, np.int32)
+                           for d, g in zip(dims, ids)])
+    pk = Packing(treedef=treedef, shapes=shapes, dtypes=dtypes, dims=dims,
+                 offsets=tuple(offsets), group_ids=ids, n_groups=n_groups,
+                 group_dims=tuple(gdims), col_group_ids=cols)
+    _CACHE[key] = pk
+    return pk
+
+
+def pack(pk: Packing, tree: Tree, dtype=jnp.float32) -> jax.Array:
+    """Tree view -> ``(N, D)`` buffer (leaves concatenated in leaf order)."""
+    leaves = jax.tree_util.tree_leaves(tree)
+    n = leaves[0].shape[0]
+    if len(leaves) == 1:
+        return leaves[0].reshape(n, -1).astype(dtype)
+    return jnp.concatenate(
+        [x.reshape(n, -1).astype(dtype) for x in leaves], axis=1)
+
+
+def unpack(pk: Packing, buf: jax.Array, like: Tree = None) -> Tree:
+    """``(N, D)`` buffer -> tree view. Shapes come from the packing; dtypes
+    come from ``like`` when given (e.g. narrowed ``hat_dtype`` replicas),
+    else from the packed tree's original dtypes."""
+    n = buf.shape[0]
+    dtypes = (tuple(x.dtype for x in jax.tree_util.tree_leaves(like))
+              if like is not None else pk.dtypes)
+    out = []
+    for shape, dt, d, off in zip(pk.shapes, dtypes, pk.dims, pk.offsets):
+        out.append(buf[:, off:off + d].reshape((n,) + shape[1:]).astype(dt))
+    return jax.tree_util.tree_unflatten(pk.treedef, out)
+
+
+def _segment_reduce(pk: Packing, buf: jax.Array, op) -> jax.Array:
+    """One segment reduction over columns: ``(N, D)`` -> ``(N, G)``."""
+    out = op(buf.T, jnp.asarray(pk.col_group_ids),
+             num_segments=pk.n_groups,
+             indices_are_sorted=pk.sorted_ids)          # (G, N)
+    return out.T
+
+
+def segment_maxabs(pk: Packing, buf: jax.Array) -> jax.Array:
+    """Per-worker per-group ``max |buf|`` — the grouped quantizer range
+    R_g computed in one segment reduction: ``(N, G)``."""
+    return _segment_reduce(pk, jnp.abs(buf), jax.ops.segment_max)
+
+
+def segment_sqnorm(pk: Packing, buf: jax.Array) -> jax.Array:
+    """Per-worker per-group ``sum buf^2`` — the group-censor norm term
+    computed in one segment reduction: ``(N, G)``."""
+    return _segment_reduce(pk, jnp.square(buf), jax.ops.segment_sum)

@@ -157,11 +157,17 @@ def quantize_step(
 def identity_quantize_step(
     state: QuantizerState, theta: jax.Array, key: jax.Array, cfg: QuantConfig,
 ) -> Tuple[QuantizerState, jax.Array, jax.Array, jax.Array]:
-    """Unquantized pass-through with 32-bit payload accounting (GGADMM)."""
+    """Unquantized pass-through with 32-bit payload accounting (GGADMM).
+
+    The stored replica keeps the state's ``q_hat`` dtype (it may be narrowed
+    via ``hat_dtype="bfloat16"``); the full-precision ``theta`` is still
+    returned as the candidate, mirroring the engine's grouped version.
+    """
     del key
     n, d = theta.shape
     new_state = dataclasses.replace(
-        state, q_hat=theta, initialized=jnp.ones_like(state.initialized))
+        state, q_hat=theta.astype(state.q_hat.dtype),
+        initialized=jnp.ones_like(state.initialized))
     bits = jnp.full((n,), 32.0, theta.dtype)
     payload_bits = jnp.full((n,), 32.0 * d, theta.dtype)
     return new_state, theta, bits, payload_bits

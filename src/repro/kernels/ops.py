@@ -24,6 +24,15 @@ def stoch_quantize(theta: jax.Array, q_hat_prev: jax.Array,
                                  interpret=_interpret())
 
 
+def stoch_quantize_grouped(theta: jax.Array, q_hat_prev: jax.Array,
+                           uniforms: jax.Array, delta: jax.Array,
+                           qrange: jax.Array,
+                           group_ids: jax.Array) -> jax.Array:
+    return _quant.stoch_quantize_grouped(theta, q_hat_prev, uniforms, delta,
+                                         qrange, group_ids,
+                                         interpret=_interpret())
+
+
 def bipartite_mix(adjacency: jax.Array, values: jax.Array) -> jax.Array:
     return _mix.bipartite_mix(adjacency, values, interpret=_interpret())
 

@@ -41,6 +41,38 @@ def stoch_quantize_ref(theta: jax.Array, q_hat_prev: jax.Array,
     return (qprev32 + safe_delta * q - r).astype(dtype)
 
 
+def stoch_quantize_grouped_ref(theta: jax.Array, q_hat_prev: jax.Array,
+                               uniforms: jax.Array, delta: jax.Array,
+                               qrange: jax.Array,
+                               group_ids: jax.Array) -> jax.Array:
+    """Grouped quantize->dequantize over a packed buffer (Eqs. 14-20,
+    group-wise) — ground truth for the fused kernel.
+
+    Args:
+      theta, q_hat_prev, uniforms: (N, D) packed buffers.
+      delta, qrange: (N, G) per-worker per-group step sizes / ranges.
+      group_ids: (D,) int32 column -> group id map.
+
+    Returns:
+      (N, D) reconstruction; column j is quantized with the side
+      information of its group ``group_ids[j]``. G=1 reproduces
+      :func:`stoch_quantize_ref` bit-for-bit.
+    """
+    dtype = theta.dtype
+    theta32 = theta.astype(jnp.float32)
+    qprev32 = q_hat_prev.astype(jnp.float32)
+    unif32 = uniforms.astype(jnp.float32)
+    delta_c = jnp.take(delta.astype(jnp.float32), group_ids, axis=1)  # (N, D)
+    range_c = jnp.take(qrange.astype(jnp.float32), group_ids, axis=1)
+    safe_delta = jnp.maximum(delta_c, _EPS)
+    c = (theta32 - qprev32 + range_c) / safe_delta
+    floor_c = jnp.floor(c)
+    q = floor_c + (unif32 < (c - floor_c)).astype(jnp.float32)
+    levels = 2.0 * range_c / safe_delta      # = 2^{b_g} - 1, column-wise
+    q = jnp.clip(q, 0.0, levels)
+    return (qprev32 + safe_delta * q - range_c).astype(dtype)
+
+
 def bipartite_mix_ref(adjacency: jax.Array, values: jax.Array) -> jax.Array:
     """Neighbor aggregation sum_{m in N_n} v_m  =  A @ V.
 

@@ -15,6 +15,13 @@ the TPU adaptation is lane-major blocking, not thread mapping.
 Uniform draws are produced *outside* the kernel (jax.random) so the kernel
 is bit-reproducible against ``ref.stoch_quantize_ref`` on every backend; a
 production path could swap them for in-kernel pltpu.prng_random_bits.
+
+Two entry points share the kernel math:
+
+* ``stoch_quantize`` — the seed (N, d) path with per-worker scalar (Δ, R).
+* ``stoch_quantize_grouped`` — the packed multi-layer path: (N, G) side
+  information plus a static column->group id map, so all leaves of a
+  pytree quantize in ONE ``pallas_call`` (see ``core/packing.py``).
 """
 from __future__ import annotations
 
@@ -47,6 +54,96 @@ def _quant_kernel(theta_ref, qprev_ref, unif_ref, delta_ref, range_ref,
     levels = 2.0 * rng / safe_delta
     q = jnp.clip(q, 0.0, levels)
     out_ref[...] = (qprev + safe_delta * q - rng).astype(out_ref.dtype)
+
+
+def _grouped_quant_kernel(theta_ref, qprev_ref, unif_ref, delta_ref,
+                          range_ref, gid_ref, out_ref):
+    """Grouped variant: (Δ, R) arrive as (BLOCK_N, G) side information plus
+    a (1, BLOCK_D) column->group id row; each column's scalars are selected
+    with an exact 0/1 VPU mask (no gather — Mosaic-friendly, and the select
+    is bit-exact so the kernel matches ``ref.stoch_quantize_grouped_ref``
+    for identical uniforms). G is static, so the select loop unrolls."""
+    theta = theta_ref[...].astype(jnp.float32)
+    qprev = qprev_ref[...].astype(jnp.float32)
+    unif = unif_ref[...].astype(jnp.float32)
+    delta = delta_ref[...].astype(jnp.float32)   # (BLOCK_N, G)
+    rng = range_ref[...].astype(jnp.float32)     # (BLOCK_N, G)
+    gid = gid_ref[...]                           # (1, BLOCK_D) int32
+    n_groups = delta.shape[1]
+    # Broadcast group scalars to columns: start from group 0 (also covers
+    # the G=1 fast case with zero selects).
+    delta_c = jnp.broadcast_to(delta[:, 0:1], theta.shape)
+    range_c = jnp.broadcast_to(rng[:, 0:1], theta.shape)
+    for g in range(1, n_groups):
+        m = gid == g                             # (1, BLOCK_D)
+        delta_c = jnp.where(m, delta[:, g:g + 1], delta_c)
+        range_c = jnp.where(m, rng[:, g:g + 1], range_c)
+    safe_delta = jnp.maximum(delta_c, _EPS)
+    c = (theta - qprev + range_c) / safe_delta
+    floor_c = jnp.floor(c)
+    q = floor_c + (unif < (c - floor_c)).astype(jnp.float32)
+    levels = 2.0 * range_c / safe_delta
+    q = jnp.clip(q, 0.0, levels)
+    out_ref[...] = (qprev + safe_delta * q - range_c).astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "block_d",
+                                             "interpret"))
+def stoch_quantize_grouped(theta: jax.Array, q_hat_prev: jax.Array,
+                           uniforms: jax.Array, delta: jax.Array,
+                           qrange: jax.Array, group_ids: jax.Array,
+                           *, block_n: int = BLOCK_N, block_d: int = BLOCK_D,
+                           interpret: bool = True) -> jax.Array:
+    """Fused grouped quantize+reconstruct: ONE ``pallas_call`` for a whole
+    packed multi-leaf buffer (the per-leaf loop this replaces paid one
+    kernel launch per layer).
+
+    Args:
+      theta, q_hat_prev, uniforms: (N, D) packed buffers.
+      delta, qrange: (N, G) per-worker per-group step size / range — the
+        full G columns ride along with every block (G is small: one entry
+        per layer group, not per column).
+      group_ids: (D,) int32 column -> group id map (static layout from
+        ``core.packing``).
+      interpret: interpreter mode (CPU validation); pass False on real TPU.
+
+    Returns:
+      (N, D) reconstruction Q̂^k, bit-identical to
+      ``ref.stoch_quantize_grouped_ref`` for identical uniforms.
+    """
+    n, d = theta.shape
+    n_groups = delta.shape[1]
+    dtype = theta.dtype
+    n_pad = (-n) % block_n
+    d_pad = (-d) % block_d
+
+    def pad2(x):
+        return jnp.pad(x, ((0, n_pad), (0, d_pad)))
+
+    theta_p = pad2(theta)
+    qprev_p = pad2(q_hat_prev)
+    unif_p = pad2(uniforms)
+    # (N, G) side info is padded on workers only; padded columns read group
+    # 0's scalars and are sliced away below.
+    delta_p = jnp.pad(delta, ((0, n_pad), (0, 0)))
+    range_p = jnp.pad(qrange, ((0, n_pad), (0, 0)))
+    gid_p = jnp.pad(group_ids.astype(jnp.int32), (0, d_pad))[None, :]
+    np_, dp_ = theta_p.shape
+
+    grid = (np_ // block_n, dp_ // block_d)
+    mat_spec = pl.BlockSpec((block_n, block_d), lambda i, j: (i, j))
+    side_spec = pl.BlockSpec((block_n, n_groups), lambda i, j: (i, 0))
+    gid_spec = pl.BlockSpec((1, block_d), lambda i, j: (0, j))
+    out = pl.pallas_call(
+        _grouped_quant_kernel,
+        grid=grid,
+        in_specs=[mat_spec, mat_spec, mat_spec, side_spec, side_spec,
+                  gid_spec],
+        out_specs=mat_spec,
+        out_shape=jax.ShapeDtypeStruct((np_, dp_), dtype),
+        interpret=interpret,
+    )(theta_p, qprev_p, unif_p, delta_p, range_p, gid_p)
+    return out[:n, :d]
 
 
 @functools.partial(jax.jit, static_argnames=("block_n", "block_d",

@@ -71,7 +71,7 @@ def run_admm(cfg, args) -> dict:
         raw = data.worker_batch(i, args.workers, args.batch // args.workers)
         batch = model_batch(cfg, raw, key=jax.random.PRNGKey(i))
         state, m = step(state, batch, jax.random.PRNGKey(1000 + i))
-        bits = float((m["payload_bits"] * m["tx_mask"]).sum())
+        bits = float(m["payload_bits"].sum())   # already tx-masked
         total_bits += bits
         mean_bits = float(np.asarray(m["bits_per_group"]).mean())
         history.append(float(m["loss"]))

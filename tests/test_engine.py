@@ -40,11 +40,19 @@ def linreg():
 
 
 # ------------------------------------------------------------- golden ----
-@pytest.mark.parametrize("scheme", ["ggadmm", "c-ggadmm", "q-ggadmm",
-                                    "cq-ggadmm", "c-admm", "jacobian-admm"])
+ALL_VARIANTS = ["ggadmm", "c-ggadmm", "q-ggadmm", "cq-ggadmm", "c-admm",
+                "jacobian-admm"]
+
+
+@pytest.mark.parametrize("scheme", ALL_VARIANTS)
 def test_golden_flat_matches_seed(linreg, scheme):
     """Engine (via the cq_ggadmm adapter) == frozen seed stepper, exactly:
-    same tx decisions, same payload accounting, same trajectories."""
+    same tx decisions, same payload accounting, same trajectories.
+
+    The seed stepper charges censored workers the full payload (the metric
+    bug this PR fixes), so the engine's ``payload_bits`` must equal
+    ``seed payload * tx_mask`` (bits on the wire) and the engine's
+    ``candidate_payload_bits`` must equal the seed's raw number."""
     g, prob = linreg
     cfg = ab.ALL_SCHEMES[scheme](rho=1.0)
     theta_star = prob.optimum()
@@ -54,9 +62,14 @@ def test_golden_flat_matches_seed(linreg, scheme):
     state_r, out_r = ref.run(g, prob, cfg, dim=DIM, iters=ITERS, seed=3,
                              theta_star=theta_star,
                              local_loss=prob.local_loss)
-    for key in ("tx_mask", "payload_bits", "primal_residual", "objective",
-                "dist_to_opt"):
+    for key in ("tx_mask", "primal_residual", "objective", "dist_to_opt"):
         np.testing.assert_array_equal(out_e[key], out_r[key], err_msg=key)
+    np.testing.assert_array_equal(out_e["payload_bits"],
+                                  out_r["payload_bits"] * out_r["tx_mask"],
+                                  err_msg="payload_bits (transmitted)")
+    np.testing.assert_array_equal(out_e["candidate_payload_bits"],
+                                  out_r["payload_bits"],
+                                  err_msg="candidate_payload_bits")
     np.testing.assert_array_equal(np.asarray(state_e.theta),
                                   np.asarray(state_r.theta))
     np.testing.assert_array_equal(np.asarray(state_e.theta_hat),
@@ -80,8 +93,10 @@ def test_golden_with_pallas_kernels(linreg):
                               use_pallas_quant=True)
     _, out_e = cq.run(g, prob, cfg, dim=DIM, iters=12, seed=3)
     _, out_r = ref.run(g, prob, cfg, dim=DIM, iters=12, seed=3)
-    for key in ("tx_mask", "payload_bits", "primal_residual"):
+    for key in ("tx_mask", "primal_residual"):
         np.testing.assert_array_equal(out_e[key], out_r[key], err_msg=key)
+    np.testing.assert_array_equal(out_e["payload_bits"],
+                                  out_r["payload_bits"] * out_r["tx_mask"])
 
 
 # ----------------------------------------------- pytree == flat vector ----
@@ -185,7 +200,8 @@ def _run_engine_training(cfg, targets, grad_fn, iters=60, n=6):
     group_tx = None
     for i in range(iters):
         state, m = step(state, None, jax.random.PRNGKey(i))
-        total_bits += float((m["payload_bits"] * m["tx_mask"]).sum())
+        # payload_bits now counts only transmitted bits — no tx_mask needed
+        total_bits += float(m["payload_bits"].sum())
         gt = np.asarray(m["group_tx"])
         group_tx = gt if group_tx is None else group_tx + gt
     return state, total_bits, group_tx
@@ -229,6 +245,124 @@ def test_group_spec_validation():
         E.resolve_groups(tree, (0,))             # wrong arity
     with pytest.raises(ValueError):
         E.resolve_groups(tree, (0, 2))           # non-contiguous ids
+
+
+# ------------------------------------------------- payload accounting ----
+@pytest.mark.parametrize("censor_mode", ["global", "group"])
+@pytest.mark.parametrize("scheme", ALL_VARIANTS)
+def test_censored_rounds_cost_zero_payload_flat(linreg, scheme, censor_mode):
+    """Censoring's value proposition: a suppressed link costs ZERO bits.
+    Every algorithm variant, both censor modes, flat (one-leaf) path."""
+    g, prob = linreg
+    cfg = ab.ALL_SCHEMES[scheme](rho=1.0)
+    cfg = dataclasses.replace(cfg, censor_mode=censor_mode)
+    _, out = cq.run(g, prob, cfg, dim=DIM, iters=ITERS, seed=3)
+    tx = np.asarray(out["tx_mask"])
+    payload = np.asarray(out["payload_bits"])
+    candidate = np.asarray(out["candidate_payload_bits"])
+    assert (payload[tx == 0] == 0).all(), scheme
+    assert (payload <= candidate + 1e-6).all(), scheme
+    if cfg.censor.enabled:
+        assert (tx == 0).any(), f"{scheme}: censoring never triggered"
+    if censor_mode == "global":
+        # transmitted rounds cost exactly the candidate payload
+        np.testing.assert_array_equal(payload[tx == 1], candidate[tx == 1])
+
+
+@pytest.mark.parametrize("censor_mode", ["global", "group"])
+def test_censored_rounds_cost_zero_payload_tree(censor_mode):
+    """Same invariant on the multi-leaf packed path with per-leaf groups:
+    fully censored workers pay nothing; in group mode, partially censored
+    workers pay only for their transmitted groups."""
+    targets, grad_fn = _hetero_consensus()
+    g = random_bipartite_graph(6, 0.5, seed=0)
+    solver = E.InexactSolver(grad_fn=grad_fn, local_steps=10, local_lr=0.1)
+    cfg = E.EngineConfig(rho=0.5, censor=CensorConfig(tau0=5.0, xi=0.99),
+                         quantize=QuantConfig(b0=6, omega=0.99),
+                         groups="leaf", censor_mode=censor_mode)
+    theta0 = jax.tree_util.tree_map(jnp.zeros_like, targets)
+    state = E.init_state(theta0, cfg, solver)
+    step = jax.jit(E.make_step(g, cfg, solver))
+    saw_censored = False
+    for i in range(80):
+        state, m = step(state, None, jax.random.PRNGKey(i))
+        tx = np.asarray(m["tx_mask"])
+        payload = np.asarray(m["payload_bits"])
+        candidate = np.asarray(m["candidate_payload_bits"])
+        assert (payload[tx == 0] == 0).all()
+        assert (payload <= candidate + 1e-4).all()
+        if censor_mode == "group":
+            # group-mode payload = exactly the transmitted groups' bits
+            dims = np.asarray(E.group_dims(state.theta,
+                                           E.resolve_groups(state.theta,
+                                                            "leaf")),
+                              np.float32)
+            per_group = (np.asarray(m["bits_per_group"]) * dims[None, :]
+                         + cfg.quantize.b_overhead)
+            want = (per_group * np.asarray(m["group_tx"])).sum(-1)
+            np.testing.assert_allclose(payload, want, rtol=1e-6)
+        saw_censored |= bool((tx == 0).any())
+    assert saw_censored, "censoring never triggered — test is vacuous"
+
+
+# ------------------------------------------------------ packed fast path ----
+def test_split_tree_matches_flat_quantized(linreg):
+    """The packed multi-leaf path reproduces the flat seed-golden path
+    bit-for-bit on full CQ-GGADMM: packing a split tree restores exactly
+    the flat buffer, the G=1 segment range equals the flat max, and the
+    packed uniform draw equals the flat draw."""
+    g, prob = linreg
+    cfg = ab.ALL_SCHEMES["cq-ggadmm"](rho=1.0)
+    cut = 5
+    flat0 = jnp.zeros((N_WORKERS, DIM), jnp.float32)
+    tree0 = {"a": flat0[:, :cut], "b": flat0[:, cut:]}
+    _, out_flat = E.run(g, cfg, E.ExactSolver(prob), flat0, ITERS, seed=3,
+                        extra_metrics=E.flat_metrics(g))
+    _, out_tree = E.run(g, cfg, E.ExactSolver(_split_problem(prob, cut)),
+                        tree0, ITERS, seed=3,
+                        extra_metrics=lambda s, b: {
+                            "theta": jnp.concatenate(
+                                [s.theta["a"], s.theta["b"]], axis=1)})
+    np.testing.assert_array_equal(np.asarray(out_flat["tx_mask"]),
+                                  np.asarray(out_tree["tx_mask"]))
+    np.testing.assert_array_equal(np.asarray(out_flat["payload_bits"]),
+                                  np.asarray(out_tree["payload_bits"]))
+    np.testing.assert_array_equal(np.asarray(out_tree["theta"][-1]),
+                                  np.asarray(out_flat["theta"][-1]))
+
+
+def test_engine_fused_kernel_matches_unfused_reference_bitwise():
+    """use_pallas_quant=True (one fused pallas_call over the packed buffer,
+    interpret mode) vs the jnp packed oracle: identical PRNG, identical
+    math => bit-for-bit equal trajectories, replicas, and payload."""
+    targets, grad_fn = _hetero_consensus()
+    g = random_bipartite_graph(6, 0.5, seed=0)
+    solver = E.InexactSolver(grad_fn=grad_fn, local_steps=10, local_lr=0.1)
+    states, totals = {}, {}
+    for use_kernel in (False, True):
+        cfg = E.EngineConfig(rho=0.5, quantize=QuantConfig(b0=4, omega=0.99),
+                             groups="leaf", use_pallas_quant=use_kernel)
+        theta0 = jax.tree_util.tree_map(jnp.zeros_like, targets)
+        state = E.init_state(theta0, cfg, solver)
+        step = jax.jit(E.make_step(g, cfg, solver))
+        total = 0.0
+        for i in range(10):
+            state, m = step(state, None, jax.random.PRNGKey(i))
+            total += float(m["payload_bits"].sum())
+        states[use_kernel] = state
+        totals[use_kernel] = total
+    assert totals[True] == totals[False]
+    for leaf_a, leaf_b in zip(
+            jax.tree_util.tree_leaves(states[True].quant.q_hat),
+            jax.tree_util.tree_leaves(states[False].quant.q_hat)):
+        np.testing.assert_array_equal(np.asarray(leaf_a), np.asarray(leaf_b))
+    for leaf_a, leaf_b in zip(
+            jax.tree_util.tree_leaves(states[True].theta),
+            jax.tree_util.tree_leaves(states[False].theta)):
+        np.testing.assert_array_equal(np.asarray(leaf_a), np.asarray(leaf_b))
+    np.testing.assert_array_equal(
+        np.asarray(states[True].quant.bits_prev),
+        np.asarray(states[False].quant.bits_prev))
 
 
 def test_engine_pytree_kernels_match_plain():

@@ -10,7 +10,7 @@ except ImportError:        # offline: property tests skip, rest runs
 
 from repro.kernels import ref
 from repro.kernels.bipartite_mix import bipartite_mix
-from repro.kernels.stoch_quant import stoch_quantize
+from repro.kernels.stoch_quant import stoch_quantize, stoch_quantize_grouped
 
 SHAPES = [(1, 1), (3, 7), (8, 512), (5, 513), (24, 50), (16, 2048),
           (9, 1023)]
@@ -60,6 +60,88 @@ def test_stoch_quant_bit_exact_f32():
     want = np.asarray(ref.stoch_quantize_ref(theta, qprev, unif, delta,
                                              qrange))
     np.testing.assert_array_equal(got, want)
+
+
+def _grouped_inputs(n, d, g, seed):
+    key = jax.random.PRNGKey(seed)
+    theta = 5 * jax.random.normal(key, (n, d))
+    qprev = 2 * jax.random.normal(jax.random.fold_in(key, 1), (n, d))
+    unif = jax.random.uniform(jax.random.fold_in(key, 2), (n, d))
+    # contiguous group blocks of uneven width (the packed-leaf layout)
+    edges = np.linspace(0, d, g + 1).astype(int)
+    gids = np.zeros((d,), np.int32)
+    for i in range(g):
+        gids[edges[i]:edges[i + 1]] = i
+    gids = jnp.asarray(gids)
+    diff = jnp.abs(theta - qprev)
+    qrange = jnp.stack(
+        [jnp.max(jnp.where(gids[None, :] == i, diff, 0.0), axis=1)
+         for i in range(g)], axis=1)                       # (N, G)
+    bits = jnp.asarray(np.random.RandomState(seed).randint(2, 8, (n, g)),
+                       jnp.float32)
+    delta = 2.0 * qrange / (jnp.exp2(bits) - 1.0)
+    return theta, qprev, unif, delta, qrange, gids
+
+
+@pytest.mark.parametrize("shape_g", [(1, 1, 1), (3, 7, 2), (8, 512, 1),
+                                     (5, 513, 4), (16, 2048, 8),
+                                     (9, 1023, 3)])
+def test_grouped_stoch_quant_bit_exact_vs_ref(shape_g):
+    """The fused grouped kernel (ONE pallas_call over the packed buffer)
+    equals the unfused jnp oracle bit-for-bit in interpret mode. The oracle
+    runs under jit — as the engine always runs it — so both sides see the
+    same XLA FMA contraction (op-by-op eager dispatch contracts the
+    c-coordinate chain differently at a few ULP)."""
+    n, d, g = shape_g
+    theta, qprev, unif, delta, qrange, gids = _grouped_inputs(n, d, g,
+                                                             seed=n * d + g)
+    got = stoch_quantize_grouped(theta, qprev, unif, delta, qrange, gids,
+                                 interpret=True)
+    want = jax.jit(ref.stoch_quantize_grouped_ref)(theta, qprev, unif, delta,
+                                                   qrange, gids)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_grouped_g1_matches_ungrouped_bitwise():
+    """G=1 grouped == the seed scalar-side-info kernel, bit-for-bit (the
+    packed path's golden-compatibility guarantee)."""
+    n, d = 8, 640
+    theta, qprev, unif, delta, qrange, gids = _grouped_inputs(n, d, 1, seed=0)
+    grouped = stoch_quantize_grouped(theta, qprev, unif, delta, qrange, gids,
+                                     interpret=True)
+    flat = stoch_quantize(theta, qprev, unif, delta[:, 0], qrange[:, 0],
+                          interpret=True)
+    np.testing.assert_array_equal(np.asarray(grouped), np.asarray(flat))
+    np.testing.assert_array_equal(
+        np.asarray(ref.stoch_quantize_grouped_ref(theta, qprev, unif, delta,
+                                                  qrange, gids)),
+        np.asarray(ref.stoch_quantize_ref(theta, qprev, unif, delta[:, 0],
+                                          qrange[:, 0])))
+
+
+def test_grouped_respects_group_boundaries():
+    """Columns of a degenerate-range group pass through q_prev exactly while
+    other groups still quantize (no cross-group bleed in the select)."""
+    n, d, g = 4, 64, 2
+    key = jax.random.PRNGKey(5)
+    theta = jnp.concatenate(
+        [jnp.zeros((n, 32)),                   # group 0: diff == 0
+         5 * jax.random.normal(key, (n, 32))], axis=1)
+    qprev = jnp.zeros((n, d))
+    unif = jax.random.uniform(jax.random.fold_in(key, 1), (n, d))
+    gids = jnp.asarray([0] * 32 + [1] * 32, jnp.int32)
+    qrange = jnp.stack([jnp.zeros((n,)),
+                        jnp.max(jnp.abs(theta[:, 32:]), axis=1)], axis=1)
+    delta = jnp.stack([jnp.zeros((n,)), 2.0 * qrange[:, 1] / 15.0], axis=1)
+    out = np.asarray(stoch_quantize_grouped(theta, qprev, unif, delta,
+                                            qrange, gids, interpret=True))
+    want = np.asarray(ref.stoch_quantize_grouped_ref(theta, qprev, unif,
+                                                     delta, qrange, gids))
+    np.testing.assert_array_equal(out, want)
+    np.testing.assert_array_equal(out[:, :32], np.zeros((n, 32)))
+    # quantized group reconstructs within one step of theta
+    assert (np.abs(out[:, 32:] - np.asarray(theta[:, 32:]))
+            <= np.asarray(delta[:, 1])[:, None] + 1e-6).all()
 
 
 @pytest.mark.parametrize("shape", [(2, 2, 3), (8, 8, 512), (24, 24, 50),

@@ -10,8 +10,8 @@ except ImportError:        # offline: property tests skip, rest runs
     from _hypothesis_stub import given, settings, st
 
 from repro.core.quantization import (QuantConfig, QuantizerState,
-                                     quantize_step, required_bits,
-                                     stochastic_round)
+                                     identity_quantize_step, quantize_step,
+                                     required_bits, stochastic_round)
 
 
 def _state(n, d, b0=2):
@@ -103,6 +103,24 @@ def test_payload_accounting():
     np.testing.assert_allclose(np.asarray(payload),
                                np.asarray(bits) * d + 64)
     assert (np.asarray(payload) < 32 * d).all()   # beats full precision
+
+
+def test_identity_step_respects_replica_dtype():
+    """identity_quantize_step must narrow the stored replica to the state's
+    q_hat dtype (hat_dtype="bfloat16" path) while the candidate keeps full
+    precision — same contract as the engine's grouped version."""
+    n, d = 3, 8
+    state = dataclasses.replace(
+        _state(n, d), q_hat=jnp.zeros((n, d), jnp.bfloat16))
+    theta = jax.random.normal(jax.random.PRNGKey(0), (n, d))  # f32
+    new_state, candidate, bits, payload = identity_quantize_step(
+        state, theta, jax.random.PRNGKey(1), QuantConfig())
+    assert new_state.q_hat.dtype == jnp.bfloat16
+    assert candidate.dtype == jnp.float32
+    np.testing.assert_array_equal(np.asarray(new_state.q_hat),
+                                  np.asarray(theta.astype(jnp.bfloat16)))
+    np.testing.assert_array_equal(np.asarray(candidate), np.asarray(theta))
+    assert (np.asarray(payload) == 32.0 * d).all()
 
 
 def test_degenerate_zero_diff_keeps_state():
