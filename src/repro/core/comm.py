@@ -46,17 +46,29 @@ class EnergyModel:
         rng = np.random.default_rng(self.seed)
         return rng.uniform(0.0, self.field_size, size=(n_workers, 2))
 
-    def worst_link_distance(self, graph: WorkerGraph) -> np.ndarray:
-        """(N,) distance from each worker to its farthest graph neighbor."""
+    def link_distances(self, graph: WorkerGraph) -> np.ndarray:
+        """(E,) length of each undirected edge (head-tail placement
+        distance), aligned with ``graph.edges`` — the same edge arrays the
+        sparse topology backend mixes over."""
         pos = self.placements(graph.n)
-        d2 = np.linalg.norm(pos[:, None, :] - pos[None, :, :], axis=-1)
-        masked = np.where(graph.adjacency > 0, d2, 0.0)
-        return masked.max(axis=1)
+        e = np.asarray(graph.edges)
+        return np.linalg.norm(pos[e[:, 0]] - pos[e[:, 1]], axis=-1)
+
+    def worst_link_distance(self, graph: WorkerGraph) -> np.ndarray:
+        """(N,) distance from each worker to its farthest graph neighbor,
+        reduced over the per-edge distances (O(E), no (N, N) mask)."""
+        d_e = self.link_distances(graph)
+        e = np.asarray(graph.edges)
+        out = np.zeros(graph.n)
+        np.maximum.at(out, e[:, 0], d_e)
+        np.maximum.at(out, e[:, 1], d_e)
+        return out
 
     def energy_per_transmission(self, payload_bits: np.ndarray,
                                 distance: np.ndarray,
-                                bandwidth: float) -> np.ndarray:
-        """E = P * tau for each worker's payload (vectorized)."""
+                                bandwidth) -> np.ndarray:
+        """E = P * tau for each worker's payload (vectorized; ``bandwidth``
+        may be a scalar or a broadcastable per-round array)."""
         rate = payload_bits / self.tau
         snr_term = np.exp2(rate / bandwidth) - 1.0
         power = distance ** 2 * self.n0 * bandwidth * snr_term
@@ -92,7 +104,8 @@ def build_comm_log(tx_mask_per_iter: np.ndarray,
                    payload_bits_per_iter: np.ndarray,
                    graph: WorkerGraph,
                    model: Optional[EnergyModel] = None,
-                   fraction_active: float = 0.5) -> CommLog:
+                   fraction_active: float = 0.5,
+                   bandwidth_mode: str = "fixed") -> CommLog:
     """Turn per-(iteration, worker) masks/payloads into aggregate metrics.
 
     Args:
@@ -102,12 +115,37 @@ def build_comm_log(tx_mask_per_iter: np.ndarray,
       model: energy model; default per Sec. 7.
       fraction_active: band-sharing fraction (0.5 for GGADMM-family, 1.0 for
         Jacobian C-ADMM).
+      bandwidth_mode: "fixed" (default) reproduces the paper — every round
+        divides W by the *constant* ``fraction_active * N``, even when
+        censoring silences most of the group. "actual" divides W by the
+        number of workers that really share the slot: with alternating
+        phases (``fraction_active < 1``) heads and tails transmit in
+        different slots, so each transmitter splits W with the *other
+        transmitters of its own side* that round; Jacobian rounds
+        (``fraction_active >= 1``) share one slot among all transmitters.
+        Survivors of a heavily censored round get more band and finish at
+        lower power — a deviation from the printed model, recorded in
+        DESIGN.md §Topology.
     """
+    assert bandwidth_mode in ("fixed", "actual"), bandwidth_mode
     model = model or EnergyModel()
     dist = model.worst_link_distance(graph)           # (N,)
-    bw = model.worker_bandwidth(graph.n, fraction_active)
     tx = np.asarray(tx_mask_per_iter, dtype=np.float64)
     payload = np.asarray(payload_bits_per_iter, dtype=np.float64)
+    if bandwidth_mode == "fixed":
+        bw = model.worker_bandwidth(graph.n, fraction_active)
+    else:
+        # (K, N) per-worker bandwidth from the actual transmitter count of
+        # the worker's own slot; idle slots keep the whole band (no
+        # transmission => no energy either way).
+        if fraction_active >= 1.0:      # Jacobian: one slot for everyone
+            sharers = np.maximum(tx.sum(axis=1), 1.0)[:, None]
+        else:                           # GGADMM: head and tail slots
+            head = np.asarray(graph.head_mask, dtype=bool)
+            h_cnt = np.maximum(tx[:, head].sum(axis=1), 1.0)[:, None]
+            t_cnt = np.maximum(tx[:, ~head].sum(axis=1), 1.0)[:, None]
+            sharers = np.where(head[None, :], h_cnt, t_cnt)
+        bw = model.bandwidth_hz / sharers
     energy = model.energy_per_transmission(payload, dist[None, :], bw)
     return CommLog(
         transmissions=tx.sum(axis=1),

@@ -29,6 +29,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import engine as E
+from repro.core import topology as topo_lib
 from repro.core.engine import ExactSolver, PrimalSolver  # noqa: F401
 
 # The engine config/state are the flat API's config/state: a bare (N, d)
@@ -46,8 +47,11 @@ def init_state(n_workers: int, dim: int, cfg: ADMMConfig,
 def make_step(graph, solver: PrimalSolver, cfg: ADMMConfig):
     """Build the jittable per-iteration step with the seed's
     ``step(state, key) -> (state, metrics)`` signature."""
+    topo = topo_lib.build(graph, cfg.mix_backend,
+                          use_pallas_mix=cfg.use_pallas_mix)
     engine_step = E.make_step(graph, cfg, ExactSolver(solver),
-                              extra_metrics=E.flat_metrics(graph))
+                              extra_metrics=E.flat_metrics(graph, topo),
+                              topology=topo)
 
     def step(state: ADMMState, key: jax.Array):
         return engine_step(state, None, key)
@@ -68,9 +72,11 @@ def run(graph, solver: PrimalSolver, cfg: ADMMConfig,
     ``candidate_payload_bits`` keeps the uncensored what-if cost.
     """
     theta0 = jnp.zeros((graph.n, dim), jnp.float32)
-    final_state, metrics = E.run(graph, cfg, ExactSolver(solver), theta0,
-                                 iters, seed=seed,
-                                 extra_metrics=E.flat_metrics(graph))
+    topo = topo_lib.build(graph, cfg.mix_backend,
+                          use_pallas_mix=cfg.use_pallas_mix)
+    final_state, metrics = E.run(
+        graph, cfg, ExactSolver(solver), theta0, iters, seed=seed,
+        extra_metrics=E.flat_metrics(graph, topo), topology=topo)
     out: Dict[str, Any] = {
         "tx_mask": metrics["tx_mask"],
         "payload_bits": metrics["payload_bits"],

@@ -23,6 +23,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import engine as E
+from repro.core import topology as topology_backend
 from repro.core.graph import WorkerGraph, random_bipartite_graph
 
 
@@ -51,8 +52,11 @@ def run_dynamic(topology: DynamicTopology, solver, cfg: E.EngineConfig,
     n_phases = -(-iters // topology.refresh_every)
     for phase in range(n_phases):
         graph = topology.graph_at(phase)
+        topo = topology_backend.build(graph, cfg.mix_backend,
+                                      use_pallas_mix=cfg.use_pallas_mix)
         step = E.make_step(graph, cfg, E.ExactSolver(solver),
-                           extra_metrics=E.flat_metrics(graph))
+                           extra_metrics=E.flat_metrics(graph, topo),
+                           topology=topo)
         # dual re-initialization: alpha = 0 lies in col(M_-) of ANY graph
         state = dataclasses.replace(
             state, alpha=jnp.zeros_like(state.alpha))

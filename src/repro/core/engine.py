@@ -71,6 +71,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import packing
+from repro.core import topology as topo_lib
 from repro.core.censoring import CensorConfig, threshold
 from repro.core.graph import WorkerGraph
 from repro.core.quantization import QuantConfig, required_bits
@@ -109,27 +110,15 @@ def tree_dim(a: Tree) -> int:
 
 
 def tree_mix(adjacency: jax.Array, a: Tree, use_kernel: bool = False) -> Tree:
-    """Neighbor sum: out_n = sum_m A[n, m] leaf_m.
+    """Neighbor sum: out_n = sum_m A[n, m] leaf_m (dense backend on a bare
+    adjacency array; the engine itself mixes through the pluggable
+    :mod:`~repro.core.topology` backends).
 
     Multi-leaf trees with a uniform leaf dtype mix through the packed
     ``(N, D)`` view — one matmul (or one Pallas ``bipartite_mix`` call)
     for the whole tree instead of one per leaf. Mixed-dtype trees and
     single leaves keep the leaf-wise path (identical semantics)."""
-    def mix(x):
-        flat = x.reshape(x.shape[0], -1)
-        if use_kernel:
-            from repro.kernels import ops as kernel_ops
-            out = kernel_ops.bipartite_mix(adjacency, flat)
-        else:
-            out = adjacency.astype(flat.dtype) @ flat
-        return out.reshape(x.shape)
-
-    leaves = jax.tree_util.tree_leaves(a)
-    if len(leaves) > 1 and len({x.dtype for x in leaves}) == 1:
-        pk = packing.make_packing(a, (0,) * len(leaves))
-        buf = packing.pack(pk, a, dtype=leaves[0].dtype)
-        return packing.unpack(pk, mix(buf), like=a)
-    return jax.tree_util.tree_map(mix, a)
+    return topo_lib.mix_dense(adjacency, a, use_kernel=use_kernel)
 
 
 def tree_where_worker(mask: jax.Array, a: Tree, b: Tree) -> Tree:
@@ -528,12 +517,14 @@ class EngineConfig:
     quantize: Optional[QuantConfig] = None
     groups: GroupSpec = "model"       # "model" (G=1) | "leaf" | explicit ids
     censor_mode: str = "global"       # "global" (paper) | "group" (new)
-    use_pallas_mix: bool = False      # route A @ theta_hat through the kernel
+    mix_backend: str = "dense"        # "dense" | "sparse" | "sharded"
+    use_pallas_mix: bool = False      # route the mix through its kernel
     use_pallas_quant: bool = False
     hat_dtype: Optional[str] = None   # narrow theta_hat/q_hat/alpha replicas
 
     def __post_init__(self):
         assert self.censor_mode in ("global", "group")
+        assert self.mix_backend in topo_lib.BACKENDS, self.mix_backend
 
     @property
     def name(self) -> str:
@@ -627,11 +618,15 @@ def _censor_masks(state: EngineState, candidate: Tree, cfg: EngineConfig,
 
 
 def _phase(state: EngineState, phase_mask: jax.Array, solver: LocalSolver,
-           adjacency: jax.Array, rho_d: jax.Array, cfg: EngineConfig,
+           topo: topo_lib.Topology, rho_d: jax.Array, cfg: EngineConfig,
            key: jax.Array, batch: Any,
            ) -> Tuple[EngineState, jax.Array, jax.Array, jax.Array,
                       jax.Array, jax.Array]:
     """One group's primal update + (grouped quantize) + (censor) + commit.
+
+    The neighbor aggregation goes through the pluggable ``topo`` backend
+    (dense matmul / sparse edge gather / sharded SPMD — DESIGN.md
+    §Topology).
 
     Returns the 6-tuple ``(new_state, tx_mask (N,), payload_bits (N,),
     candidate_payload_bits (N,), bits (N, G), group_tx (N, G))`` restricted
@@ -644,8 +639,7 @@ def _phase(state: EngineState, phase_mask: jax.Array, solver: LocalSolver,
     group_ids = resolve_groups(state.theta, cfg.groups)
     n_groups = max(group_ids) + 1
     rho = cfg.rho
-    neigh = tree_mix(adjacency, state.theta_hat,
-                     use_kernel=cfg.use_pallas_mix)
+    neigh = topo.mix(state.theta_hat)
 
     if cfg.alternating:
         # GGADMM primal, Eqs. (11)/(12)/(21)/(22)
@@ -731,7 +725,9 @@ MetricsFn = Callable[[EngineState, Any], Dict[str, jax.Array]]
 
 
 def make_step(graph: WorkerGraph, cfg: EngineConfig, solver: LocalSolver,
-              extra_metrics: Optional[MetricsFn] = None):
+              extra_metrics: Optional[MetricsFn] = None, *,
+              mesh: Any = None, worker_axis: Optional[str] = None,
+              topology: Optional[topo_lib.Topology] = None):
     """Build the jittable per-iteration engine step.
 
     ``step(state, batch, key) -> (state, metrics)``; ``batch`` is forwarded
@@ -739,22 +735,31 @@ def make_step(graph: WorkerGraph, cfg: EngineConfig, solver: LocalSolver,
     carry per-worker ``tx_mask``, ``payload_bits`` (bits actually
     transmitted — zero for censored workers) and ``candidate_payload_bits``
     (what the round would have cost uncensored), plus the layer-aware
-    ``group_tx``/``bits_per_group`` diagnostics; ``extra_metrics(state,
-    batch)`` appends problem-specific entries (residuals, losses).
+    ``group_tx``/``bits_per_group`` diagnostics and the ``dual_residual``
+    convergence term ``||rho (D - A) theta_hat||²`` (free — it reuses the
+    dual update's Laplacian); ``extra_metrics(state, batch)`` appends
+    problem-specific entries (residuals, losses).
+
+    Every graph operation rides the ``cfg.mix_backend`` topology backend;
+    ``mesh``/``worker_axis`` are forwarded to the sharded backend (the
+    production ADMM bundle passes its SPMD mesh — other callers can leave
+    them unset). A caller that already built a matching ``topology``
+    (e.g. to share it with a metrics fn) can pass it instead.
     """
-    adjacency = jnp.asarray(graph.adjacency)
-    degrees = jnp.asarray(graph.degrees)
+    topo = topology if topology is not None else topo_lib.build(
+        graph, cfg.mix_backend, use_pallas_mix=cfg.use_pallas_mix,
+        mesh=mesh, worker_axis=worker_axis)
     head = jnp.asarray(graph.head_mask, jnp.float32)
     tail = 1.0 - head
-    rho_d = cfg.rho * degrees
+    rho_d = cfg.rho * topo.degrees
 
     def step(state: EngineState, batch, key: jax.Array):
         k1, k2 = jax.random.split(key)
         if cfg.alternating:
             state, tx_h, pay_h, cand_h, bits_h, gtx_h = _phase(
-                state, head, solver, adjacency, rho_d, cfg, k1, batch)
+                state, head, solver, topo, rho_d, cfg, k1, batch)
             state, tx_t, pay_t, cand_t, bits_t, gtx_t = _phase(
-                state, tail, solver, adjacency, rho_d, cfg, k2, batch)
+                state, tail, solver, topo, rho_d, cfg, k2, batch)
             tx_mask = tx_h + tx_t
             payload = pay_h + pay_t
             candidate_payload = cand_h + cand_t
@@ -763,20 +768,19 @@ def make_step(graph: WorkerGraph, cfg: EngineConfig, solver: LocalSolver,
         else:
             all_mask = jnp.ones_like(head)
             state, tx_mask, payload, candidate_payload, bits_g, group_tx = \
-                _phase(state, all_mask, solver, adjacency, rho_d, cfg, k1,
+                _phase(state, all_mask, solver, topo, rho_d, cfg, k1,
                        batch)
 
-        # Dual update, Eq. (23): alpha += rho * (D - A) theta_hat.
-        neigh = tree_mix(adjacency, state.theta_hat)
+        # Dual update, Eq. (23): alpha += rho * (D - A) theta_hat. The
+        # Laplacian goes through the same topology backend (and therefore
+        # the same kernel routing) as the phase mixes — the seed bug where
+        # the dual step silently dropped ``use_pallas_mix`` cannot recur.
+        lap = topo.laplacian(state.theta_hat)
 
-        def dual(a, th, nm):
-            shape1 = (th.shape[0],) + (1,) * (th.ndim - 1)
-            lap = (degrees.reshape(shape1) * th.astype(jnp.float32)
-                   - nm.astype(jnp.float32))
-            return (a.astype(jnp.float32) + cfg.rho * lap).astype(a.dtype)
+        def dual(a, lp):
+            return (a.astype(jnp.float32) + cfg.rho * lp).astype(a.dtype)
 
-        alpha = jax.tree_util.tree_map(dual, state.alpha, state.theta_hat,
-                                       neigh)
+        alpha = jax.tree_util.tree_map(dual, state.alpha, lap)
         state = dataclasses.replace(state, alpha=alpha, k=state.k + 1)
 
         metrics = {
@@ -785,6 +789,10 @@ def make_step(graph: WorkerGraph, cfg: EngineConfig, solver: LocalSolver,
             "candidate_payload_bits": candidate_payload,
             "bits_per_group": bits_g,
             "group_tx": group_tx,
+            # squared norm of the dual step rho (D - A) theta_hat, from
+            # the Laplacian already computed for alpha (no extra mix);
+            # -> 0 exactly at consensus of the transmitted models
+            "dual_residual": (cfg.rho ** 2) * topo.dual_residual(lap),
         }
         if extra_metrics is not None:
             metrics.update(extra_metrics(state, batch))
@@ -793,17 +801,25 @@ def make_step(graph: WorkerGraph, cfg: EngineConfig, solver: LocalSolver,
     return step
 
 
-def flat_metrics(graph: WorkerGraph) -> MetricsFn:
+def flat_metrics(graph: WorkerGraph,
+                 mix_backend: Union[str, topo_lib.Topology] = "dense",
+                 ) -> MetricsFn:
     """Seed flat-stepper diagnostics: pairwise primal residual (Eq. 28) and
-    the theta trajectory (for objective / distance-to-optimum curves)."""
-    adjacency = jnp.asarray(graph.adjacency)
+    the theta trajectory (for objective / distance-to-optimum curves).
+
+    The residual reduction rides the topology backend: dense keeps the
+    seed's O(N²·d) pairwise form bit-for-bit; sparse sums per-edge
+    differences in O(E·d). ``mix_backend`` may be a backend name or an
+    already-built :class:`~repro.core.topology.Topology` (so adapters
+    share one instance with ``make_step``)."""
+    topo = (mix_backend if isinstance(mix_backend, topo_lib.Topology)
+            else topo_lib.build(graph, mix_backend))
 
     def fn(state: EngineState, batch) -> Dict[str, jax.Array]:
         del batch
         theta = _flatten_worker(state.theta)
-        diffs = theta[:, None, :] - theta[None, :, :]
-        primal_res = jnp.sum(adjacency * jnp.sum(diffs ** 2, axis=-1)) / 2.0
-        return {"primal_residual": primal_res, "theta": theta}
+        return {"primal_residual": topo.primal_residual(theta),
+                "theta": theta}
 
     return fn
 
@@ -828,11 +844,12 @@ def consensus_metrics(loss_fn: Optional[Callable] = None) -> MetricsFn:
 def run(graph: WorkerGraph, cfg: EngineConfig, solver: LocalSolver,
         theta0: Tree, iters: int, seed: int = 0,
         extra_metrics: Optional[MetricsFn] = None,
+        topology: Optional[topo_lib.Topology] = None,
         ) -> Tuple[EngineState, Dict[str, jax.Array]]:
     """Scan the engine step for ``iters`` iterations (batch-free problems)
     and return the final state plus stacked per-iteration metrics."""
     state = init_state(theta0, cfg, solver)
-    step = make_step(graph, cfg, solver, extra_metrics)
+    step = make_step(graph, cfg, solver, extra_metrics, topology=topology)
     keys = jax.random.split(jax.random.PRNGKey(seed), iters)
 
     def body(carry, key):

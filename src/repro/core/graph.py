@@ -14,6 +14,7 @@ the returned `WorkerGraph` carries jnp-ready arrays for the algorithm.
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Optional, Sequence, Tuple
 
 import numpy as np
@@ -30,6 +31,13 @@ class WorkerGraph:
       head_mask: (n,) bool, True for head workers.
       adjacency: (n, n) float32 symmetric 0/1 matrix A (Eq. 114).
       degrees: (n,) float32 node degrees d_n = |N_n|.
+
+    Beyond the dense matrices, the graph carries precomputed *edge-list /
+    CSR* views of the same topology (``edge_src``/``edge_dst``,
+    ``csr_offsets``/``csr_indices``, ``neighbor_table``) — the O(E) inputs
+    of the sparse mixing backend (``core/topology.py``). They are derived
+    lazily from ``edges`` and cached on the instance; ``validate()``
+    round-trips them against ``adjacency``.
     """
 
     n: int
@@ -37,6 +45,63 @@ class WorkerGraph:
     head_mask: np.ndarray
     adjacency: np.ndarray
     degrees: np.ndarray
+
+    # -- edge-list / CSR views (sparse-backend metadata) -------------------
+    @functools.cached_property
+    def _directed_edges(self) -> Tuple[np.ndarray, np.ndarray]:
+        """Both orientations of every undirected edge, sorted by
+        (destination, source): ``out[dst] += V[src]`` visits each node's
+        incoming contributions contiguously."""
+        e = np.asarray(self.edges, dtype=np.int64)
+        src = np.concatenate([e[:, 0], e[:, 1]]).astype(np.int32)
+        dst = np.concatenate([e[:, 1], e[:, 0]]).astype(np.int32)
+        order = np.lexsort((src, dst))
+        return src[order], dst[order]
+
+    @property
+    def edge_src(self) -> np.ndarray:
+        """(2E,) int32 source node of each directed edge (dst-sorted)."""
+        return self._directed_edges[0]
+
+    @property
+    def edge_dst(self) -> np.ndarray:
+        """(2E,) int32 destination node of each directed edge (sorted)."""
+        return self._directed_edges[1]
+
+    @functools.cached_property
+    def csr_offsets(self) -> np.ndarray:
+        """(N+1,) int32 CSR row pointers: node n's neighbors are
+        ``csr_indices[csr_offsets[n]:csr_offsets[n + 1]]``."""
+        counts = np.bincount(self.edge_dst, minlength=self.n)
+        offsets = np.zeros(self.n + 1, dtype=np.int64)
+        np.cumsum(counts, out=offsets[1:])
+        return offsets.astype(np.int32)
+
+    @property
+    def csr_indices(self) -> np.ndarray:
+        """(2E,) int32 CSR column indices (= ``edge_src``: dst-sorted
+        directed edges ARE the CSR layout)."""
+        return self.edge_src
+
+    @property
+    def max_degree(self) -> int:
+        return int(self.degrees.max())
+
+    @functools.cached_property
+    def neighbor_table(self) -> Tuple[np.ndarray, np.ndarray]:
+        """Degree-padded CSR: ``(table (N, S) int32, valid (N, S) f32)``
+        with S = max_degree; slot s of row n is n's s-th neighbor (pad
+        rows point at node 0 with valid = 0). This is the rectangular
+        layout the Pallas edge-gather mix kernel consumes."""
+        s = max(self.max_degree, 1)
+        table = np.zeros((self.n, s), dtype=np.int32)
+        valid = np.zeros((self.n, s), dtype=np.float32)
+        offsets, indices = self.csr_offsets, self.csr_indices
+        for node in range(self.n):
+            lo, hi = int(offsets[node]), int(offsets[node + 1])
+            table[node, :hi - lo] = indices[lo:hi]
+            valid[node, :hi - lo] = 1.0
+        return table, valid
 
     # -- derived matrices (Appendix D) ------------------------------------
     @property
@@ -103,6 +168,23 @@ class WorkerGraph:
             a, 0.5 * (m_plus @ m_plus.T - m_minus @ m_minus.T), atol=1e-5)
         c = self.c_matrix
         np.testing.assert_allclose(a, c + c.T, atol=1e-5)
+        # edge-list / CSR views reconstruct the same adjacency
+        src, dst = self.edge_src, self.edge_dst
+        assert src.shape == dst.shape == (2 * self.num_edges,)
+        rebuilt = np.zeros_like(a)
+        np.add.at(rebuilt, (dst, src), 1.0)
+        np.testing.assert_array_equal(rebuilt, a)
+        assert (np.diff(dst) >= 0).all(), "directed edges must be dst-sorted"
+        offsets = self.csr_offsets
+        np.testing.assert_array_equal(np.diff(offsets),
+                                      self.degrees.astype(np.int64))
+        table, valid = self.neighbor_table
+        np.testing.assert_array_equal(valid.sum(axis=1),
+                                      self.degrees.astype(np.float32))
+        rebuilt_t = np.zeros_like(a)
+        rows = np.repeat(np.arange(self.n), table.shape[1])
+        np.add.at(rebuilt_t, (rows, table.ravel()), valid.ravel())
+        np.testing.assert_array_equal(rebuilt_t, a)
 
     def connectivity_ratio(self) -> float:
         """p = |E| / (N(N-1)/2), the paper's density measure."""

@@ -1,0 +1,297 @@
+"""Pluggable topology backends for the consensus engine (DESIGN.md
+§Topology).
+
+Every place the engine touches the communication graph — the neighbor
+aggregation ``A @ V`` of the primal updates, the Laplacian term
+``(D - A) theta_hat`` of the dual update (Eq. 23), and the pairwise primal
+residual (Eq. 28) — now goes through ONE object, a :class:`Topology` built
+from a :class:`~repro.core.graph.WorkerGraph`. Three interchangeable
+backends (selected by ``EngineConfig.mix_backend``):
+
+* **dense** — the seed semantics: ``(N, N) @ (N, D)`` matmul against the
+  full adjacency, optionally through the ``bipartite_mix`` MXU Pallas
+  kernel (``use_pallas_mix``). O(N²·D) work; bit-golden vs the frozen seed
+  stepper, and the default.
+* **sparse** — the graph's precomputed edge-list/CSR arrays
+  (``WorkerGraph.edge_src/edge_dst``): gather the source rows and
+  ``segment_sum`` them into the destination rows — O(E·D) work, no (N, N)
+  operand in the program at all (the adjacency never leaves the host).
+  ``use_pallas_mix`` routes through the ``edge_gather_mix`` Pallas kernel
+  (degree-padded CSR + scalar-prefetch row gather) instead of the jnp
+  gather/segment pair.
+* **sharded** — SPMD neighbor mixing: ``shard_map`` over the worker mesh
+  axis with *explicit* input/output shardings. Each worker shard holds its
+  adjacency row block, all-gathers the peer rows once, and emits its own
+  output block — one explicit collective instead of the XLA-chosen
+  collective-permute chain that triggered the involuntary-remat warning in
+  the multi-pod ADMM train bundle (ROADMAP item).
+
+All three agree to fp tolerance (``tests/test_topology.py``); dense is
+exactly the old ``engine.tree_mix`` math so the G=1 flat path stays
+bit-for-bit golden. Where each wins is measured in
+``benchmarks/bench_engine.py`` and discussed in DESIGN.md §Topology — on
+CPU the Eigen matmul is compute-bound and beats XLA's scalarized
+gather/scatter at any paper density, so sparse's wall-time win is an
+accelerator/scale story; its unconditional win at p ≤ 0.5 is state size
+(O(E) edge arrays vs the O(N²) adjacency operand).
+
+Trees mix through the packed ``(N, D)`` buffer view (``core/packing.py``)
+whenever the leaves share a dtype — one backend invocation for the whole
+tree; mixed-dtype trees fall back to leaf-wise application with identical
+semantics.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import packing
+from repro.core.graph import WorkerGraph
+
+Tree = Any
+
+BACKENDS = ("dense", "sparse", "sharded")
+
+
+def _apply_flat(fn, a: Tree) -> Tree:
+    """Apply a ``(N, d) -> (N, d)`` map to a tree: through the packed
+    buffer when all leaves share a dtype (one call for the whole tree),
+    leaf-wise otherwise. Mirrors the seed ``tree_mix`` dispatch exactly."""
+    def one(x):
+        return fn(x.reshape(x.shape[0], -1)).reshape(x.shape)
+
+    leaves = jax.tree_util.tree_leaves(a)
+    if len(leaves) > 1 and len({x.dtype for x in leaves}) == 1:
+        pk = packing.make_packing(a, (0,) * len(leaves))
+        buf = packing.pack(pk, a, dtype=leaves[0].dtype)
+        return packing.unpack(pk, fn(buf), like=a)
+    return jax.tree_util.tree_map(one, a)
+
+
+@dataclasses.dataclass(frozen=True)
+class Topology:
+    """Graph-structure operations behind one interface.
+
+    Subclasses implement ``_mix_flat`` on a ``(N, d)`` buffer; everything
+    else (tree dispatch, the Laplacian dual term, residuals) is shared, so
+    every engine consumer of the graph — phase mix, dual update, metrics —
+    automatically uses the selected backend (and its kernel routing: the
+    seed bug of the dual step silently skipping ``use_pallas_mix`` cannot
+    recur, there is no second mix implementation to drift)."""
+
+    n: int
+    degrees: jax.Array          # (N,) float32
+    use_pallas: bool = False
+
+    backend = "abstract"
+
+    def _mix_flat(self, flat: jax.Array) -> jax.Array:
+        raise NotImplementedError
+
+    # ------------------------------------------------------------- mix --
+    def mix(self, a: Tree) -> Tree:
+        """Neighbor sum per worker: out_n = sum_{m in N_n} a_m."""
+        return _apply_flat(self._mix_flat, a)
+
+    # ----------------------------------------------------- dual update --
+    def laplacian(self, a: Tree) -> Tree:
+        """Graph Laplacian applied per leaf: ``(D - A) a`` in f32 — the
+        dual ascent direction of Eq. (23)."""
+        neigh = self.mix(a)
+
+        def one(x, nm):
+            shape1 = (x.shape[0],) + (1,) * (x.ndim - 1)
+            return (self.degrees.reshape(shape1) * x.astype(jnp.float32)
+                    - nm.astype(jnp.float32))
+
+        return jax.tree_util.tree_map(one, a, neigh)
+
+    # -------------------------------------------------------- residuals --
+    def primal_residual(self, theta: jax.Array) -> jax.Array:
+        """Pairwise primal residual sum_{(n,m) in E} ||theta_n - theta_m||²
+        (Eq. 28) over a flat ``(N, d)`` view."""
+        raise NotImplementedError
+
+    def dual_residual(self, lap: Tree) -> jax.Array:
+        """Squared norm of a Laplacian image, summed over the tree. With
+        ``lap = laplacian(theta_hat)`` (already in hand from the dual
+        update — no extra mix) this is the unscaled dual-ascent-direction
+        magnitude ``||(D - A) theta_hat||²``, which vanishes exactly at
+        consensus (the all-equal vector spans ker(D - A) on a connected
+        graph)."""
+        parts = jax.tree_util.tree_map(
+            lambda x: jnp.sum(jnp.square(x.astype(jnp.float32))), lap)
+        return sum(jax.tree_util.tree_leaves(parts))
+
+
+@dataclasses.dataclass(frozen=True)
+class DenseTopology(Topology):
+    """Seed semantics: one matmul against the full (N, N) adjacency."""
+
+    adjacency: jax.Array = None  # (N, N)
+
+    backend = "dense"
+
+    def _mix_flat(self, flat: jax.Array) -> jax.Array:
+        if self.use_pallas:
+            from repro.kernels import ops as kernel_ops
+            return kernel_ops.bipartite_mix(self.adjacency, flat)
+        return self.adjacency.astype(flat.dtype) @ flat
+
+    def primal_residual(self, theta: jax.Array) -> jax.Array:
+        diffs = theta[:, None, :] - theta[None, :, :]
+        return jnp.sum(self.adjacency
+                       * jnp.sum(diffs ** 2, axis=-1)) / 2.0
+
+
+@dataclasses.dataclass(frozen=True)
+class SparseTopology(Topology):
+    """Edge-list/CSR backend: gather + segment_sum over directed edges.
+
+    O(E·D) work and O(E) topology state; the (N, N) adjacency is never an
+    operand of the traced program. ``use_pallas`` switches the mix to the
+    ``edge_gather_mix`` kernel over the degree-padded neighbor table."""
+
+    edge_src: jax.Array = None      # (2E,) int32, dst-sorted
+    edge_dst: jax.Array = None      # (2E,) int32, sorted
+    und_head: jax.Array = None      # (E,) int32 undirected edge heads
+    und_tail: jax.Array = None      # (E,) int32 undirected edge tails
+    # degree-padded CSR, only materialized for the kernel path (it is
+    # O(N·max_degree), not O(E) — a star graph pays ~N²/4 for it)
+    nbr_table: jax.Array = None     # (N, S) int32
+    nbr_valid: jax.Array = None     # (N, S) f32 1/0 slot validity
+
+    backend = "sparse"
+
+    def _mix_flat(self, flat: jax.Array) -> jax.Array:
+        if self.use_pallas:
+            from repro.kernels import ops as kernel_ops
+            return kernel_ops.edge_gather_mix(
+                flat, self.nbr_table, self.nbr_valid).astype(flat.dtype)
+        rows = flat.at[self.edge_src].get(mode="promise_in_bounds")
+        return jax.ops.segment_sum(rows, self.edge_dst,
+                                   num_segments=self.n,
+                                   indices_are_sorted=True)
+
+    def primal_residual(self, theta: jax.Array) -> jax.Array:
+        t32 = theta.astype(jnp.float32)
+        diff = (t32.at[self.und_head].get(mode="promise_in_bounds")
+                - t32.at[self.und_tail].get(mode="promise_in_bounds"))
+        return jnp.sum(jnp.square(diff))
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardedTopology(DenseTopology):
+    """SPMD mixing: shard_map over the worker mesh axis.
+
+    Each shard keeps its (N/w, N) adjacency row block and its (N/w, d)
+    value rows, all-gathers the peer rows once (tiled, one explicit
+    collective over exactly the worker axis), and writes only its own
+    output block — in_specs/out_specs pin every operand's layout so XLA
+    never has to invent the collective-permute schedule that caused the
+    involuntary-remat warning in the multi-pod ADMM bundle. The program
+    is fully manual over the whole mesh: the feature axis additionally
+    splits over the non-worker axes (TP/FSDP) whenever it divides, so
+    each device mixes only its (N/w, d/rest) tile and no cross-replica
+    resharding is introduced. ``use_pallas`` runs each shard's local
+    row-block matmul on the ``bipartite_mix`` MXU kernel; the residual
+    reduction is inherited from the dense backend."""
+
+    mesh: Any = None
+    axis: str = "workers"
+    rest: Tuple[str, ...] = ()      # non-worker mesh axes (feature split)
+
+    backend = "sharded"
+
+    def _mix_flat(self, flat: jax.Array) -> jax.Array:
+        from jax.experimental.shard_map import shard_map
+        from jax.sharding import PartitionSpec as P
+
+        rest_size = 1
+        for a in self.rest:
+            rest_size *= self.mesh.shape[a]
+        feat = self.rest if (self.rest and
+                             flat.shape[1] % rest_size == 0) else None
+
+        def local(a_blk, v_blk):
+            v_all = jax.lax.all_gather(v_blk, self.axis, axis=0, tiled=True)
+            if self.use_pallas:
+                from repro.kernels import ops as kernel_ops
+                return kernel_ops.bipartite_mix(a_blk, v_all)
+            return a_blk.astype(v_all.dtype) @ v_all
+
+        vspec = P(self.axis, feat)
+        return shard_map(local, mesh=self.mesh,
+                         in_specs=(P(self.axis, None), vspec),
+                         out_specs=vspec, check_rep=False)(
+                             self.adjacency, flat)
+
+
+def _default_worker_mesh(n: int):
+    """1-D device mesh for standalone sharded runs (tests / quickstart):
+    all local devices when they divide the worker count, else degenerate
+    1-wide (the shard_map then runs single-shard — same math, same
+    explicit-sharding program structure)."""
+    n_dev = len(jax.devices())
+    width = n_dev if n_dev > 0 and n % n_dev == 0 else 1
+    return jax.make_mesh((width,), ("workers",))
+
+
+def build(graph: WorkerGraph, backend: str = "dense", *,
+          use_pallas_mix: bool = False,
+          mesh: Any = None, worker_axis: Optional[str] = None) -> Topology:
+    """Build the selected topology backend from a worker graph.
+
+    ``mesh``/``worker_axis`` are only consulted by the sharded backend
+    (the production bundle passes its mesh; standalone callers get a
+    1-D mesh over the local devices)."""
+    if backend not in BACKENDS:
+        raise ValueError(f"unknown mix backend {backend!r}; "
+                         f"expected one of {BACKENDS}")
+    degrees = jnp.asarray(graph.degrees, jnp.float32)
+    if backend == "dense":
+        return DenseTopology(n=graph.n, degrees=degrees,
+                             use_pallas=use_pallas_mix,
+                             adjacency=jnp.asarray(graph.adjacency))
+    if backend == "sparse":
+        edges = np.asarray(graph.edges, dtype=np.int64)
+        if use_pallas_mix:
+            table, valid = graph.neighbor_table
+            table, valid = jnp.asarray(table), jnp.asarray(valid)
+        else:
+            table = valid = None
+        return SparseTopology(
+            n=graph.n, degrees=degrees, use_pallas=use_pallas_mix,
+            edge_src=jnp.asarray(graph.edge_src),
+            edge_dst=jnp.asarray(graph.edge_dst),
+            und_head=jnp.asarray(edges[:, 0].astype(np.int32)),
+            und_tail=jnp.asarray(edges[:, 1].astype(np.int32)),
+            nbr_table=table, nbr_valid=valid)
+    if mesh is None:
+        mesh, worker_axis = _default_worker_mesh(graph.n), "workers"
+    if worker_axis is None:
+        worker_axis = mesh.axis_names[0]
+    axis_size = mesh.shape[worker_axis]
+    if graph.n % axis_size != 0:
+        raise ValueError(
+            f"sharded mix needs workers ({graph.n}) divisible by mesh axis "
+            f"{worker_axis!r} ({axis_size})")
+    rest = tuple(a for a in mesh.axis_names if a != worker_axis)
+    return ShardedTopology(n=graph.n, degrees=degrees,
+                           use_pallas=use_pallas_mix,
+                           adjacency=jnp.asarray(graph.adjacency),
+                           mesh=mesh, axis=worker_axis, rest=rest)
+
+
+def mix_dense(adjacency: jax.Array, a: Tree,
+              use_kernel: bool = False) -> Tree:
+    """Legacy helper behind ``engine.tree_mix``: dense neighbor sum on a
+    bare adjacency array (no WorkerGraph required). One implementation —
+    this is the dense backend's own mix."""
+    topo = DenseTopology(n=adjacency.shape[0], degrees=None,
+                         use_pallas=use_kernel, adjacency=adjacency)
+    return topo.mix(a)

@@ -44,19 +44,20 @@ def bipartite_mix(adjacency: jax.Array, values: jax.Array, *,
     """A @ V with VMEM-tiled accumulation.
 
     Args:
-      adjacency: (N, N) float adjacency (any weighting works).
+      adjacency: (M, N) float adjacency (any weighting works; M == N for
+        the full graph, M = N/w for a worker shard's row block under the
+        sharded topology backend).
       values: (N, d) stacked worker vectors.
 
     Returns:
-      (N, d) neighbor sums.
+      (M, d) neighbor sums.
     """
-    n, n2 = adjacency.shape
-    assert n == n2, "adjacency must be square"
+    n_rows, n = adjacency.shape
     assert values.shape[0] == n
     d = values.shape[1]
     dtype = values.dtype
 
-    m_pad = (-n) % block_m
+    m_pad = (-n_rows) % block_m
     k_pad = (-n) % block_k
     d_pad = (-d) % block_n
     a_p = jnp.pad(adjacency.astype(dtype), ((0, m_pad), (0, k_pad)))
@@ -76,4 +77,4 @@ def bipartite_mix(adjacency: jax.Array, values: jax.Array, *,
         out_shape=jax.ShapeDtypeStruct((mp, dp), dtype),
         interpret=interpret,
     )(a_p, v_p)
-    return out[:n, :d]
+    return out[:n_rows, :d]

@@ -37,6 +37,13 @@ def bipartite_mix(adjacency: jax.Array, values: jax.Array) -> jax.Array:
     return _mix.bipartite_mix(adjacency, values, interpret=_interpret())
 
 
+def edge_gather_mix(values: jax.Array, nbr_table: jax.Array,
+                    nbr_valid: jax.Array) -> jax.Array:
+    from repro.kernels import edge_gather_mix as _edge
+    return _edge.edge_gather_mix(values, nbr_table, nbr_valid,
+                                 interpret=_interpret())
+
+
 def slstm_cell(wx, r_w, fbias, c0, n0, m0, h0):
     from repro.kernels import slstm_cell as _cell
     return _cell.slstm_cell(wx, r_w, fbias, c0, n0, m0, h0,

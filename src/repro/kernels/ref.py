@@ -81,6 +81,20 @@ def bipartite_mix_ref(adjacency: jax.Array, values: jax.Array) -> jax.Array:
     return adjacency @ values
 
 
+def edge_gather_mix_ref(values: jax.Array, nbr_table: jax.Array,
+                        nbr_valid: jax.Array) -> jax.Array:
+    """Sparse neighbor aggregation over a degree-padded CSR table —
+    ground truth for the ``edge_gather_mix`` kernel.
+
+    values: (N, d); nbr_table: (N, S) int32 neighbor ids (pad slots
+    arbitrary); nbr_valid: (N, S) 1/0 slot validity. Returns (N, d) f32
+    neighbor sums: out_n = sum_s valid[n, s] * values[nbr[n, s]].
+    """
+    rows = values.astype(jnp.float32)[nbr_table]          # (N, S, d)
+    return jnp.einsum("nsd,ns->nd", rows,
+                      nbr_valid.astype(jnp.float32))
+
+
 def slstm_cell_ref(wx: jax.Array, r_w: jax.Array, fbias: jax.Array,
                    c0: jax.Array, n0: jax.Array, m0: jax.Array,
                    h0: jax.Array):

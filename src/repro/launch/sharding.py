@@ -133,12 +133,14 @@ def params_shardings(param_shapes, mesh, cfg, *, worker_axis=None,
 
 # ------------------------------------------------------ activation rules --
 def activation_rules(mesh, cfg, *, batch_axes=("data",),
-                     worker_mode: bool = False) -> Dict[str, Any]:
+                     worker_mode: bool = False,
+                     worker_axis: str = "data") -> Dict[str, Any]:
     """Logical-name -> mesh-axis map for with_sharding_constraint calls.
 
     batch_axes: axes carrying the (global or per-worker) batch dimension.
-    worker_mode: under ADMM the 'data' axis carries workers; the per-worker
-    batch stays unsharded inside each worker slice.
+    worker_mode: under ADMM a mesh axis carries workers (``worker_axis``:
+    'data' on the single pod, 'pod' across pods); the per-worker batch
+    stays unsharded inside each worker slice.
     """
     tp = tp_axes(mesh)
     batch = tuple(a for a in batch_axes if a in mesh.shape) or None
@@ -152,7 +154,7 @@ def activation_rules(mesh, cfg, *, batch_axes=("data",),
     import os
     rules: Dict[str, Any] = {
         "batch": None if worker_mode else batch,
-        "worker": "data",
+        "worker": worker_axis if worker_axis in mesh.shape else None,
         "seq": None,
         # sequence-parallel residual (Megatron-SP analog): shard the
         # residual stream's S over the model axis so TP all-reduces lower

@@ -39,7 +39,8 @@ def run_admm(cfg, args) -> dict:
         quantize=QuantConfig(b0=args.bits, omega=args.omega)
         if args.quantize else None,
         groups=args.groups,
-        censor_mode=args.censor_mode)
+        censor_mode=args.censor_mode,
+        mix_backend=args.mix_backend)
 
     def grad_fn(theta, batch):
         return jax.vmap(lambda p, b: jax.grad(
@@ -149,6 +150,13 @@ def main(argv=None) -> dict:
                     choices=("global", "group"),
                     help="'global' = paper's whole-model censor norm; "
                          "'group' = per-group censoring (new scenario)")
+    ap.add_argument("--mix-backend", default="dense",
+                    choices=("dense", "sparse", "sharded"),
+                    help="topology backend for neighbor aggregation: "
+                         "'dense' = (N,N) adjacency matmul, 'sparse' = "
+                         "edge-list gather+segment-sum (O(E*d)), 'sharded'"
+                         " = shard_map SPMD mixing over the worker axis "
+                         "(DESIGN.md §Topology)")
     ap.add_argument("--bits", type=int, default=4)
     ap.add_argument("--omega", type=float, default=0.999)
     ap.add_argument("--seed", type=int, default=0)

@@ -93,7 +93,9 @@ def _consensus_cfg(arch: str, multi_pod: bool
     """Production ADMM engine config + local solver. The REPRO_ADMM_* env
     knobs drive the §Perf iterations (the dry-run re-lowers with a knob
     flipped and compares roofline terms); REPRO_ADMM_GROUPS=leaf opts into
-    the L-FGADMM layer-wise quantization mode (DESIGN.md §Groups)."""
+    the L-FGADMM layer-wise quantization mode (DESIGN.md §Groups) and
+    REPRO_ADMM_MIX_BACKEND selects the dense/sparse/sharded topology
+    backend for every neighbor aggregation (DESIGN.md §Topology)."""
     import os
     lean = arch in GIANT_ARCHS     # 314B: SGD local solver + bf16 replicas
     hat = os.environ.get("REPRO_ADMM_HAT_DTYPE",
@@ -104,6 +106,7 @@ def _consensus_cfg(arch: str, multi_pod: bool
         quantize=QuantConfig(b0=4, omega=0.999),
         groups=os.environ.get("REPRO_ADMM_GROUPS", "model"),
         censor_mode=os.environ.get("REPRO_ADMM_CENSOR_MODE", "global"),
+        mix_backend=os.environ.get("REPRO_ADMM_MIX_BACKEND", "dense"),
         hat_dtype=hat or None,
     )
     solver = E.InexactSolver(
@@ -231,7 +234,8 @@ def make_admm_train_bundle(cfg: ModelConfig, shape: ShapeConfig, mesh, *,
     ecfg = ecfg or default_cfg
     solver = solver or default_solver
     rules = SH.activation_rules(mesh, cfg, batch_axes=(inner_axis,)
-                                if inner_axis else (), worker_mode=True)
+                                if inner_axis else (), worker_mode=True,
+                                worker_axis=worker_axis)
 
     # --- state: per-worker stacked params + ADMM auxiliaries --------------
     param_shapes = jax.eval_shape(
@@ -283,9 +287,15 @@ def make_admm_train_bundle(cfg: ModelConfig, shape: ShapeConfig, mesh, *,
             return registry.lm_loss(p, cfg, b)[0]
         return jnp.mean(jax.vmap(one)(theta, batch))
 
+    # The engine mixes through ecfg.mix_backend; the sharded backend gets
+    # the production mesh and its worker axis so the shard_map in tree
+    # mixing carries explicit in/out shardings over exactly the axis the
+    # worker graph lives on (REPRO_ADMM_MIX_BACKEND=sharded; DESIGN.md
+    # §Topology — the involuntary-remat fix for the multi-pod bundle).
     inner_step = E.make_step(graph, ecfg, dataclasses.replace(
         solver, grad_fn=grad_fn),
-        extra_metrics=E.consensus_metrics(loss_fn))
+        extra_metrics=E.consensus_metrics(loss_fn),
+        mesh=mesh, worker_axis=worker_axis)
 
     def train_step(state, batch, key):
         with P.logical_sharding(mesh, rules):

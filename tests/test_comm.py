@@ -47,3 +47,56 @@ def test_worst_link_distance_symmetry():
     d = m.worst_link_distance(g)
     assert d.shape == (10,)
     assert (d > 0).all()
+
+
+def test_link_distances_match_dense_reduction():
+    """The edge-array distances reduce to exactly the old dense-mask
+    worst-neighbor distance."""
+    g = random_bipartite_graph(12, 0.4, seed=5)
+    m = EnergyModel(seed=2)
+    pos = m.placements(g.n)
+    d2 = np.linalg.norm(pos[:, None, :] - pos[None, :, :], axis=-1)
+    want = np.where(g.adjacency > 0, d2, 0.0).max(axis=1)
+    np.testing.assert_allclose(m.worst_link_distance(g), want, rtol=1e-12)
+    d_e = m.link_distances(g)
+    assert d_e.shape == (g.num_edges,)
+    for i, (h, t) in enumerate(g.edges):
+        np.testing.assert_allclose(d_e[i], d2[h, t], rtol=1e-12)
+
+
+def test_actual_bandwidth_mode():
+    """bandwidth_mode="actual": each transmitter splits the band with the
+    other transmitters of its own slot (head slot / tail slot under
+    alternating GGADMM). An uncensored run with an even head/tail split
+    reproduces the fixed-fraction default exactly; censored rounds leave
+    the survivors more band (less energy than the fixed formula)."""
+    g = random_bipartite_graph(8, 0.5, seed=0)
+    k, n = 4, 8
+    head = np.asarray(g.head_mask, dtype=bool)
+    assert head.sum() == 4              # even split: |H| = |T| = N/2
+    payload = np.full((k, n), 500.0)
+    ones = np.ones((k, n))              # nobody censored: |H| share W, then
+    log_fixed = build_comm_log(ones, payload, g, fraction_active=0.5)
+    log_actual = build_comm_log(ones, payload, g, fraction_active=0.5,
+                                bandwidth_mode="actual")
+    np.testing.assert_allclose(log_actual.energy, log_fixed.energy,
+                               rtol=1e-12)
+
+    censored = np.zeros((k, n))
+    censored[:, np.nonzero(head)[0][0]] = 1.0   # one surviving head
+    e_fixed = build_comm_log(censored, payload, g,
+                             fraction_active=0.5).energy
+    e_actual = build_comm_log(censored, payload, g, fraction_active=0.5,
+                              bandwidth_mode="actual").energy
+    assert (e_actual < e_fixed).all()   # survivor gets the whole band
+
+    # Jacobian mode: all transmitters share ONE slot — "actual" with a
+    # full round equals the fixed fraction_active=1.0 formula
+    e_j_fixed = build_comm_log(ones, payload, g,
+                               fraction_active=1.0).energy
+    e_j_actual = build_comm_log(ones, payload, g, fraction_active=1.0,
+                                bandwidth_mode="actual").energy
+    np.testing.assert_allclose(e_j_actual, e_j_fixed, rtol=1e-12)
+
+    with np.testing.assert_raises(AssertionError):
+        build_comm_log(ones, payload, g, bandwidth_mode="nope")

@@ -78,6 +78,51 @@ def test_density_affects_edges():
     assert dense.num_edges > sparse.num_edges
 
 
+# ------------------------------------------- invariants at larger N ----
+# Property-style sweep over the paper's connectivity ratios (Sec. 7) at
+# worker counts past the unit-test scale: bipartiteness, connectivity,
+# degree/adjacency/incidence consistency, and the new edge-list/CSR
+# arrays all round-tripping against the dense adjacency.
+@pytest.mark.parametrize("p", [0.1, 0.3, 0.5, 1.0])
+@pytest.mark.parametrize("n", [48, 96])
+def test_random_graph_invariants_large(n, p):
+    g = G.random_bipartite_graph(n, p, seed=int(n * 10 + p * 10))
+    g.validate()   # bipartite + connected + incidence + edge/CSR identities
+    a = g.adjacency
+    # degrees match adjacency row sums and the CSR row lengths
+    np.testing.assert_array_equal(g.degrees, a.sum(axis=1))
+    np.testing.assert_array_equal(np.diff(g.csr_offsets), g.degrees)
+    # at least a spanning structure, at most the bipartite maximum
+    n_heads = int(g.head_mask.sum())
+    assert g.n - 1 <= g.num_edges <= n_heads * (n - n_heads)
+    # edge endpoints respect the head/tail split
+    assert g.head_mask[g.edges[:, 0]].all()
+    assert (~g.head_mask[g.edges[:, 1]]).all()
+
+
+@pytest.mark.parametrize("p", [0.1, 0.3, 0.5, 1.0])
+def test_edge_arrays_match_adjacency(p):
+    g = G.random_bipartite_graph(64, p, seed=11)
+    # every directed edge appears exactly once, dst-sorted
+    rebuilt = np.zeros_like(g.adjacency)
+    np.add.at(rebuilt, (g.edge_dst, g.edge_src), 1.0)
+    np.testing.assert_array_equal(rebuilt, g.adjacency)
+    assert (np.diff(g.edge_dst) >= 0).all()
+    # CSR rows list exactly each node's neighbor set
+    for node in range(0, g.n, 7):
+        lo, hi = g.csr_offsets[node], g.csr_offsets[node + 1]
+        want = set(np.nonzero(g.adjacency[node] > 0)[0].tolist())
+        assert set(g.csr_indices[lo:hi].tolist()) == want
+    # padded neighbor table covers the same sets, valid-masked
+    table, valid = g.neighbor_table
+    assert table.shape == (g.n, g.max_degree)
+    for node in range(0, g.n, 7):
+        deg = int(g.degrees[node])
+        assert valid[node, :deg].all() and not valid[node, deg:].any()
+        want = set(np.nonzero(g.adjacency[node] > 0)[0].tolist())
+        assert set(table[node, :deg].tolist()) == want
+
+
 def test_nonbipartite_rejected():
     g = G.chain_graph(4)
     bad = g.adjacency.copy()
