@@ -38,6 +38,32 @@ def threshold(cfg: CensorConfig, k: jax.Array) -> jax.Array:
     return cfg.tau0 * jnp.power(cfg.xi, k.astype(jnp.float32))
 
 
+def group_thresholds(tau: jax.Array, group_dims: Tuple[int, ...],
+                     total_dim: int) -> jax.Array:
+    """Per-group thresholds ``tau_g = tau * sqrt(d_g / d)`` for an
+    arbitrary group spec: the squared thresholds partition the global
+    censor budget (``sum_g tau_g^2 = tau^2`` whenever the groups partition
+    the model's coordinates, which every compiled spec guarantees), so
+    group-mode censoring degenerates to the paper's single test at G=1.
+
+    Args:
+      tau: scalar global threshold tau^k (traced).
+      group_dims: static per-group parameter counts d_g.
+      total_dim: static model dimension d = sum_g d_g.
+
+    Returns:
+      (G,) thresholds.
+    """
+    dims = jnp.asarray(group_dims, jnp.float32)
+    return tau * jnp.sqrt(dims / max(float(total_dim), 1.0))
+
+
+def group_censor_mask(change_g: jax.Array, tau_g: jax.Array) -> jax.Array:
+    """(N, G) float 0/1 mask: group g of worker n transmits iff its norm
+    moved at least tau_g. ``change_g``: (N, G) per-group change norms."""
+    return (change_g >= tau_g[None, :]).astype(jnp.float32)
+
+
 def censor_mask(last_sent: jax.Array, candidate: jax.Array,
                 cfg: CensorConfig, k_next: jax.Array) -> jax.Array:
     """(N,) float 0/1 mask: 1 => worker transmits this round.

@@ -47,8 +47,13 @@ its bit-identical jnp oracle otherwise. The group-censor norm reduction and
 ``tree_mix`` ride the same packed view. The relevant
 :class:`EngineConfig` knobs:
 
-* ``groups``: ``"model"`` (G=1), ``"leaf"``, or an explicit leaf->group
-  tuple — any of them runs as one fused call on the packed buffer;
+* ``groups``: ``"model"`` (G=1), ``"leaf"``, a named block spec
+  (``"block:attn,mlp,embed"``), ``"auto:K"``, an explicit leaf->group
+  tuple, or index buckets ``((0, 1), (2,))`` — every spec compiles to the
+  same per-leaf id map (:func:`resolve_groups`, DESIGN.md §Groups) and
+  runs as one fused call on the packed buffer; the fused call computes
+  the grouped range reduction *inside* the quantize kernel/oracle (no
+  separate side-information pass over the (N, D) buffer);
 * ``use_pallas_quant`` / ``use_pallas_mix``: route the packed buffer
   through the Pallas kernels instead of the jnp oracles;
 * ``censor_mode="group"``: the per-group norm test reduces over the packed
@@ -70,11 +75,15 @@ from typing import Any, Callable, Dict, Optional, Protocol, Sequence, Tuple, Uni
 import jax
 import jax.numpy as jnp
 
+import numpy as np
+
+from repro.core import censoring as censor_lib
 from repro.core import packing
+from repro.core import quantization as quant_lib
 from repro.core import topology as topo_lib
 from repro.core.censoring import CensorConfig, threshold
 from repro.core.graph import WorkerGraph
-from repro.core.quantization import QuantConfig, required_bits
+from repro.core.quantization import QuantConfig
 
 _EPS = 1e-12
 
@@ -130,28 +139,58 @@ def tree_where_worker(mask: jax.Array, a: Tree, b: Tree) -> Tree:
 
 
 # ------------------------------------------------------- group resolution --
-GroupSpec = Union[str, Tuple[int, ...]]
+GroupSpec = Union[str, Tuple]
+
+GroupSpecError = packing.GroupSpecError
 
 
 def resolve_groups(theta: Tree, groups: GroupSpec) -> Tuple[int, ...]:
     """Leaf index -> group id, aligned with ``tree_leaves`` order.
 
-    ``"model"``: every leaf in group 0 (G=1, the paper's whole-model mode).
-    ``"leaf"``: leaf i in group i (G=num_leaves, L-FGADMM layer-wise mode).
-    Explicit tuple: validated contiguous ids ``0..G-1``.
+    Spec grammar (DESIGN.md §Groups):
+
+    * ``"model"``: every leaf in group 0 (G=1, the paper's whole-model mode).
+    * ``"leaf"``: leaf i in group i (G=num_leaves, L-FGADMM layer-wise mode).
+    * ``"block:attn,mlp,embed"``: named block buckets — each name claims the
+      leaves whose path matches its alias set (``packing.BUCKET_ALIASES``,
+      falling back to the name itself as a path substring); unmatched
+      leaves land in ``rest``. Unknown and empty buckets raise
+      :class:`GroupSpecError`.
+    * ``"auto:K"``: <= K groups. Resolution here is the deterministic
+      shape-balanced contiguous partition (works under ``eval_shape``); the
+      live range-statistics refinement is :class:`AutoGrouper`'s job.
+    * flat int tuple: validated leaf -> contiguous group ids ``0..G-1``.
+    * tuple of index tuples ``((0, 1), (2,))``: explicit leaf-index buckets;
+      must partition the leaves (overlap / gap => :class:`GroupSpecError`).
     """
     n_leaves = len(jax.tree_util.tree_leaves(theta))
-    if groups == "model":
-        return (0,) * n_leaves
-    if groups == "leaf":
-        return tuple(range(n_leaves))
+    if isinstance(groups, str):
+        if groups == "model":
+            return (0,) * n_leaves
+        if groups == "leaf":
+            return tuple(range(n_leaves))
+        packing.validate_spec_syntax(groups)
+        if groups.startswith("block:"):
+            return packing.resolve_block_groups(
+                theta, packing.parse_block_spec(groups))
+        return packing.resolve_auto_groups(theta,
+                                           packing.parse_auto_spec(groups))
+    nested = [isinstance(g, (tuple, list)) for g in groups]
+    if groups and all(nested):
+        return packing.resolve_index_buckets(theta, groups)
+    if any(nested):
+        raise GroupSpecError(
+            f"mixed tuple spec {groups!r}: use either a flat leaf->group "
+            f"id tuple like (0, 0, 1) or index buckets like ((0, 1), (2,))"
+            f" — not both")
     ids = tuple(int(g) for g in groups)
     if len(ids) != n_leaves:
-        raise ValueError(f"group spec covers {len(ids)} leaves, "
-                         f"tree has {n_leaves}")
+        raise GroupSpecError(f"group spec covers {len(ids)} leaves, "
+                             f"tree has {n_leaves}")
     n_groups = max(ids) + 1
     if set(ids) != set(range(n_groups)):
-        raise ValueError(f"group ids must be contiguous 0..G-1, got {ids}")
+        raise GroupSpecError(
+            f"group ids must be contiguous 0..G-1, got {ids}")
     return ids
 
 
@@ -238,25 +277,77 @@ def grouped_quantize_step(
                                          use_kernel)
 
 
+def _finish_packed_step(state: GroupQuantState, pk, out, range_new, bits,
+                        delta, cfg: QuantConfig):
+    """Shared tail of the packed paths: degenerate-group state carry,
+    unpack, QSGD payload accounting. All (N, G)-sized — the (N, D) work is
+    already done by the quantize call."""
+    degen = range_new <= _EPS                                     # (N, G)
+    q_hat_new = packing.unpack(pk, out, like=state.q_hat)
+    new_state = GroupQuantState(
+        q_hat=q_hat_new,
+        range_prev=jnp.where(degen, state.range_prev, range_new),
+        bits_prev=bits,
+        delta_prev=jnp.where(degen, state.delta_prev, delta),
+        initialized=jnp.ones_like(state.initialized),
+    )
+    dims_arr = jnp.asarray(pk.group_dims, jnp.float32)
+    payload = jnp.sum(bits * dims_arr[None, :], axis=-1) \
+        + float(pk.n_groups * cfg.b_overhead)
+    return new_state, q_hat_new, bits, payload
+
+
 def _grouped_quantize_step_packed(
     state: GroupQuantState, theta: Tree, key: jax.Array, cfg: QuantConfig,
     group_ids: Sequence[int], use_kernel: bool = False,
 ) -> Tuple[GroupQuantState, Tree, jax.Array, jax.Array]:
-    """Fused path: quantize every leaf of the tree in one packed call."""
+    """Fused path: the whole grouped round — range reduction, Eq. (18) bit
+    schedule, quantize, degenerate passthrough — in one call over the
+    packed buffer. ``use_kernel=True`` routes it through the single
+    ``pallas_call`` of ``kernels.stoch_quantize_grouped_fused`` (the range
+    min/max happens *inside* the kernel; no separate side-information pass
+    appears in the traced program); ``use_kernel=False`` runs the
+    bit-identical jnp oracle."""
     pk = packing.make_packing(theta, group_ids)
-    n_groups = state.n_groups
+    theta_p = packing.pack(pk, theta)                     # (N, D) f32
+    qprev_p = packing.pack(pk, state.q_hat)               # (N, D) f32
+
+    # One draw for the whole packed buffer with the phase key (the fused
+    # analog of the seed's single whole-vector draw).
+    uniforms = jax.random.uniform(key, theta_p.shape, jnp.float32)
+    gid_cols = jnp.asarray(pk.col_group_ids)
+    if use_kernel:
+        from repro.kernels import ops as kernel_ops
+        fused = kernel_ops.stoch_quantize_grouped_fused
+    else:
+        from repro.kernels import ref as kernel_ref
+        fused = kernel_ref.stoch_quantize_grouped_fused_ref
+    out, range_new, bits, delta = fused(
+        theta_p, qprev_p, uniforms, state.bits_prev, state.range_prev,
+        state.initialized, gid_cols, group_runs=pk.group_runs,
+        omega=cfg.omega, b0=cfg.b0, b_max=cfg.b_max)
+    return _finish_packed_step(state, pk, out, range_new, bits, delta, cfg)
+
+
+def grouped_quantize_step_twopass(
+    state: GroupQuantState, theta: Tree, key: jax.Array, cfg: QuantConfig,
+    group_ids: Sequence[int], use_kernel: bool = False,
+) -> Tuple[GroupQuantState, Tree, jax.Array, jax.Array]:
+    """The pre-fusion packed path, kept for benchmarks and parity tests:
+    the grouped (N, G) min/max side information is computed in a separate
+    ``segment_maxabs`` pass over the packed buffer *before* the quantize
+    call — one extra full read of (N, D) on the hot path, which is exactly
+    what the fused path deletes (``benchmarks/bench_engine.py``
+    ``fused_range``). Value-identical to the fused path."""
+    pk = packing.make_packing(theta, group_ids)
     theta_p = packing.pack(pk, theta)                     # (N, D) f32
     qprev_p = packing.pack(pk, state.q_hat)               # (N, D) f32
 
     range_new = packing.segment_maxabs(pk, theta_p - qprev_p)     # (N, G)
-    bits = required_bits(state.bits_prev, range_new, state.range_prev,
-                         cfg.omega, state.initialized, cfg.b0, cfg.b_max)
-    levels = jnp.exp2(bits) - 1.0
-    delta = 2.0 * range_new / jnp.maximum(levels, 1.0)            # (N, G)
-    degen = range_new <= _EPS                                     # (N, G)
+    bits, delta, degen = quant_lib.bit_schedule(
+        state.bits_prev, range_new, state.range_prev, state.initialized,
+        cfg.omega, cfg.b0, cfg.b_max)
 
-    # One draw for the whole packed buffer with the phase key (the fused
-    # analog of the seed's single whole-vector draw).
     uniforms = jax.random.uniform(key, theta_p.shape, jnp.float32)
     gid_cols = jnp.asarray(pk.col_group_ids)
     if use_kernel:
@@ -269,19 +360,7 @@ def _grouped_quantize_step_packed(
             theta_p, qprev_p, uniforms, delta, range_new, gid_cols)
     # degenerate groups (nothing moved): keep the old reconstruction
     out = jnp.where(jnp.take(degen, gid_cols, axis=1), qprev_p, out)
-    q_hat_new = packing.unpack(pk, out, like=state.q_hat)
-
-    new_state = GroupQuantState(
-        q_hat=q_hat_new,
-        range_prev=jnp.where(degen, state.range_prev, range_new),
-        bits_prev=bits,
-        delta_prev=jnp.where(degen, state.delta_prev, delta),
-        initialized=jnp.ones_like(state.initialized),
-    )
-    dims_arr = jnp.asarray(pk.group_dims, jnp.float32)
-    payload = jnp.sum(bits * dims_arr[None, :], axis=-1) \
-        + float(n_groups * cfg.b_overhead)
-    return new_state, q_hat_new, bits, payload
+    return _finish_packed_step(state, pk, out, range_new, bits, delta, cfg)
 
 
 def grouped_quantize_step_unfused(
@@ -306,11 +385,10 @@ def grouped_quantize_step_unfused(
                    for t, q in zip(leaves, q_leaves)]
     range_new = _group_reduce(diff_maxabs, group_ids, n_groups,
                               lambda s: jnp.max(s, axis=0))       # (N, G)
-    bits = required_bits(state.bits_prev, range_new, state.range_prev,
-                         cfg.omega, state.initialized, cfg.b0, cfg.b_max)
+    bits, delta, degen = quant_lib.bit_schedule(
+        state.bits_prev, range_new, state.range_prev, state.initialized,
+        cfg.omega, cfg.b0, cfg.b_max)
     levels = jnp.exp2(bits) - 1.0
-    delta = 2.0 * range_new / jnp.maximum(levels, 1.0)            # (N, G)
-    degen = range_new <= _EPS                                     # (N, G)
 
     keys = _leaf_keys(key, len(leaves))
 
@@ -515,16 +593,26 @@ class EngineConfig:
     alternating: bool = True          # GADMM grouping; False => Jacobian ADMM
     censor: CensorConfig = dataclasses.field(default_factory=CensorConfig)
     quantize: Optional[QuantConfig] = None
-    groups: GroupSpec = "model"       # "model" (G=1) | "leaf" | explicit ids
+    groups: GroupSpec = "model"       # "model"|"leaf"|"block:..."|"auto:K"|
+    #                                   explicit ids | index buckets
     censor_mode: str = "global"       # "global" (paper) | "group" (new)
     mix_backend: str = "dense"        # "dense" | "sparse" | "sharded"
     use_pallas_mix: bool = False      # route the mix through its kernel
     use_pallas_quant: bool = False
     hat_dtype: Optional[str] = None   # narrow theta_hat/q_hat/alpha replicas
+    regroup_every: int = 0            # auto:K re-clustering period (0 = off)
 
     def __post_init__(self):
         assert self.censor_mode in ("global", "group")
         assert self.mix_backend in topo_lib.BACKENDS, self.mix_backend
+        if isinstance(self.groups, str):
+            # fail loudly on a typo'd spec at config construction — the old
+            # behavior surfaced only as an unrelated int() error deep in
+            # resolve_groups (or not at all)
+            packing.validate_spec_syntax(self.groups)
+        if self.regroup_every < 0:
+            raise ValueError(f"regroup_every must be >= 0, "
+                             f"got {self.regroup_every}")
 
     @property
     def name(self) -> str:
@@ -558,6 +646,103 @@ class EngineState:
 
 def n_groups_of(theta: Tree, groups: GroupSpec) -> int:
     return max(resolve_groups(theta, groups)) + 1
+
+
+# ------------------------------------------------------- auto-grouping --
+@jax.jit
+def _leaf_maxabs_stack(theta: Tree, q_hat: Tree) -> jax.Array:
+    return jnp.stack([jnp.max(jnp.abs(t.astype(jnp.float32)
+                                      - q.astype(jnp.float32)))
+                      for t, q in zip(jax.tree_util.tree_leaves(theta),
+                                      jax.tree_util.tree_leaves(q_hat))])
+
+
+def leaf_log_ranges(theta: Tree, q_hat: Tree) -> np.ndarray:
+    """Host-side per-leaf log2 quantizer range: max over workers and
+    coordinates of ``|theta - q_hat|`` per leaf, floored at 2^-40. One
+    jitted (L,) reduction and a single device->host transfer, run only at
+    regroup events (outside the training jit)."""
+    vals = np.asarray(_leaf_maxabs_stack(theta, q_hat), np.float64)
+    return np.log2(np.maximum(vals, 2.0 ** -40))
+
+
+def remap_group_state(quant: GroupQuantState, old_ids: Sequence[int],
+                      new_ids: Sequence[int]) -> GroupQuantState:
+    """Carry the (N, G) quantizer-chain state across a regroup event.
+
+    Each new group inherits the *most conservative* side information of the
+    old groups its leaves came from: max range/bits/delta (a larger R and b
+    keep the Eq. (18) growth rule's Δ^k <= ω Δ^{k-1} contract satisfiable)
+    and min ``initialized`` (a new group touching any uninitialized old
+    group restarts at b0). ``q_hat`` replicas are per-coordinate and carry
+    over untouched — regrouping never desynchronizes receiver replicas."""
+    old_ids = tuple(int(g) for g in old_ids)
+    new_ids = tuple(int(g) for g in new_ids)
+    if len(old_ids) != len(new_ids):
+        raise ValueError(f"remap across different trees: {len(old_ids)} "
+                         f"vs {len(new_ids)} leaves")
+    if old_ids == new_ids:
+        return quant
+    cols_r, cols_b, cols_d, cols_i = [], [], [], []
+    for g in range(max(new_ids) + 1):
+        olds = sorted({old_ids[i] for i, ng in enumerate(new_ids)
+                       if ng == g})
+        idx = jnp.asarray(olds, jnp.int32)
+        cols_r.append(jnp.max(quant.range_prev[:, idx], axis=1))
+        cols_b.append(jnp.max(quant.bits_prev[:, idx], axis=1))
+        cols_d.append(jnp.max(quant.delta_prev[:, idx], axis=1))
+        cols_i.append(jnp.min(quant.initialized[:, idx], axis=1))
+    return GroupQuantState(
+        q_hat=quant.q_hat,
+        range_prev=jnp.stack(cols_r, axis=1),
+        bits_prev=jnp.stack(cols_b, axis=1),
+        delta_prev=jnp.stack(cols_d, axis=1),
+        initialized=jnp.stack(cols_i, axis=1),
+    )
+
+
+@dataclasses.dataclass
+class AutoGrouper:
+    """Driver-side re-clustering loop for ``groups="auto:K"``.
+
+    Holds an EMA of per-leaf log2 ranges and, every ``regroup_every``
+    rounds, re-runs the greedy adjacent-merge clustering
+    (``packing.greedy_range_grouping``). Group ids are segment indices in
+    leaf order — monotone over leaves — so ids never permute between
+    regroup events (only segment boundaries move), keeping the compiled
+    step's static layout (and therefore the phase-key PRNG stream, which is
+    drawn per packed buffer independent of G) deterministic for a given
+    seed. The caller (``launch/train.py``) swaps ``EngineConfig.groups``
+    for the returned explicit ids, remaps the quantizer state with
+    :func:`remap_group_state`, and re-jits the step when ids change."""
+
+    k: int
+    regroup_every: int
+    ema: float = 0.5
+    log_ranges: Optional[np.ndarray] = None
+
+    @staticmethod
+    def from_config(cfg: "EngineConfig") -> Optional["AutoGrouper"]:
+        if (isinstance(cfg.groups, str) and cfg.groups.startswith("auto:")
+                and cfg.regroup_every > 0):
+            return AutoGrouper(k=packing.parse_auto_spec(cfg.groups),
+                               regroup_every=cfg.regroup_every)
+        return None
+
+    def should_regroup(self, step_idx: int) -> bool:
+        return (self.regroup_every > 0 and step_idx > 0
+                and step_idx % self.regroup_every == 0)
+
+    def regroup(self, theta: Tree, q_hat: Tree) -> Tuple[int, ...]:
+        stats = leaf_log_ranges(theta, q_hat)
+        if self.log_ranges is None:
+            self.log_ranges = stats
+        else:
+            self.log_ranges = (self.ema * self.log_ranges
+                               + (1.0 - self.ema) * stats)
+        dims = [int(x.size // x.shape[0])
+                for x in jax.tree_util.tree_leaves(theta)]
+        return packing.greedy_range_grouping(self.log_ranges, dims, self.k)
 
 
 def init_state(theta: Tree, cfg: EngineConfig,
@@ -609,11 +794,10 @@ def _censor_masks(state: EngineState, candidate: Tree, cfg: EngineConfig,
     # per-group censoring: tau_g^2 proportional to d_g so the group
     # thresholds partition the global budget (sum_g tau_g^2 = tau^2); the
     # per-group sums reduce over the packed buffer in one segment-sum.
+    # Threshold math lives in core.censoring so every spec shape shares it.
     change_g = jnp.sqrt(packing.segment_sqnorm(pk, diff_p))
-    d_total = float(pk.dim)
-    dims = jnp.asarray(pk.group_dims, jnp.float32)
-    tau_g = tau * jnp.sqrt(dims / max(d_total, 1.0))
-    gmask = (change_g >= tau_g[None, :]).astype(jnp.float32)
+    tau_g = censor_lib.group_thresholds(tau, pk.group_dims, pk.dim)
+    gmask = censor_lib.group_censor_mask(change_g, tau_g)
     return jnp.max(gmask, axis=-1), gmask
 
 

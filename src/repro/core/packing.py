@@ -26,6 +26,15 @@ single fused call:
 
 Everything here is jit-traceable; the cache only avoids re-deriving static
 layout (and keeps ``col_group_ids`` as one host array per layout).
+
+This module also owns the **structured group-spec language** (DESIGN.md
+§Groups): named block buckets (``"block:attn,mlp,embed"``), shape-balanced
+auto partitions (``"auto:K"``), explicit index buckets
+(``((0, 1), (2, 3))``) and the greedy range-similarity clustering that the
+engine's :class:`~repro.core.engine.AutoGrouper` re-runs from live range
+statistics. Every spec form compiles down to the same per-leaf group-id
+tuple that :func:`make_packing` already consumes, so the fused quantize
+kernel, the group-censor norms and the payload accounting are spec-agnostic.
 """
 from __future__ import annotations
 
@@ -56,6 +65,11 @@ class Packing:
     group_ids: Tuple[int, ...]             # leaf index -> group id
     n_groups: int
     group_dims: Tuple[int, ...]            # per-group parameter counts d_g
+    # per-group static contiguous column runs ((offset, size), ...): adjacent
+    # same-group leaves are merged, so a group occupies as few maximal slices
+    # as the layout allows (exactly one when ``sorted_ids``). This is the
+    # static metadata the fused in-kernel range reduction slices by.
+    group_runs: Tuple[Tuple[Tuple[int, int], ...], ...]
     # (D,) int32 column -> group id map; one host array per cached layout
     col_group_ids: np.ndarray = dataclasses.field(compare=False, repr=False)
 
@@ -104,9 +118,19 @@ def make_packing(tree: Tree, group_ids: Sequence[int]) -> Packing:
         gdims[g] += d
     cols = np.concatenate([np.full(d, g, np.int32)
                            for d, g in zip(dims, ids)])
+    runs: list = [[] for _ in range(n_groups)]
+    for off_i, d, g in zip(offsets, dims, ids):
+        if d == 0:
+            continue
+        if runs[g] and runs[g][-1][0] + runs[g][-1][1] == off_i:
+            runs[g][-1] = (runs[g][-1][0], runs[g][-1][1] + d)
+        else:
+            runs[g].append((off_i, d))
     pk = Packing(treedef=treedef, shapes=shapes, dtypes=dtypes, dims=dims,
                  offsets=tuple(offsets), group_ids=ids, n_groups=n_groups,
-                 group_dims=tuple(gdims), col_group_ids=cols)
+                 group_dims=tuple(gdims),
+                 group_runs=tuple(tuple(r) for r in runs),
+                 col_group_ids=cols)
     _CACHE[key] = pk
     return pk
 
@@ -165,3 +189,242 @@ def segment_sqnorm(pk: Packing, buf: jax.Array) -> jax.Array:
     ``(N, G)``."""
     return _grouped_colreduce(pk, jnp.square(buf.astype(jnp.float32)),
                               jnp.sum, jnp.sum)
+
+
+# ------------------------------------------------------------ group specs --
+class GroupSpecError(ValueError):
+    """Malformed group spec: bad syntax, unknown/empty bucket, or an index
+    bucketing that is not a partition of the leaves. Subclasses ValueError
+    so pre-existing callers catching ValueError keep working."""
+
+
+# Canonical bucket vocabulary: bucket name -> path substrings that place a
+# leaf in it. Matching is first-listed-bucket-wins over a lowercased
+# ``jax.tree_util.keystr`` path; a spec name outside this table matches
+# leaves whose path contains the name itself (so ad-hoc trees can be
+# bucketed by their own key names). "rest" is the explicit catch-all.
+BUCKET_ALIASES: Dict[str, Tuple[str, ...]] = {
+    "embed": ("embed", "unembed", "vocab", "wte", "wpe", "lm_head"),
+    "attn": ("attn", "attention", "qkv"),
+    "mlp": ("mlp", "ffn", "moe", "expert", "glu", "feed_forward"),
+    "ssm": ("ssm", "mamba", "conv", "slstm", "mlstm"),
+    "norm": ("norm", "ln1", "ln2", "rmsnorm", "layernorm"),
+    "rest": (),
+}
+_BUCKET_ORDER = ("embed", "attn", "mlp", "ssm", "norm")
+
+
+def leaf_paths(tree: Tree) -> Tuple[str, ...]:
+    """Lowercased ``keystr`` path per leaf, aligned with ``tree_leaves``."""
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    return tuple(jax.tree_util.keystr(path).lower() for path, _ in flat)
+
+
+def bucket_of(path: str) -> str:
+    """Canonical bucket of one leaf path (``"rest"`` when nothing hits)."""
+    p = path.lower()
+    for name in _BUCKET_ORDER:
+        if any(tok in p for tok in BUCKET_ALIASES[name]):
+            return name
+    return "rest"
+
+
+def tree_bucket_names(tree: Tree) -> Tuple[str, ...]:
+    """Sorted canonical bucket names present in ``tree`` (the vocabulary a
+    ``block:`` spec can name for this model; exported per-architecture by
+    ``models.registry.param_bucket_names``)."""
+    return tuple(sorted({bucket_of(p) for p in leaf_paths(tree)}))
+
+
+def parse_block_spec(spec: str) -> Tuple[str, ...]:
+    """``"block:a,b,c"`` -> ``("a", "b", "c")`` with syntax validation."""
+    body = spec[len("block:"):] if spec.startswith("block:") else spec
+    names = tuple(n.strip().lower() for n in body.split(","))
+    if not body.strip() or any(not n for n in names):
+        raise GroupSpecError(
+            f"malformed block spec {spec!r}: expected "
+            f"'block:<name>[,<name>...]' with non-empty names")
+    dupes = {n for n in names if names.count(n) > 1}
+    if dupes:
+        raise GroupSpecError(
+            f"block spec {spec!r} repeats bucket(s) {sorted(dupes)}")
+    return names
+
+
+def parse_auto_spec(spec: str) -> int:
+    """``"auto:K"`` -> K (positive int) with syntax validation."""
+    body = spec[len("auto:"):] if spec.startswith("auto:") else spec
+    try:
+        k = int(body)
+    except ValueError:
+        raise GroupSpecError(
+            f"malformed auto spec {spec!r}: expected 'auto:<K>' with "
+            f"integer K >= 1") from None
+    if k < 1:
+        raise GroupSpecError(f"auto spec {spec!r}: K must be >= 1")
+    return k
+
+
+def validate_spec_syntax(spec: str) -> None:
+    """Tree-independent syntax check of a string group spec; raises
+    :class:`GroupSpecError` on anything unrecognized (so a typo'd
+    ``EngineConfig.groups`` / ``REPRO_ADMM_GROUPS`` fails loudly at config
+    construction instead of silently misresolving later)."""
+    if spec in ("model", "leaf"):
+        return
+    if spec.startswith("block:"):
+        parse_block_spec(spec)
+        return
+    if spec.startswith("auto:"):
+        parse_auto_spec(spec)
+        return
+    raise GroupSpecError(
+        f"unknown group spec {spec!r}: expected 'model', 'leaf', "
+        f"'block:<b1,b2,...>', 'auto:<K>', a leaf->group id tuple, or a "
+        f"tuple of leaf-index buckets")
+
+
+def _name_patterns(name: str) -> Tuple[str, ...]:
+    return (name,) + BUCKET_ALIASES.get(name, ())
+
+
+def resolve_block_groups(tree: Tree, names: Sequence[str]) -> Tuple[int, ...]:
+    """Named-bucket resolution: bucket j of the spec takes every leaf whose
+    path matches one of its patterns (first-listed bucket wins on overlap);
+    leaves matching no bucket fall into ``"rest"`` — either the explicitly
+    listed position or an appended trailing group.
+
+    Raises :class:`GroupSpecError` for a name that matches nothing anywhere
+    (unknown bucket) or matches nothing *in this tree* / lost every leaf to
+    an earlier bucket (empty bucket)."""
+    names = tuple(n.lower() for n in names)
+    paths = leaf_paths(tree)
+    rest_slot = names.index("rest") if "rest" in names else None
+    ids = []
+    for p in paths:
+        gid = None
+        for j, name in enumerate(names):
+            if name == "rest":
+                continue
+            if any(tok in p for tok in _name_patterns(name)):
+                gid = j
+                break
+        if gid is None:
+            gid = rest_slot if rest_slot is not None else len(names)
+        ids.append(gid)
+    used = set(ids)
+    for j, name in enumerate(names):
+        if j in used or name == "rest":   # an unused catch-all is legal
+            continue
+        if name not in BUCKET_ALIASES \
+                and not any(any(tok in p for tok in _name_patterns(name))
+                            for p in paths):
+            raise GroupSpecError(
+                f"unknown bucket {name!r}: not a canonical bucket "
+                f"({sorted(BUCKET_ALIASES)}) and matches no leaf path; "
+                f"this tree's buckets: {tree_bucket_names(tree)}")
+        raise GroupSpecError(
+            f"empty bucket {name!r}: no leaf of this tree lands in it "
+            f"(buckets present: {tree_bucket_names(tree)}; earlier-listed "
+            f"buckets win overlapping leaves)")
+    # compact to contiguous ids 0..G-1 preserving spec order (+ trailing
+    # rest), so downstream group ids always form a partition
+    remap = {g: i for i, g in enumerate(sorted(used))}
+    return tuple(remap[g] for g in ids)
+
+
+def resolve_index_buckets(tree: Tree,
+                          buckets: Sequence[Sequence[int]]) -> Tuple[int, ...]:
+    """Explicit tuple-of-tuples spec: ``((0, 1), (2,))`` puts leaves 0, 1 in
+    group 0 and leaf 2 in group 1. Must be a partition of ``range(L)`` —
+    overlaps, out-of-range indices, empty buckets and uncovered leaves all
+    raise :class:`GroupSpecError`."""
+    n_leaves = len(jax.tree_util.tree_leaves(tree))
+    ids: Dict[int, int] = {}
+    for j, bucket in enumerate(buckets):
+        members = tuple(int(i) for i in bucket)
+        if not members:
+            raise GroupSpecError(f"index bucket {j} is empty")
+        for i in members:
+            if not 0 <= i < n_leaves:
+                raise GroupSpecError(
+                    f"index bucket {j} names leaf {i}, tree has "
+                    f"{n_leaves} leaves")
+            if i in ids:
+                raise GroupSpecError(
+                    f"overlapping spec: leaf {i} appears in buckets "
+                    f"{ids[i]} and {j}")
+            ids[i] = j
+    missing = sorted(set(range(n_leaves)) - set(ids))
+    if missing:
+        raise GroupSpecError(
+            f"index buckets do not cover leaves {missing} "
+            f"(every leaf must appear in exactly one bucket)")
+    return tuple(ids[i] for i in range(n_leaves))
+
+
+def _leaf_dims(tree: Tree) -> Tuple[int, ...]:
+    return tuple(int(x.size // x.shape[0])
+                 for x in jax.tree_util.tree_leaves(tree))
+
+
+def resolve_auto_groups(tree: Tree, k: int) -> Tuple[int, ...]:
+    """Shape-only initial ``auto:K`` partition: contiguous leaf segments
+    with balanced parameter counts (boundaries at the cumulative-dim
+    quantiles). Deterministic and computable from abstract shapes, so it
+    works under ``jax.eval_shape`` (the production bundle's init path); the
+    range-statistics refinement happens outside jit via
+    :func:`greedy_range_grouping` / ``engine.AutoGrouper``."""
+    dims = _leaf_dims(tree)
+    n_leaves = len(dims)
+    k = min(int(k), n_leaves)
+    cum = np.cumsum(np.asarray(dims, np.float64))
+    bounds, prev = [], 0
+    for j in range(1, k):
+        i = int(np.searchsorted(cum, j * cum[-1] / k, side="right"))
+        i = min(max(i, prev + 1), n_leaves - (k - j))
+        bounds.append(i)
+        prev = i
+    ids, g = [], 0
+    for i in range(n_leaves):
+        while g < len(bounds) and i >= bounds[g]:
+            g += 1
+        ids.append(g)
+    return tuple(ids)
+
+
+def greedy_range_grouping(log_ranges: np.ndarray, dims: Sequence[int],
+                          k: int) -> Tuple[int, ...]:
+    """Cluster leaves into <= K contiguous groups by log-range similarity:
+    start from one segment per leaf and greedily merge the adjacent pair
+    with the closest dim-weighted mean log-range (ties -> lowest index).
+
+    Contiguity in leaf order is the stability device: group ids are the
+    segment index in leaf order, so they are monotone over leaves and can
+    never permute between regroup events — only boundaries move. Pure
+    host-side numpy (runs outside jit, every ``regroup_every`` rounds)."""
+    lr = np.asarray(log_ranges, np.float64)
+    w = np.asarray(dims, np.float64)
+    n_leaves = lr.shape[0]
+    if w.shape[0] != n_leaves:
+        raise ValueError(f"{n_leaves} log-ranges vs {w.shape[0]} dims")
+    k = max(1, min(int(k), n_leaves))
+    # per-segment running sums (sum_w, sum_w*lr) make each merge O(L):
+    # one argmin over the adjacent-gap vector (first-minimum tie-break,
+    # i.e. lowest index) plus an O(1) neighbor update — O(L^2) total
+    # instead of recomputing every mean from member lists (O(L^3))
+    counts = [1] * n_leaves                      # leaves per segment
+    sum_w = list(w)
+    sum_ws = list(w * lr)
+    means = np.asarray([s / max(t, 1e-30) for s, t in zip(sum_ws, sum_w)])
+    for _ in range(n_leaves - k):
+        j = int(np.argmin(np.abs(np.diff(means))))
+        counts[j] += counts.pop(j + 1)
+        sum_w[j] += sum_w.pop(j + 1)
+        sum_ws[j] += sum_ws.pop(j + 1)
+        means = np.delete(means, j + 1)
+        means[j] = sum_ws[j] / max(sum_w[j], 1e-30)
+    ids = []
+    for g, c in enumerate(counts):
+        ids.extend([g] * c)
+    return tuple(ids)

@@ -90,6 +90,31 @@ def required_bits(bits_prev: jax.Array, range_new: jax.Array,
     return jnp.clip(b_new, 1.0, float(b_max))
 
 
+def bit_schedule(bits_prev: jax.Array, range_new: jax.Array,
+                 range_prev: jax.Array, initialized: jax.Array,
+                 omega: float, b0: int, b_max: int,
+                 ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Full per-round quantizer schedule: Eq. (18) bit growth plus the step
+    size Δ = 2R / (2^b - 1) and the degenerate-range flag, all elementwise
+    over any (..., G) shape.
+
+    This is the single source of truth shared by the engine's packed paths,
+    the per-leaf reference loop, the jnp oracle
+    (``kernels.ref.stoch_quantize_grouped_fused_ref``) and the fused Pallas
+    kernel (``kernels.stoch_quant.stoch_quantize_grouped_fused``) — the
+    kernel traces this very function inside its body, so the in-kernel
+    schedule cannot drift from the host-side one.
+
+    Returns ``(bits, delta, degen)``.
+    """
+    bits = required_bits(bits_prev, range_new, range_prev, omega,
+                         initialized, b0, b_max)
+    levels = jnp.exp2(bits) - 1.0
+    delta = 2.0 * range_new / jnp.maximum(levels, 1.0)
+    degen = range_new <= _EPS
+    return bits, delta, degen
+
+
 def stochastic_round(c: jax.Array, uniforms: jax.Array) -> jax.Array:
     """Eq. (15)/(17): round c up with probability frac(c), down otherwise."""
     floor_c = jnp.floor(c)

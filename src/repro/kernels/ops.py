@@ -33,6 +33,20 @@ def stoch_quantize_grouped(theta: jax.Array, q_hat_prev: jax.Array,
                                          interpret=_interpret())
 
 
+def stoch_quantize_grouped_fused(theta: jax.Array, q_hat_prev: jax.Array,
+                                 uniforms: jax.Array, bits_prev: jax.Array,
+                                 range_prev: jax.Array,
+                                 initialized: jax.Array,
+                                 group_ids: jax.Array, *, group_runs,
+                                 omega: float, b0: int, b_max: int):
+    """Grouped quantize round with the (N, G) range reduction folded into
+    the same ``pallas_call`` (no separate side-information pass)."""
+    return _quant.stoch_quantize_grouped_fused(
+        theta, q_hat_prev, uniforms, bits_prev, range_prev, initialized,
+        group_ids, group_runs=group_runs, omega=omega, b0=b0, b_max=b_max,
+        interpret=_interpret())
+
+
 def bipartite_mix(adjacency: jax.Array, values: jax.Array) -> jax.Array:
     return _mix.bipartite_mix(adjacency, values, interpret=_interpret())
 

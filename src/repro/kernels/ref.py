@@ -9,6 +9,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.core.quantization import bit_schedule
+
 _EPS = 1e-12
 
 
@@ -71,6 +73,48 @@ def stoch_quantize_grouped_ref(theta: jax.Array, q_hat_prev: jax.Array,
     levels = 2.0 * range_c / safe_delta      # = 2^{b_g} - 1, column-wise
     q = jnp.clip(q, 0.0, levels)
     return (qprev32 + safe_delta * q - range_c).astype(dtype)
+
+
+def grouped_range_ref(diff: jax.Array, group_runs) -> jax.Array:
+    """Per-worker per-group ``max |diff|`` over the static contiguous column
+    runs of each group — the oracle for the in-kernel range reduction
+    (identical reduction order, so max is bit-exact)."""
+    absdiff = jnp.abs(diff)
+    cols = []
+    for runs in group_runs:
+        parts = [jnp.max(absdiff[:, off:off + size], axis=1)
+                 for off, size in runs]
+        if not parts:
+            parts = [jnp.zeros((diff.shape[0],), jnp.float32)]
+        cols.append(parts[0] if len(parts) == 1
+                    else jnp.max(jnp.stack(parts, axis=0), axis=0))
+    return jnp.stack(cols, axis=1)
+
+
+def stoch_quantize_grouped_fused_ref(
+    theta: jax.Array, q_hat_prev: jax.Array, uniforms: jax.Array,
+    bits_prev: jax.Array, range_prev: jax.Array, initialized: jax.Array,
+    group_ids: jax.Array, *, group_runs, omega: float, b0: int, b_max: int,
+):
+    """Ground truth for ``stoch_quantize_grouped_fused``: the whole grouped
+    round — range reduction over the static group runs, Eq. (18) bit
+    schedule (via ``core.quantization.bit_schedule``, the same function the
+    kernel traces), stochastic quantize, degenerate-group passthrough.
+
+    Returns ``(out (N, D), range_new (N, G), bits (N, G), delta (N, G))``.
+    """
+    theta32 = theta.astype(jnp.float32)
+    qprev32 = q_hat_prev.astype(jnp.float32)
+    range_new = grouped_range_ref(theta32 - qprev32, group_runs)
+    bits, delta, degen = bit_schedule(
+        bits_prev.astype(jnp.float32), range_new,
+        range_prev.astype(jnp.float32), initialized.astype(jnp.float32),
+        omega, b0, b_max)
+    out = stoch_quantize_grouped_ref(theta, q_hat_prev, uniforms, delta,
+                                     range_new, group_ids)
+    degen_c = jnp.take(degen, group_ids, axis=1)
+    out = jnp.where(degen_c, qprev32.astype(out.dtype), out)
+    return out, range_new, bits, delta.astype(jnp.float32)
 
 
 def bipartite_mix_ref(adjacency: jax.Array, values: jax.Array) -> jax.Array:

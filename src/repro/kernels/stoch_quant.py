@@ -16,12 +16,24 @@ Uniform draws are produced *outside* the kernel (jax.random) so the kernel
 is bit-reproducible against ``ref.stoch_quantize_ref`` on every backend; a
 production path could swap them for in-kernel pltpu.prng_random_bits.
 
-Two entry points share the kernel math:
+Three entry points share the kernel math:
 
 * ``stoch_quantize`` — the seed (N, d) path with per-worker scalar (Δ, R).
 * ``stoch_quantize_grouped`` — the packed multi-layer path: (N, G) side
   information plus a static column->group id map, so all leaves of a
-  pytree quantize in ONE ``pallas_call`` (see ``core/packing.py``).
+  pytree quantize in ONE ``pallas_call`` (see ``core/packing.py``). The
+  (N, G) ranges are computed by the caller in a separate pass (the
+  "two-pass" path, kept for benchmarks).
+* ``stoch_quantize_grouped_fused`` — the two-pass path with the grouped
+  range reduction *folded into the kernel*: each grid step holds a full
+  (BLOCK_N, D) row block in VMEM, reduces ``max |theta - q_prev|`` per
+  group over the static per-group column runs (the transpose-free slice
+  trick of ``core/packing.py``), runs the Eq. (18) bit schedule in-kernel
+  (tracing ``core.quantization.bit_schedule``, the same function the host
+  paths use), then quantizes — one ``pallas_call``, zero separate
+  side-information passes over the packed buffer. Outputs the
+  reconstruction plus the (N, G) ``(R, b, Δ)`` side info the engine
+  carries into the next round.
 """
 from __future__ import annotations
 
@@ -30,6 +42,9 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+from repro.core.quantization import bit_schedule
+from repro.kernels.ref import grouped_range_ref
 
 _EPS = 1e-12
 # Default VMEM tile: 8 sublanes x 512 lanes (f32: 16 KiB per operand block;
@@ -85,6 +100,135 @@ def _grouped_quant_kernel(theta_ref, qprev_ref, unif_ref, delta_ref,
     levels = 2.0 * range_c / safe_delta
     q = jnp.clip(q, 0.0, levels)
     out_ref[...] = (qprev + safe_delta * q - range_c).astype(out_ref.dtype)
+
+
+def _broadcast_group_cols(side, gid, shape):
+    """(BLOCK_N, G) per-group scalars -> (BLOCK_N, BLOCK_D) columns via the
+    (1, BLOCK_D) group-id row: exact 0/1 VPU selects, no gather (the same
+    Mosaic-friendly device as ``_grouped_quant_kernel``); the static G loop
+    unrolls."""
+    out = jnp.broadcast_to(side[:, 0:1], shape)
+    for g in range(1, side.shape[1]):
+        out = jnp.where(gid == g, side[:, g:g + 1], out)
+    return out
+
+
+def _grouped_fused_kernel(theta_ref, qprev_ref, unif_ref, bprev_ref,
+                          rprev_ref, init_ref, gid_ref,
+                          out_ref, range_ref, bits_ref, delta_ref,
+                          *, group_runs, omega, b0, b_max):
+    """Fused range+schedule+quantize body. The block is a full row slab
+    (BLOCK_N, D): the per-group range reduces over the *static* contiguous
+    column runs of each group (lane-axis max per run, one more max across a
+    group's runs — no transpose, no gather, no second pass over HBM), the
+    bit-growth schedule runs on the resulting (BLOCK_N, G) panel, and the
+    quantize chain reuses the freshly computed per-column scalars while
+    theta/q_prev are still resident in VMEM."""
+    theta = theta_ref[...].astype(jnp.float32)
+    qprev = qprev_ref[...].astype(jnp.float32)
+    unif = unif_ref[...].astype(jnp.float32)
+    gid = gid_ref[...]                           # (1, BLOCK_D) int32
+    # the reduction traces the oracle's own helper (like bit_schedule
+    # below), so kernel and oracle cannot drift apart
+    range_new = grouped_range_ref(theta - qprev, group_runs)  # (BLOCK_N, G)
+    bits, delta, degen = bit_schedule(
+        bprev_ref[...].astype(jnp.float32), range_new,
+        rprev_ref[...].astype(jnp.float32), init_ref[...].astype(jnp.float32),
+        omega, b0, b_max)
+    delta_c = _broadcast_group_cols(delta, gid, theta.shape)
+    range_c = _broadcast_group_cols(range_new, gid, theta.shape)
+    degen_c = _broadcast_group_cols(degen, gid, theta.shape)
+    safe_delta = jnp.maximum(delta_c, _EPS)
+    c = (theta - qprev + range_c) / safe_delta
+    floor_c = jnp.floor(c)
+    q = floor_c + (unif < (c - floor_c)).astype(jnp.float32)
+    levels = 2.0 * range_c / safe_delta
+    q = jnp.clip(q, 0.0, levels)
+    out = qprev + safe_delta * q - range_c
+    # degenerate groups (nothing moved) pass the previous reconstruction
+    # through untouched — folded here so the engine never re-reads (N, D)
+    out_ref[...] = jnp.where(degen_c, qprev, out).astype(out_ref.dtype)
+    range_ref[...] = range_new
+    bits_ref[...] = bits
+    delta_ref[...] = delta.astype(jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("group_runs", "omega", "b0",
+                                             "b_max", "block_n", "interpret"))
+def stoch_quantize_grouped_fused(
+    theta: jax.Array, q_hat_prev: jax.Array, uniforms: jax.Array,
+    bits_prev: jax.Array, range_prev: jax.Array, initialized: jax.Array,
+    group_ids: jax.Array, *, group_runs, omega: float, b0: int, b_max: int,
+    block_n: int = BLOCK_N, interpret: bool = True,
+):
+    """Grouped quantize round with the range reduction folded in: ONE
+    ``pallas_call`` reads the packed buffers exactly once and emits both
+    the reconstruction and the next round's (N, G) side information. The
+    two-pass alternative (``core.packing.segment_maxabs`` +
+    :func:`stoch_quantize_grouped`) re-reads the (N, D) buffer for the
+    reduction; this entry point exists to delete that pass (DESIGN.md
+    §Groups, ROADMAP "fold the grouped range reduction into the quantize
+    kernel").
+
+    Args:
+      theta, q_hat_prev, uniforms: (N, D) packed buffers.
+      bits_prev, range_prev, initialized: (N, G) quantizer-chain state.
+      group_ids: (D,) int32 column -> group id map (kernel-side scalar
+        broadcast).
+      group_runs: static per-group contiguous column runs
+        (``Packing.group_runs``) driving the in-kernel reduction.
+      omega, b0, b_max: ``QuantConfig`` bit-schedule constants (static).
+
+    Returns:
+      ``(out (N, D), range_new (N, G), bits (N, G), delta (N, G))``,
+      bit-identical to ``ref.stoch_quantize_grouped_fused_ref`` for
+      identical uniforms.
+
+    The row slab must fit VMEM on hardware (BLOCK_N * D * 4 operands);
+    interpret mode has no such limit. A D-tiled two-phase grid variant is
+    the recorded follow-up for LM-scale widths on real TPU (ROADMAP).
+    """
+    n, d = theta.shape
+    n_groups = bits_prev.shape[1]
+    dtype = theta.dtype
+    n_pad = (-n) % block_n
+    d_pad = (-d) % 128                 # lane-align the row slab
+
+    def pad2(x):
+        return jnp.pad(x, ((0, n_pad), (0, d_pad)))
+
+    theta_p = pad2(theta)
+    qprev_p = pad2(q_hat_prev)
+    unif_p = pad2(uniforms)
+    # (N, G) state is padded on workers only; padded rows produce clipped
+    # junk schedules and are sliced away below. Padded columns carry group
+    # 0's id but are outside every static run, so they never touch the
+    # reduction; their quantized values are sliced away.
+    bprev_p = jnp.pad(bits_prev, ((0, n_pad), (0, 0)))
+    rprev_p = jnp.pad(range_prev, ((0, n_pad), (0, 0)))
+    init_p = jnp.pad(initialized, ((0, n_pad), (0, 0)))
+    gid_p = jnp.pad(group_ids.astype(jnp.int32), (0, d_pad))[None, :]
+    np_, dp_ = theta_p.shape
+
+    grid = (np_ // block_n,)
+    mat_spec = pl.BlockSpec((block_n, dp_), lambda i: (i, 0))
+    side_spec = pl.BlockSpec((block_n, n_groups), lambda i: (i, 0))
+    gid_spec = pl.BlockSpec((1, dp_), lambda i: (0, 0))
+    kernel = functools.partial(_grouped_fused_kernel, group_runs=group_runs,
+                               omega=omega, b0=b0, b_max=b_max)
+    out, range_new, bits, delta = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[mat_spec, mat_spec, mat_spec, side_spec, side_spec,
+                  side_spec, gid_spec],
+        out_specs=(mat_spec, side_spec, side_spec, side_spec),
+        out_shape=(jax.ShapeDtypeStruct((np_, dp_), dtype),
+                   jax.ShapeDtypeStruct((np_, n_groups), jnp.float32),
+                   jax.ShapeDtypeStruct((np_, n_groups), jnp.float32),
+                   jax.ShapeDtypeStruct((np_, n_groups), jnp.float32)),
+        interpret=interpret,
+    )(theta_p, qprev_p, unif_p, bprev_p, rprev_p, init_p, gid_p)
+    return (out[:n, :d], range_new[:n], bits[:n], delta[:n])
 
 
 @functools.partial(jax.jit, static_argnames=("block_n", "block_d",

@@ -12,6 +12,7 @@ mesh (see dryrun.py); here the mesh is whatever the host offers.
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import time
 from pathlib import Path
 
@@ -32,15 +33,22 @@ from repro.runtime import steps as ST
 
 def run_admm(cfg, args) -> dict:
     graph = ST.worker_graph(args.workers, args.topology)
-    ecfg = E.EngineConfig(
-        rho=args.rho,
-        censor=CensorConfig(tau0=args.tau0, xi=args.xi)
-        if args.tau0 > 0 else CensorConfig(),
-        quantize=QuantConfig(b0=args.bits, omega=args.omega)
-        if args.quantize else None,
-        groups=args.groups,
-        censor_mode=args.censor_mode,
-        mix_backend=args.mix_backend)
+    try:
+        ecfg = E.EngineConfig(
+            rho=args.rho,
+            censor=CensorConfig(tau0=args.tau0, xi=args.xi)
+            if args.tau0 > 0 else CensorConfig(),
+            quantize=QuantConfig(b0=args.bits, omega=args.omega)
+            if args.quantize else None,
+            groups=args.groups,
+            censor_mode=args.censor_mode,
+            mix_backend=args.mix_backend,
+            regroup_every=args.regroup_every)
+    except E.GroupSpecError as e:
+        raise SystemExit(
+            f"[train] bad --groups spec: {e}\n"
+            f"[train] buckets available for {cfg.name}: "
+            f"{registry.param_bucket_names(cfg)}") from e
 
     def grad_fn(theta, batch):
         return jax.vmap(lambda p, b: jax.grad(
@@ -58,17 +66,48 @@ def run_admm(cfg, args) -> dict:
     one = registry.init_params(cfg, jax.random.PRNGKey(args.seed))
     params = jax.tree_util.tree_map(
         lambda x: jnp.broadcast_to(x[None], (args.workers,) + x.shape), one)
+    # resolve the spec against the real tree up front: a semantically
+    # malformed spec (unknown/empty bucket, bad index buckets) must fail
+    # here with the model's bucket vocabulary, not deep inside the jit
+    try:
+        cur_ids = E.resolve_groups(params, ecfg.groups)
+    except E.GroupSpecError as e:
+        raise SystemExit(
+            f"[train] bad --groups spec for {cfg.name}: {e}\n"
+            f"[train] buckets: {registry.param_buckets(cfg)}") from e
     state = E.init_state(params, ecfg, solver)
     n_groups = state.quant.n_groups
+    grouper = E.AutoGrouper.from_config(ecfg)
 
-    step = jax.jit(E.make_step(graph, ecfg, solver,
-                               extra_metrics=E.consensus_metrics(loss_fn)))
+    def build_step(cfg_):
+        return jax.jit(E.make_step(graph, cfg_, solver,
+                                   extra_metrics=E.consensus_metrics(
+                                       loss_fn)))
+
+    step = build_step(ecfg)
     data = SyntheticLM(SyntheticLMConfig(cfg.vocab_size, args.seq,
                                          seed=args.seed))
     total_bits = 0.0
     t0 = time.time()
     history = []
     for i in range(args.steps):
+        if grouper is not None and grouper.should_regroup(i):
+            new_ids = grouper.regroup(state.theta, state.quant.q_hat)
+            if new_ids != cur_ids:
+                # stable-id regroup: carry conservative (R, b, Δ) per new
+                # group, pin the spec to the explicit ids, re-jit the step
+                state = E.EngineState(
+                    theta=state.theta, theta_hat=state.theta_hat,
+                    alpha=state.alpha,
+                    quant=E.remap_group_state(state.quant, cur_ids,
+                                              new_ids),
+                    opt_mu=state.opt_mu, opt_nu=state.opt_nu, k=state.k)
+                ecfg = dataclasses.replace(ecfg, groups=new_ids)
+                step = build_step(ecfg)
+                cur_ids = new_ids
+                n_groups = max(new_ids) + 1
+                print(f"[train] step {i}: regrouped to G={n_groups} "
+                      f"({new_ids})")
         raw = data.worker_batch(i, args.workers, args.batch // args.workers)
         batch = model_batch(cfg, raw, key=jax.random.PRNGKey(i))
         state, m = step(state, batch, jax.random.PRNGKey(1000 + i))
@@ -143,9 +182,18 @@ def main(argv=None) -> dict:
     ap.add_argument("--xi", type=float, default=0.995)
     ap.add_argument("--quantize", action="store_true", default=True)
     ap.add_argument("--no-quantize", dest="quantize", action="store_false")
-    ap.add_argument("--groups", default="model", choices=("model", "leaf"),
-                    help="quantization groups: 'model' = paper's whole-model"
-                         " mode (G=1), 'leaf' = L-FGADMM per-layer ranges")
+    ap.add_argument("--groups", default="model",
+                    help="quantization group spec (DESIGN.md §Groups): "
+                         "'model' = paper's whole-model mode (G=1), "
+                         "'leaf' = L-FGADMM per-layer ranges, "
+                         "'block:attn,mlp,embed[,rest]' = named buckets "
+                         "over the registry's layer names, 'auto:K' = "
+                         "<= K groups clustered from per-leaf range stats "
+                         "(re-clustered every --regroup-every steps)")
+    ap.add_argument("--regroup-every", type=int, default=0,
+                    help="for --groups auto:K — re-cluster from the "
+                         "running range statistics every this many steps "
+                         "(0 keeps the initial shape-balanced partition)")
     ap.add_argument("--censor-mode", default="global",
                     choices=("global", "group"),
                     help="'global' = paper's whole-model censor norm; "

@@ -287,6 +287,25 @@ def _param_tree_shapes(cfg):
     return tree
 
 
+def param_bucket_names(cfg) -> Tuple[str, ...]:
+    """Canonical block-bucket names present in this architecture's param
+    tree ("attn", "mlp", "embed", "norm", "ssm", "rest") — the vocabulary a
+    ``groups="block:..."`` spec can name for this model (DESIGN.md
+    §Groups). Derived from abstract shapes, no allocation."""
+    from repro.core import packing
+    return packing.tree_bucket_names(_param_tree_shapes(cfg))
+
+
+def param_buckets(cfg) -> Dict[str, Tuple[str, ...]]:
+    """Bucket name -> the leaf paths it claims, for spec debugging and the
+    launcher's malformed-spec error messages."""
+    from repro.core import packing
+    out: Dict[str, list] = {}
+    for path in packing.leaf_paths(_param_tree_shapes(cfg)):
+        out.setdefault(packing.bucket_of(path), []).append(path)
+    return {k: tuple(v) for k, v in sorted(out.items())}
+
+
 def count_params(cfg, active_only: bool = False) -> int:
     tree = _param_tree_shapes(cfg)
     leaves = jax.tree_util.tree_leaves_with_path(tree)

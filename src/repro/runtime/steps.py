@@ -92,10 +92,16 @@ def _consensus_cfg(arch: str, multi_pod: bool
                    ) -> Tuple[E.EngineConfig, E.InexactSolver]:
     """Production ADMM engine config + local solver. The REPRO_ADMM_* env
     knobs drive the §Perf iterations (the dry-run re-lowers with a knob
-    flipped and compares roofline terms); REPRO_ADMM_GROUPS=leaf opts into
-    the L-FGADMM layer-wise quantization mode (DESIGN.md §Groups) and
-    REPRO_ADMM_MIX_BACKEND selects the dense/sparse/sharded topology
-    backend for every neighbor aggregation (DESIGN.md §Topology)."""
+    flipped and compares roofline terms); REPRO_ADMM_GROUPS selects the
+    quantization group spec — "leaf" (L-FGADMM layer-wise mode), a
+    "block:attn,mlp,embed" named-bucket spec over the registry's layer
+    names, or "auto:K" (DESIGN.md §Groups; auto resolves to the
+    shape-balanced partition under this bundle's eval_shape init —
+    range-statistics re-clustering is the outer training driver's job,
+    period = REPRO_ADMM_REGROUP_EVERY); REPRO_ADMM_MIX_BACKEND selects the
+    dense/sparse/sharded topology backend for every neighbor aggregation
+    (DESIGN.md §Topology). A malformed group spec raises GroupSpecError at
+    config construction — never a silent fall-back to whole-model mode."""
     import os
     lean = arch in GIANT_ARCHS     # 314B: SGD local solver + bf16 replicas
     hat = os.environ.get("REPRO_ADMM_HAT_DTYPE",
@@ -108,6 +114,7 @@ def _consensus_cfg(arch: str, multi_pod: bool
         censor_mode=os.environ.get("REPRO_ADMM_CENSOR_MODE", "global"),
         mix_backend=os.environ.get("REPRO_ADMM_MIX_BACKEND", "dense"),
         hat_dtype=hat or None,
+        regroup_every=int(os.environ.get("REPRO_ADMM_REGROUP_EVERY", "0")),
     )
     solver = E.InexactSolver(
         local_steps=int(os.environ.get("REPRO_ADMM_LOCAL_STEPS", "4")),

@@ -1,0 +1,420 @@
+"""Property-based conformance suite for the structured group-spec subsystem
+(DESIGN.md §Groups): spec-to-partition compilation, degenerate-spec
+bit-identity, payload accounting over censor mode x spec, auto-grouping
+determinism/stability, and the malformed-spec error paths.
+
+Property tests use hypothesis when installed and skip via the
+``_hypothesis_stub`` fallback offline; every property also has a
+deterministic parametrized twin so offline CI still exercises the claims.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:        # offline: property tests skip, rest runs
+    from _hypothesis_stub import given, settings, st
+
+from repro.core import engine as E
+from repro.core import packing as P
+from repro.core.censoring import CensorConfig
+from repro.core.graph import random_bipartite_graph
+from repro.core.quantization import QuantConfig
+
+
+def make_tree(n_leaves, n=4, seed=0, base_dim=5):
+    key = jax.random.PRNGKey(seed)
+    return {f"k{i:02d}": (1.0 + i) * jax.random.normal(
+        jax.random.fold_in(key, i), (n, base_dim + 3 * i))
+        for i in range(n_leaves)}
+
+
+def assert_partition(tree, ids):
+    """The compiled column group-id map is a partition: every column in
+    exactly one group, contiguous ids, runs disjoint and covering."""
+    pk = P.make_packing(tree, ids)
+    assert set(ids) == set(range(pk.n_groups))
+    counts = np.bincount(pk.col_group_ids, minlength=pk.n_groups)
+    assert tuple(int(c) for c in counts) == pk.group_dims
+    assert sum(pk.group_dims) == pk.dim
+    cover = np.zeros(pk.dim, np.int32)
+    for g, runs in enumerate(pk.group_runs):
+        for off, size in runs:
+            cover[off:off + size] += 1
+            assert (pk.col_group_ids[off:off + size] == g).all()
+    assert (cover == 1).all()
+    return pk
+
+
+# ------------------------------------------------------------- partition --
+SPECS = ["model", "leaf", "auto:1", "auto:3", "auto:99",
+         "block:k00,rest", "block:k0,rest",
+         ((0, 1), (2, 3), (4, 5)), ((5, 0), (1, 2, 4), (3,)),
+         (0, 1, 0, 2, 1, 0)]
+
+
+@pytest.mark.parametrize("spec", SPECS, ids=str)
+def test_spec_compiles_to_partition(spec):
+    tree = make_tree(6)
+    ids = E.resolve_groups(tree, spec)
+    assert len(ids) == 6
+    assert_partition(tree, ids)
+
+
+@settings(max_examples=25, deadline=None)
+@given(n_leaves=st.integers(1, 9), k=st.integers(1, 12),
+       seed=st.integers(0, 999))
+def test_auto_and_random_flat_specs_partition(n_leaves, k, seed):
+    tree = make_tree(n_leaves, seed=seed)
+    assert_partition(tree, E.resolve_groups(tree, f"auto:{k}"))
+    rng = np.random.RandomState(seed)
+    g = rng.randint(1, n_leaves + 1)
+    ids = rng.permutation(
+        np.concatenate([np.arange(g),
+                        rng.randint(0, g, n_leaves - g)]))
+    assert_partition(tree, E.resolve_groups(tree, tuple(int(x)
+                                                        for x in ids)))
+
+
+@settings(max_examples=25, deadline=None)
+@given(n_leaves=st.integers(2, 8), seed=st.integers(0, 999))
+def test_random_index_buckets_partition(n_leaves, seed):
+    tree = make_tree(n_leaves, seed=seed)
+    rng = np.random.RandomState(seed)
+    n_buckets = rng.randint(1, n_leaves + 1)
+    assign = np.concatenate([np.arange(n_buckets),
+                             rng.randint(0, n_buckets,
+                                         n_leaves - n_buckets)])
+    rng.shuffle(assign)
+    buckets = tuple(tuple(int(i) for i in np.where(assign == b)[0])
+                    for b in range(n_buckets))
+    ids = E.resolve_groups(tree, buckets)
+    assert_partition(tree, ids)
+    for b, members in enumerate(buckets):
+        assert len({ids[i] for i in members}) == 1
+
+
+# ----------------------------------------------- degenerate-spec identity --
+def _quantize_rounds(tree, spec, rounds=5, use_kernel=False):
+    ids = E.resolve_groups(tree, spec)
+    cfg = QuantConfig(b0=3, omega=0.97)
+    state = E.GroupQuantState.create(tree, max(ids) + 1, b0=cfg.b0)
+    key = jax.random.PRNGKey(7)
+    outs = []
+    for t in range(rounds):
+        theta = jax.tree_util.tree_map(
+            lambda x: x * (0.9 ** t), tree)
+        state, cand, bits, payload = E.grouped_quantize_step(
+            state, theta, jax.random.fold_in(key, t), cfg, ids,
+            use_kernel=use_kernel)
+        outs.append((cand, bits, payload))
+    return state, outs
+
+
+def _assert_rounds_equal(a, b, payload_too=True):
+    for (ca, ba, pa), (cb, bb, pb) in zip(a[1], b[1]):
+        for la, lb in zip(jax.tree_util.tree_leaves(ca),
+                          jax.tree_util.tree_leaves(cb)):
+            np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+        np.testing.assert_array_equal(np.asarray(ba).sum(-1),
+                                      np.asarray(bb).sum(-1))
+        if payload_too:
+            np.testing.assert_array_equal(np.asarray(pa), np.asarray(pb))
+
+
+@pytest.mark.parametrize("use_kernel", [False, True])
+def test_block_one_bucket_per_leaf_equals_leaf(use_kernel):
+    """A block spec naming one bucket per leaf (in leaf order) compiles to
+    the identical partition as ``groups="leaf"`` and quantizes
+    bit-identically (same PRNG stream: one packed draw per round)."""
+    tree = make_tree(5)
+    spec = "block:" + ",".join(sorted(tree))
+    assert E.resolve_groups(tree, spec) == E.resolve_groups(tree, "leaf")
+    _assert_rounds_equal(_quantize_rounds(tree, spec, use_kernel=use_kernel),
+                         _quantize_rounds(tree, "leaf",
+                                          use_kernel=use_kernel))
+
+
+@pytest.mark.parametrize("use_kernel", [False, True])
+def test_block_single_bucket_equals_model(use_kernel):
+    """One bucket swallowing every leaf == the paper's whole-model mode."""
+    tree = make_tree(5)
+    assert E.resolve_groups(tree, "block:k") == \
+        E.resolve_groups(tree, "model")
+    _assert_rounds_equal(_quantize_rounds(tree, "block:k",
+                                          use_kernel=use_kernel),
+                         _quantize_rounds(tree, "model",
+                                          use_kernel=use_kernel))
+
+
+def test_index_buckets_equal_flat_ids():
+    tree = make_tree(6)
+    a = _quantize_rounds(tree, ((0, 1), (2, 3), (4, 5)))
+    b = _quantize_rounds(tree, (0, 0, 1, 1, 2, 2))
+    _assert_rounds_equal(a, b)
+
+
+@settings(max_examples=10, deadline=None)
+@given(n_leaves=st.integers(2, 6), seed=st.integers(0, 99))
+def test_property_block_per_leaf_equals_leaf(n_leaves, seed):
+    tree = make_tree(n_leaves, seed=seed)
+    spec = "block:" + ",".join(sorted(tree))
+    _assert_rounds_equal(_quantize_rounds(tree, spec, rounds=3),
+                         _quantize_rounds(tree, "leaf", rounds=3))
+
+
+# --------------------------------------------------- payload accounting --
+def _targets_grad(n=6, n_leaves=4):
+    tree = make_tree(n_leaves, n=n, seed=3)
+    rates = [0.05 * (i + 1) for i in range(n_leaves)]
+
+    def grad_fn(theta, batch):
+        del batch
+        return {k: r * (theta[k] - tree[k])
+                for k, r in zip(sorted(tree), rates)}
+
+    return tree, grad_fn
+
+
+PAYLOAD_SPECS = ["model", "leaf", "block:k00,rest", "auto:2",
+                 ((0, 2), (1, 3))]
+
+
+@pytest.mark.parametrize("censor_mode", ["global", "group"])
+@pytest.mark.parametrize("spec", PAYLOAD_SPECS, ids=str)
+def test_payload_bits_sum_over_groups(censor_mode, spec):
+    """For every censor mode x spec: ``payload_bits`` equals the sum over
+    groups of the per-group costs implied by the ``bits_per_group`` /
+    ``group_tx`` metrics, and ``candidate_payload_bits`` equals the
+    uncensored sum — the spec-agnostic QSGD accounting identity."""
+    targets, grad_fn = _targets_grad()
+    qcfg = QuantConfig(b0=4, omega=0.99, b_overhead=64)
+    cfg = E.EngineConfig(rho=0.5, censor=CensorConfig(tau0=2.0, xi=0.97),
+                         quantize=qcfg, groups=spec,
+                         censor_mode=censor_mode)
+    graph = random_bipartite_graph(6, 0.5, seed=0)
+    solver = E.InexactSolver(grad_fn=grad_fn, local_steps=4, local_lr=0.1)
+    theta0 = jax.tree_util.tree_map(jnp.zeros_like, targets)
+    state = E.init_state(theta0, cfg, solver)
+    step = jax.jit(E.make_step(graph, cfg, solver))
+    ids = E.resolve_groups(theta0, spec)
+    dims = np.asarray(E.group_dims(theta0, ids), np.float32)
+    oh = float(qcfg.b_overhead)
+    n_groups = dims.shape[0]
+    for i in range(30):
+        state, m = step(state, None, jax.random.PRNGKey(i))
+        bits = np.asarray(m["bits_per_group"], np.float32)   # (N, G)
+        gtx = np.asarray(m["group_tx"], np.float32)          # (N, G)
+        tx = np.asarray(m["tx_mask"], np.float32)            # (N,)
+        per_group = bits * dims[None, :]
+        cand = per_group.sum(-1) + n_groups * oh
+        np.testing.assert_allclose(
+            np.asarray(m["candidate_payload_bits"]), cand, rtol=1e-6)
+        if censor_mode == "group":
+            want = ((per_group + oh) * gtx).sum(-1)
+        else:
+            want = cand * tx
+        np.testing.assert_allclose(np.asarray(m["payload_bits"]), want,
+                                   rtol=1e-6)
+        assert (np.asarray(m["payload_bits"])
+                <= np.asarray(m["candidate_payload_bits"]) + 1e-3).all()
+
+
+# ------------------------------------------------------- auto-grouping --
+def test_greedy_range_grouping_merges_similar_neighbors():
+    ids = P.greedy_range_grouping(np.array([0.0, 0.1, 9.9, 10.0]),
+                                  [4, 4, 4, 4], k=2)
+    assert ids == (0, 0, 1, 1)
+    # dim weighting: a huge quiet leaf pulls its segment's mean
+    ids = P.greedy_range_grouping(np.array([0.0, 5.0, 10.0]),
+                                  [1000, 1, 1000], k=2)
+    assert len(set(ids)) == 2 and ids == tuple(sorted(ids))
+
+
+def test_greedy_range_grouping_stability_and_clamp():
+    base = np.array([0.0, 0.2, 8.0, 8.3, 16.0])
+    dims = [3, 5, 2, 7, 4]
+    a = P.greedy_range_grouping(base, dims, k=3)
+    b = P.greedy_range_grouping(base + np.array([0.05, -0.04, 0.1,
+                                                 -0.02, 0.07]), dims, k=3)
+    assert a == b == (0, 0, 1, 1, 2)      # small shifts don't move ids
+    assert a == tuple(sorted(a))          # monotone: ids cannot permute
+    assert P.greedy_range_grouping(base, dims, k=99) == (0, 1, 2, 3, 4)
+    assert P.greedy_range_grouping(base, dims, k=1) == (0,) * 5
+
+
+def test_auto_partition_is_shape_balanced_and_abstract():
+    tree = {f"l{i}": jax.ShapeDtypeStruct((4, 10), jnp.float32)
+            for i in range(6)}
+    ids = E.resolve_groups(tree, "auto:3")
+    assert ids == (0, 0, 1, 1, 2, 2)      # equal dims -> equal segments
+    assert E.resolve_groups(tree, "auto:600") == tuple(range(6))
+
+
+def test_remap_group_state_is_conservative():
+    tree = make_tree(4, n=2)
+    quant = E.GroupQuantState.create(tree, 2, b0=2)
+    quant = dataclasses.replace(
+        quant,
+        range_prev=jnp.asarray([[1.0, 4.0], [2.0, 3.0]]),
+        bits_prev=jnp.asarray([[2.0, 6.0], [5.0, 3.0]]),
+        delta_prev=jnp.asarray([[0.5, 0.1], [0.2, 0.3]]),
+        initialized=jnp.asarray([[1.0, 0.0], [1.0, 1.0]]))
+    new = E.remap_group_state(quant, (0, 0, 1, 1), (0, 1, 1, 1))
+    # new group 1 spans old groups {0, 1}: max range/bits/delta, min init
+    np.testing.assert_allclose(np.asarray(new.range_prev),
+                               [[1.0, 4.0], [2.0, 3.0]])
+    np.testing.assert_allclose(np.asarray(new.bits_prev),
+                               [[2.0, 6.0], [5.0, 5.0]])
+    np.testing.assert_allclose(np.asarray(new.initialized),
+                               [[1.0, 0.0], [1.0, 1.0]])
+    # same ids -> same object (no spurious remap)
+    assert E.remap_group_state(quant, (0, 0, 1, 1), (0, 0, 1, 1)) is quant
+    with pytest.raises(ValueError):
+        E.remap_group_state(quant, (0, 0, 1, 1), (0, 1))
+
+
+def _auto_training_run(seed, iters=24, regroup_every=8):
+    """Mini train-loop mirror of launch/train.py's auto-regroup wiring."""
+    targets, grad_fn = _targets_grad()
+    cfg = E.EngineConfig(rho=0.5, censor=CensorConfig(tau0=1.0, xi=0.97),
+                         quantize=QuantConfig(b0=4, omega=0.99),
+                         groups="auto:2", regroup_every=regroup_every)
+    graph = random_bipartite_graph(6, 0.5, seed=0)
+    solver = E.InexactSolver(grad_fn=grad_fn, local_steps=4, local_lr=0.1)
+    theta0 = jax.tree_util.tree_map(jnp.zeros_like, targets)
+    cur_ids = E.resolve_groups(theta0, cfg.groups)
+    state = E.init_state(theta0, cfg, solver)
+    grouper = E.AutoGrouper.from_config(cfg)
+    assert grouper is not None
+    step = jax.jit(E.make_step(graph, cfg, solver))
+    id_history, payloads = [cur_ids], []
+    for i in range(iters):
+        if grouper.should_regroup(i):
+            new_ids = grouper.regroup(state.theta, state.quant.q_hat)
+            id_history.append(new_ids)
+            if new_ids != cur_ids:
+                state = dataclasses.replace(
+                    state, quant=E.remap_group_state(state.quant, cur_ids,
+                                                     new_ids))
+                cfg = dataclasses.replace(cfg, groups=new_ids)
+                step = jax.jit(E.make_step(graph, cfg, solver))
+                cur_ids = new_ids
+        state, m = step(state, None, jax.random.PRNGKey(seed * 1000 + i))
+        payloads.append(np.asarray(m["payload_bits"]))
+    return id_history, np.stack(payloads), state
+
+
+def test_auto_regroup_deterministic_across_runs():
+    """Same seed + regroup_every => identical group assignments at every
+    regroup event and identical quantizer PRNG streams (bitwise-equal
+    payload trajectories and final theta)."""
+    ids_a, pay_a, state_a = _auto_training_run(seed=1)
+    ids_b, pay_b, state_b = _auto_training_run(seed=1)
+    assert ids_a == ids_b
+    np.testing.assert_array_equal(pay_a, pay_b)
+    for la, lb in zip(jax.tree_util.tree_leaves(state_a.theta),
+                      jax.tree_util.tree_leaves(state_b.theta)):
+        np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+
+
+def test_auto_regroup_ids_never_permute():
+    """Group ids are segment indices in leaf order: monotone within every
+    assignment, so a range shift can move boundaries but never permute
+    ids between regroup events."""
+    id_history, _, _ = _auto_training_run(seed=2, iters=24, regroup_every=6)
+    assert len(id_history) >= 3
+    for ids in id_history:
+        assert list(ids) == sorted(ids)
+        assert set(ids) == set(range(max(ids) + 1))
+
+
+def test_autogrouper_from_config_gating():
+    cfg = E.EngineConfig(groups="auto:3", regroup_every=10)
+    g = E.AutoGrouper.from_config(cfg)
+    assert g is not None and g.k == 3
+    assert not g.should_regroup(0) and g.should_regroup(10)
+    assert E.AutoGrouper.from_config(
+        E.EngineConfig(groups="auto:3")) is None        # no period
+    assert E.AutoGrouper.from_config(
+        E.EngineConfig(groups="leaf", regroup_every=10)) is None
+
+
+# ------------------------------------------------------------ error paths --
+@pytest.mark.parametrize("spec", ["modell", "blocks:attn", "block:",
+                                  "block:a,,b", "block:a,a", "auto:",
+                                  "auto:0", "auto:x", "leaf "])
+def test_engine_config_rejects_malformed_spec_syntax(spec):
+    with pytest.raises(E.GroupSpecError):
+        E.EngineConfig(groups=spec)
+
+
+def test_engine_config_rejects_negative_regroup_every():
+    with pytest.raises(ValueError):
+        E.EngineConfig(regroup_every=-1)
+
+
+def test_unknown_bucket_raises_with_vocabulary():
+    tree = make_tree(3)
+    with pytest.raises(E.GroupSpecError, match="unknown bucket 'zzz'"):
+        E.resolve_groups(tree, "block:k00,zzz")
+
+
+def test_empty_bucket_raises():
+    tree = make_tree(3)
+    # canonical name, but nothing in this tree lands in it
+    with pytest.raises(E.GroupSpecError, match="empty bucket 'ssm'"):
+        E.resolve_groups(tree, "block:ssm,rest")
+    # valid token stolen entirely by an earlier bucket
+    with pytest.raises(E.GroupSpecError, match="empty bucket 'k01'"):
+        E.resolve_groups(tree, "block:k,k01")
+
+
+def test_mixed_tuple_spec_raises_group_spec_error():
+    tree = make_tree(3)
+    with pytest.raises(E.GroupSpecError, match="mixed tuple spec"):
+        E.resolve_groups(tree, ((0, 1), 2))
+
+
+def test_index_bucket_errors():
+    tree = make_tree(4)
+    with pytest.raises(E.GroupSpecError, match="overlapping"):
+        E.resolve_groups(tree, ((0, 1), (1, 2, 3)))
+    with pytest.raises(E.GroupSpecError, match="do not cover"):
+        E.resolve_groups(tree, ((0, 1), (3,)))
+    with pytest.raises(E.GroupSpecError, match="names leaf 9"):
+        E.resolve_groups(tree, ((0, 1), (2, 3, 9)))
+    with pytest.raises(E.GroupSpecError, match="bucket 1 is empty"):
+        E.resolve_groups(tree, ((0, 1, 2, 3), ()))
+
+
+def test_train_cli_rejects_malformed_spec():
+    """launch/train.py exits with the bucket vocabulary instead of
+    silently falling back to whole-model mode."""
+    from repro.launch import train as T
+    argv = ["--arch", "tinyllama-1.1b", "--smoke", "--workers", "2",
+            "--steps", "1", "--batch", "2", "--seq", "8",
+            "--groups", "block:attn,zzz"]
+    with pytest.raises(SystemExit, match="bad --groups"):
+        T.main(argv)
+    with pytest.raises(SystemExit) as ei:
+        T.main(argv[:-1] + ["definitely-not-a-spec"])
+    assert "bad --groups" in str(ei.value)
+
+
+def test_registry_bucket_export():
+    from repro.configs import base
+    from repro.models import registry
+    cfg = base.get_smoke_config("tinyllama-1.1b")
+    names = registry.param_bucket_names(cfg)
+    assert {"embed", "attn", "mlp", "norm"} <= set(names)
+    buckets = registry.param_buckets(cfg)
+    assert any("attn" in p for p in buckets["attn"])
+    # the named block spec resolves on the real registry tree
+    params = jax.eval_shape(
+        lambda: registry.init_params(cfg, jax.random.PRNGKey(0)))
+    ids = E.resolve_groups(params, "block:embed,attn,mlp,rest")
+    assert_partition(params, ids)
