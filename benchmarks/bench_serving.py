@@ -1,0 +1,188 @@
+"""Serving benchmark: continuous batching vs the lockstep baseline.
+
+The workload is the serving pathology the scheduler exists for: a
+mixed-length request stream where every fixed batch ("wave") contains one
+long generation. The lockstep engine cannot admit new work until a whole
+wave finishes, so each wave costs max(decode_len) steps while its short
+requests sit idle; the paged scheduler evicts the shorts mid-flight,
+recycles their pages, and admits the next requests into the freed slots —
+same useful tokens, roughly half the decode steps on this stream.
+
+Both engines are warmed first (their jitted steps are compiled outside the
+timed region), then serve the identical stream. Claims (CI-gated via
+``benchmarks/run.py --serve-smoke``):
+
+  * continuous batching >= 1.5x aggregate tokens/s over lockstep on the
+    mixed-length stream (76 vs 192 decode steps; measured ~2.1x
+    wall-clock on this container — headroom over the gate absorbs loaded
+    CI runners);
+  * paged/scheduler greedy output == lockstep greedy output, token for
+    token, on an equal-length stream (the agreement gate — batch
+    composition, paging, and chunked prefill must not change results);
+  * zero page leaks after the stream drains.
+
+Merges a ``serving`` section (with its own claims) into BENCH_engine.json.
+
+    PYTHONPATH=src python -m benchmarks.bench_serving
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+
+from repro.configs import base
+from repro.launch.serve import LockstepEngine, make_prompts
+from repro.models import registry
+from repro.serving import paging
+from repro.serving.scheduler import Scheduler, ServeConfig
+
+OUT_PATH = "BENCH_engine.json"
+
+ARCH = "tinyllama-1.1b"
+BATCH = 4                    # lockstep wave width == scheduler slots
+PROMPT_LEN = 17              # 2 exact prefill chunks + 1 decode-ride token
+SHORT, LONG = 4, 64
+# one long per lockstep wave: each of the three waves pays LONG decode
+# steps for BATCH requests while its three shorts sit finished-but-held;
+# the scheduler overlaps the three longs instead (admitted as shorts
+# evict), so total ticks ~ LONG + admission ramp
+DECODE_LENS = (LONG, SHORT, SHORT, SHORT,
+               LONG, SHORT, SHORT, SHORT,
+               SHORT, SHORT, LONG, SHORT)
+PAGE_SIZE = 8
+
+
+def _serve_cfg() -> ServeConfig:
+    pages_per_seq = paging.pages_needed(PROMPT_LEN + LONG, PAGE_SIZE)
+    return ServeConfig(
+        max_seqs=BATCH, page_size=PAGE_SIZE,
+        num_pages=BATCH * pages_per_seq, pages_per_seq=pages_per_seq,
+        prefill_chunk=16, sample="greedy", seed=0)
+
+
+def bench_continuous_vs_lockstep(cfg, params) -> dict:
+    prompts = make_prompts(cfg, [PROMPT_LEN] * len(DECODE_LENS), seed=0)
+
+    tokens = float(sum(DECODE_LENS))
+    repeats = 2     # best-of-N, the bench_engine timing convention: the
+    #                 container's wall clock is noisy and this gates CI
+
+    # --- lockstep: warm one full-shape wave, then time the stream -------
+    lock = LockstepEngine(cfg, params, batch=BATCH)
+    lock.run(prompts[:BATCH], LONG)                        # compile warmup
+    lock_out = lock.run(prompts, LONG)  # every wave pays its longest member
+    lock_wall = min([lock_out["wall_s"]]
+                    + [lock.run(prompts, LONG)["wall_s"]
+                       for _ in range(repeats - 1)])
+    lock_tps = tokens / max(lock_wall, 1e-9)
+
+    # --- scheduler: warm the jitted steps, then time the same stream ----
+    sched = Scheduler(cfg, params, _serve_cfg())
+    warm = sched.submit(prompts[0], 2)
+    sched.run()
+    assert warm in sched.finished and sched.pool.in_use == 0
+    sched_walls, decode_steps, prefill_chunks = [], 0, 0
+    for rep in range(repeats):
+        steps0, chunks0 = sched.decode_steps, sched.prefill_chunks
+        rids = [sched.submit(p, n) for p, n in zip(prompts, DECODE_LENS)]
+        t0 = time.time()
+        sched.run()
+        sched_walls.append(time.time() - t0)
+        decode_steps = sched.decode_steps - steps0
+        prefill_chunks = sched.prefill_chunks - chunks0
+        assert all(sched.finished[r].shape == (n,)
+                   for r, n in zip(rids, DECODE_LENS))
+        assert sched.pool.in_use == 0
+    sched_wall = min(sched_walls)
+    sched_tps = tokens / max(sched_wall, 1e-9)
+
+    return {
+        "workload": {"arch": cfg.name, "batch": BATCH,
+                     "prompt_len": PROMPT_LEN,
+                     "decode_lens": list(DECODE_LENS)},
+        "lockstep_wall_s": lock_wall,
+        "lockstep_tokens_per_s": lock_tps,
+        "lockstep_decode_steps": lock_out["decode_steps"],
+        "continuous_wall_s": sched_wall,
+        "continuous_tokens_per_s": sched_tps,
+        "continuous_decode_steps": decode_steps,
+        "continuous_prefill_chunks": prefill_chunks,
+        "speedup": sched_tps / max(lock_tps, 1e-9),
+        "peak_pages_in_use": int(sched.peak_pages_in_use),
+        "final_pages_in_use": int(sched.pool.in_use),
+        "num_pages": sched.cfg.num_pages,
+        "page_pool_bytes": int(paging.cache_page_bytes(sched.cache)),
+    }
+
+
+def bench_agreement(cfg, params) -> dict:
+    """Greedy paged scheduler vs greedy lockstep on an equal-length stream
+    (no padding distortion): outputs must match token for token."""
+    n_req, dec = 4, 6
+    prompts = make_prompts(cfg, [PROMPT_LEN] * n_req, seed=1)
+    lock_out = LockstepEngine(cfg, params, batch=BATCH).run(prompts, dec)
+    sched = Scheduler(cfg, params, _serve_cfg())
+    rids = [sched.submit(p, dec) for p in prompts]
+    sched.run()
+    agree = all(
+        sched.finished[r].tolist() == lock_out["outputs"][i].tolist()
+        for i, r in enumerate(rids))
+    return {"requests": n_req, "decode_tokens": dec,
+            "paged_matches_lockstep": bool(agree),
+            "final_pages_in_use": int(sched.pool.in_use)}
+
+
+def main() -> int:
+    # 4x the smoke width: per-step device compute must dominate the
+    # host-side dispatch jitter of this container, so the measured ratio
+    # tracks the decode-step ratio (192 vs ~76) instead of scheduler-tick
+    # overhead noise
+    cfg = base.get_smoke_config(ARCH).with_overrides(
+        num_layers=4, d_model=512, d_ff=1024)
+    params = registry.init_params(cfg, jax.random.PRNGKey(0))
+
+    stream = bench_continuous_vs_lockstep(cfg, params)
+    agreement = bench_agreement(cfg, params)
+    claims = {
+        "serving_continuous_speedup_geq_1_5": stream["speedup"] >= 1.5,
+        "serving_paged_matches_lockstep":
+            agreement["paged_matches_lockstep"],
+        "serving_no_page_leaks":
+            stream["final_pages_in_use"] == 0
+            and agreement["final_pages_in_use"] == 0,
+    }
+    section = {"stream": stream, "agreement": agreement, "claims": claims}
+
+    result = {}
+    if os.path.exists(OUT_PATH):
+        with open(OUT_PATH) as f:
+            result = json.load(f)
+    result["serving"] = section
+    with open(OUT_PATH, "w") as f:
+        json.dump(result, f, indent=2)
+
+    print(f"# serving: lockstep {stream['lockstep_tokens_per_s']:.1f} tok/s "
+          f"({stream['lockstep_decode_steps']} steps) vs continuous "
+          f"{stream['continuous_tokens_per_s']:.1f} tok/s "
+          f"({stream['continuous_decode_steps']} steps, "
+          f"{stream['continuous_prefill_chunks']} prefill chunks) -> "
+          f"speedup {stream['speedup']:.2f}x")
+    print(f"# serving: pages peak={stream['peak_pages_in_use']}/"
+          f"{stream['num_pages']} final={stream['final_pages_in_use']} "
+          f"pool={stream['page_pool_bytes'] / 1e6:.1f}MB")
+    print(f"# serving: agreement paged==lockstep="
+          f"{agreement['paged_matches_lockstep']} "
+          f"({agreement['requests']}x{agreement['decode_tokens']} greedy)")
+    failures = 0
+    for claim, ok in claims.items():
+        print(f"claim,serving,{claim},{'PASS' if ok else 'FAIL'}")
+        failures += (not ok)
+    print(f"# wrote {OUT_PATH} (serving section)")
+    return failures
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -15,10 +15,20 @@ def main() -> None:
     ap.add_argument("--engine-smoke", action="store_true",
                     help="only the engine-vs-seed benchmark "
                          "(emits BENCH_engine.json)")
+    ap.add_argument("--serve-smoke", action="store_true",
+                    help="only the serving benchmark (merges the "
+                         "`serving` section into BENCH_engine.json)")
     args = ap.parse_args()
 
     t0 = time.time()
     failures = 0
+
+    if args.serve_smoke:
+        from benchmarks import bench_serving
+        failures += bench_serving.main()
+        print(f"# serve smoke done in {time.time() - t0:.0f}s, "
+              f"{failures} claim failures")
+        sys.exit(1 if failures else 0)
 
     from benchmarks import bench_engine
     failures += bench_engine.main()
@@ -27,9 +37,10 @@ def main() -> None:
               f"{failures} claim failures")
         sys.exit(1 if failures else 0)
 
-    from benchmarks import bench_figures, bench_kernels
+    from benchmarks import bench_figures, bench_kernels, bench_serving
     failures += bench_figures.main()
     failures += bench_kernels.main()
+    failures += bench_serving.main()
 
     if not args.skip_roofline:
         from benchmarks import bench_roofline

@@ -1,14 +1,20 @@
-"""Batched serving example: prefill a batch of prompts, decode greedily.
+"""Continuous-batching serving example: a mixed-length request stream
+through the paged scheduler.
 
 Uses the hybrid zamba2 (Mamba2 + shared attention) reduced config to show
-the recurrent-state + ring-KV cache path end to end.
+the recurrent-state + paged-KV path end to end: six prompts of different
+lengths share four sequence slots, short requests finish and hand their
+pages to the queued ones mid-flight, and the drained pool ends empty.
 
     PYTHONPATH=src python examples/serve_batched.py
 """
 from repro.launch import serve
 
-out = serve.main(["--arch", "zamba2-7b", "--smoke",
-                  "--batch", "4", "--prompt-len", "32",
-                  "--decode-tokens", "16"])
-assert out["tokens"].shape == (4, 17)
-print("\nbatched prefill+decode OK")
+out = serve.main(["--arch", "zamba2-7b", "--smoke", "--batch", "4",
+                  "--prompt-lens", "32,9,17,5,24,12",
+                  "--decode-tokens", "8", "--page-size", "8"])
+assert sorted(out["outputs"]) == [0, 1, 2, 3, 4, 5]
+assert all(v.shape == (8,) for v in out["outputs"].values())
+assert out["final_pages_in_use"] == 0, "page leak"
+print(f"\ncontinuous batching OK: {out['decode_steps']} decode steps, "
+      f"peak {out['peak_pages_in_use']} pages in use")

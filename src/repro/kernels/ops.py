@@ -40,10 +40,32 @@ def stoch_quantize_grouped_fused(theta: jax.Array, q_hat_prev: jax.Array,
                                  group_ids: jax.Array, *, group_runs,
                                  omega: float, b0: int, b_max: int):
     """Grouped quantize round with the (N, G) range reduction folded into
-    the same ``pallas_call`` (no separate side-information pass)."""
+    the same ``pallas_call`` (no separate side-information pass).
+
+    ``REPRO_QUANT_TILE_D=<block_d>`` routes through the D-tiled two-phase
+    grid variant (bit-identical; bounded VMEM for LM-scale widths — the
+    single-slab default holds a full (BLOCK_N, D) row slab)."""
+    import os
+    tile_d = int(os.environ.get("REPRO_QUANT_TILE_D", "0"))
+    if tile_d > 0:
+        return _quant.stoch_quantize_grouped_fused_tiled(
+            theta, q_hat_prev, uniforms, bits_prev, range_prev, initialized,
+            group_ids, omega=omega, b0=b0, b_max=b_max, block_d=tile_d,
+            interpret=_interpret())
     return _quant.stoch_quantize_grouped_fused(
         theta, q_hat_prev, uniforms, bits_prev, range_prev, initialized,
         group_ids, group_runs=group_runs, omega=omega, b0=b0, b_max=b_max,
+        interpret=_interpret())
+
+
+def stoch_quantize_grouped_fused_tiled(theta, q_hat_prev, uniforms,
+                                       bits_prev, range_prev, initialized,
+                                       group_ids, *, omega: float, b0: int,
+                                       b_max: int, block_d: int = 512):
+    """Explicit entry to the D-tiled two-phase fused round."""
+    return _quant.stoch_quantize_grouped_fused_tiled(
+        theta, q_hat_prev, uniforms, bits_prev, range_prev, initialized,
+        group_ids, omega=omega, b0=b0, b_max=b_max, block_d=block_d,
         interpret=_interpret())
 
 
@@ -56,6 +78,12 @@ def edge_gather_mix(values: jax.Array, nbr_table: jax.Array,
     from repro.kernels import edge_gather_mix as _edge
     return _edge.edge_gather_mix(values, nbr_table, nbr_valid,
                                  interpret=_interpret())
+
+
+def paged_attention_decode(q, k_pages, v_pages, block_tables, ctx_lens):
+    from repro.kernels import paged_attention as _paged
+    return _paged.paged_attention_decode(q, k_pages, v_pages, block_tables,
+                                         ctx_lens, interpret=_interpret())
 
 
 def slstm_cell(wx, r_w, fbias, c0, n0, m0, h0):

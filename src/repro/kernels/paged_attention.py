@@ -1,0 +1,170 @@
+"""Pallas TPU kernel: paged-attention decode (one query token, K/V gathered
+through the block table).
+
+The serving decode step attends ONE new token per sequence against a KV
+cache whose pages are scattered across a shared pool (``DESIGN.md
+§Serving``). Materializing the gathered (B, P·ps, KV, hd) view first — the
+jnp reference path — doubles the HBM traffic of the step; the kernel
+instead gathers each page directly into VMEM via *scalar prefetch*: the
+block table lives in SMEM before the body runs, so the BlockSpec index_map
+picks which physical (1, page_size, KV·hd) page of the pool to DMA for
+each (sequence, phase, logical page) grid step — the same dynamic-gather
+pattern as ``edge_gather_mix``.
+
+The grid's middle dimension is a TWO-PHASE sweep over the sequence's pages
+(the vLLM paged_attention_v1 shape, adapted to the sequential TPU grid):
+
+  phase 0  per-page QK^T logits (MXU dots per KV head) land in a
+           (H, P·ps) VMEM scratch slab, masked by the context length;
+  phase 1  at its first step the softmax runs ONCE over the full slab
+           (no online-rescale bookkeeping — bit-stable vs the oracle),
+           then each step re-DMAs its V page and accumulates
+           probs_page @ V_page into the (1, H·hd) output block in page
+           order.
+
+Only the (H, P·ps) f32 logits slab is ever resident per sequence — V is
+never gathered contiguously. Work is O(ctx · H · hd) row DMAs per
+sequence, independent of pool size. Bit-identical to
+``ref.paged_attention_ref`` (same per-page dot shapes, same one-shot
+softmax, same page-order f32 accumulation); the gather-then-dense path it
+replaces agrees to float tolerance only (different contraction order over
+the kv axis).
+
+Unmapped block-table slots must be clamped to 0 by the wrapper (their
+logits are masked by ctx_len, so the junk page contributes exactly
+nothing).
+
+Scale limit (ROADMAP): the one-shot softmax keeps the whole (H, P·ps) f32
+slab resident, which exceeds VMEM at long_500k contexts (32 heads x 500k
+x 4B ≈ 64 MB vs ~16 MB/core) — the recorded follow-up is an
+online-softmax (running max/sum) accumulation that bounds the slab to one
+page, at the cost of the bit-stable one-shot reduction.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_NEG_INF = -1e30
+
+
+def _paged_attn_kernel(bt_ref, ctx_ref, q_ref, k_ref, v_ref, out_ref,
+                       logits_ref, *, num_kv: int, head_dim: int,
+                       page_size: int, scale: float):
+    # bt_ref/ctx_ref are scalar-prefetch (SMEM) refs; q_ref is this
+    # sequence's (1, H*hd) row; k_ref/v_ref are the (1, ps, KV*hd) physical
+    # page the index_map already gathered for this (b, phase, p) step.
+    b = pl.program_id(0)
+    phase = pl.program_id(1)
+    p = pl.program_id(2)
+    n_pages = pl.num_programs(2)
+    groups = q_ref.shape[-1] // (num_kv * head_dim)
+    ctx = ctx_ref[b]
+
+    @pl.when(phase == 0)
+    def _logits():
+        q = q_ref[0].reshape(num_kv, groups, head_dim).astype(jnp.float32)
+        k = k_ref[0].reshape(page_size, num_kv, head_dim).astype(jnp.float32)
+        # slot s of logical page p holds absolute position p*ps + s; the
+        # single decode query sits at position ctx-1, so causal+written
+        # masking collapses to slot_index < ctx.
+        idx = p * page_size + jax.lax.broadcasted_iota(
+            jnp.int32, (1, page_size), 1)
+        valid = idx < ctx                                  # (1, ps)
+        rows = []
+        for kvh in range(num_kv):
+            dots = jax.lax.dot_general(
+                q[kvh], k[:, kvh],
+                (((1,), (1,)), ((), ())),
+                preferred_element_type=jnp.float32)        # (G, ps)
+            rows.append(dots * scale)
+        slab = jnp.concatenate(rows, axis=0)               # (H, ps)
+        logits_ref[:, pl.ds(p * page_size, page_size)] = jnp.where(
+            valid, slab, _NEG_INF)
+
+    @pl.when((phase == 1) & (p == 0))
+    def _softmax():
+        logits_ref[...] = jax.nn.softmax(logits_ref[...], axis=-1)
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    @pl.when(phase == 1)
+    def _accumulate():
+        v = v_ref[0].reshape(page_size, num_kv, head_dim).astype(jnp.float32)
+        probs = logits_ref[:, pl.ds(p * page_size, page_size)]  # (H, ps)
+        outs = []
+        for kvh in range(num_kv):
+            pg = probs[kvh * groups:(kvh + 1) * groups]        # (G, ps)
+            outs.append(jax.lax.dot_general(
+                pg, v[:, kvh], (((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32))           # (G, hd)
+        out_ref[...] += jnp.concatenate(outs, axis=0).reshape(1, -1)
+        _ = n_pages  # grid metadata kept for clarity
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_attention_decode(q: jax.Array, k_pages: jax.Array,
+                           v_pages: jax.Array, block_tables: jax.Array,
+                           ctx_lens: jax.Array, *,
+                           interpret: bool = True) -> jax.Array:
+    """Single-token decode attention through a paged KV cache.
+
+    Args:
+      q: (B, H, hd) query for the one new token of each sequence (already
+        rotary-embedded).
+      k_pages, v_pages: (num_pages, page_size, KV, hd) shared pools.
+      block_tables: (B, pages_per_seq) int32 physical page ids; unmapped
+        slots (-1) are clamped to page 0 here and masked by ``ctx_lens``.
+      ctx_lens: (B,) int32 tokens written for each sequence (the query's
+        position + 1); 0 for inactive slots (output = uniform average of
+        junk, callers mask it).
+      interpret: interpreter mode (CPU validation); pass False on TPU.
+
+    Returns:
+      (B, H, hd) f32 attention output, bit-identical to
+      ``ref.paged_attention_ref``.
+    """
+    bsz, h, hd = q.shape
+    num_pages, page_size, num_kv, hd_k = k_pages.shape
+    assert hd_k == hd and h % num_kv == 0
+    pages_per_seq = block_tables.shape[1]
+    bt = jnp.maximum(block_tables.astype(jnp.int32), 0)
+    scale = 1.0 / float(np.sqrt(np.float32(hd)))
+
+    kvhd = num_kv * hd
+    k_flat = k_pages.reshape(num_pages, page_size, kvhd)
+    v_flat = v_pages.reshape(num_pages, page_size, kvhd)
+    q_flat = q.astype(jnp.float32).reshape(bsz, h * hd)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(bsz, 2, pages_per_seq),
+        in_specs=[
+            pl.BlockSpec((1, h * hd),
+                         lambda b, ph, p, bt_ref, ctx_ref: (b, 0)),
+            pl.BlockSpec((1, page_size, kvhd),
+                         lambda b, ph, p, bt_ref, ctx_ref:
+                         (bt_ref[b, p], 0, 0)),
+            pl.BlockSpec((1, page_size, kvhd),
+                         lambda b, ph, p, bt_ref, ctx_ref:
+                         (bt_ref[b, p], 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, h * hd),
+                               lambda b, ph, p, bt_ref, ctx_ref: (b, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((h, pages_per_seq * page_size), jnp.float32),
+        ],
+    )
+    kernel = functools.partial(_paged_attn_kernel, num_kv=num_kv,
+                               head_dim=hd, page_size=page_size, scale=scale)
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((bsz, h * hd), jnp.float32),
+        interpret=interpret,
+    )(bt, ctx_lens.astype(jnp.int32), q_flat, k_flat, v_flat)
+    return out.reshape(bsz, h, hd)

@@ -8,6 +8,7 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.quantization import bit_schedule
 
@@ -137,6 +138,56 @@ def edge_gather_mix_ref(values: jax.Array, nbr_table: jax.Array,
     rows = values.astype(jnp.float32)[nbr_table]          # (N, S, d)
     return jnp.einsum("nsd,ns->nd", rows,
                       nbr_valid.astype(jnp.float32))
+
+
+def paged_attention_ref(q: jax.Array, k_pages: jax.Array,
+                        v_pages: jax.Array, block_tables: jax.Array,
+                        ctx_lens: jax.Array) -> jax.Array:
+    """Single-token decode attention through a paged KV cache — ground
+    truth for the ``paged_attention_decode`` kernel, mirroring its exact
+    evaluation order (per-page QK dots, ONE softmax over the full logits
+    slab, f32 V accumulation in logical page order), so identical inputs
+    produce bit-identical outputs.
+
+    q: (B, H, hd); k_pages/v_pages: (num_pages, page_size, KV, hd);
+    block_tables: (B, P) int32 (-1 = unmapped, clamped + masked);
+    ctx_lens: (B,) int32. Returns (B, H, hd) f32.
+    """
+    bsz, h, hd = q.shape
+    _, page_size, num_kv, _ = k_pages.shape
+    groups = h // num_kv
+    pages_per_seq = block_tables.shape[1]
+    scale = 1.0 / float(np.sqrt(np.float32(hd)))
+    bt = jnp.maximum(block_tables.astype(jnp.int32), 0)
+
+    def dots(a, b_mat):                                    # (G,hd)x(ps,hd)
+        return jax.lax.dot_general(a, b_mat, (((1,), (1,)), ((), ())),
+                                   preferred_element_type=jnp.float32)
+
+    outs = []
+    for b in range(bsz):
+        qb = q[b].astype(jnp.float32).reshape(num_kv, groups, hd)
+        slabs = []
+        for p in range(pages_per_seq):
+            k = k_pages[bt[b, p]].astype(jnp.float32)      # (ps, KV, hd)
+            rows = [dots(qb[kvh], k[:, kvh]) * scale
+                    for kvh in range(num_kv)]
+            slab = jnp.concatenate(rows, axis=0)           # (H, ps)
+            idx = p * page_size + jnp.arange(page_size)[None, :]
+            slabs.append(jnp.where(idx < ctx_lens[b], slab, -1e30))
+        probs = jax.nn.softmax(jnp.concatenate(slabs, axis=1), axis=-1)
+        acc = jnp.zeros((h, hd), jnp.float32)
+        for p in range(pages_per_seq):
+            v = v_pages[bt[b, p]].astype(jnp.float32)      # (ps, KV, hd)
+            pg = probs[:, p * page_size:(p + 1) * page_size]
+            parts = [jax.lax.dot_general(
+                pg[kvh * groups:(kvh + 1) * groups], v[:, kvh],
+                (((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32)
+                for kvh in range(num_kv)]
+            acc = acc + jnp.concatenate(parts, axis=0)
+        outs.append(acc)
+    return jnp.stack(outs, axis=0)
 
 
 def slstm_cell_ref(wx: jax.Array, r_w: jax.Array, fbias: jax.Array,

@@ -42,6 +42,7 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.quantization import bit_schedule
 from repro.kernels.ref import grouped_range_ref
@@ -226,6 +227,142 @@ def stoch_quantize_grouped_fused(
                    jax.ShapeDtypeStruct((np_, n_groups), jnp.float32),
                    jax.ShapeDtypeStruct((np_, n_groups), jnp.float32),
                    jax.ShapeDtypeStruct((np_, n_groups), jnp.float32)),
+        interpret=interpret,
+    )(theta_p, qprev_p, unif_p, bprev_p, rprev_p, init_p, gid_p)
+    return (out[:n, :d], range_new[:n], bits[:n], delta[:n])
+
+
+def _grouped_fused_tiled_kernel(theta_ref, qprev_ref, unif_ref, bprev_ref,
+                                rprev_ref, init_ref, gid_ref,
+                                out_ref, range_ref, bits_ref, delta_ref,
+                                racc_ref, dacc_ref, gacc_ref,
+                                *, n_groups, omega, b0, b_max):
+    """Two-phase D-tiled fused body. The single-slab kernel above holds a
+    full (BLOCK_N, D) row slab in VMEM — fine in interpret mode, impossible
+    at LM-scale widths on hardware (ROADMAP). Here the grid's middle
+    dimension is a phase sweep over (BLOCK_N, BLOCK_D) tiles:
+
+      phase 0  per-tile per-group ``max |theta - q_prev|`` accumulates
+               into a (BLOCK_N, G) VMEM scratch — group membership comes
+               from the tile's gid row (exact 0/1 masks; max is
+               order-insensitive, so the result is bit-identical to the
+               slab reduction over static column runs);
+      phase 1  at its first step the Eq. (18) bit schedule runs ONCE on
+               the accumulated panel (side outputs written, (Δ, degen)
+               parked in scratch), then every step quantizes its tile with
+               the scratch scalars while re-streaming theta/q_prev.
+
+    Two reads of the (N, D) buffers instead of one — the price of bounded
+    VMEM — but still zero separate host-side passes and one pallas_call.
+    """
+    ph = pl.program_id(1)
+    j = pl.program_id(2)
+    gid = gid_ref[...]                           # (1, BLOCK_D) of this tile
+    theta = theta_ref[...].astype(jnp.float32)
+    qprev = qprev_ref[...].astype(jnp.float32)
+
+    @pl.when((ph == 0) & (j == 0))
+    def _init():
+        racc_ref[...] = jnp.zeros_like(racc_ref)
+
+    @pl.when(ph == 0)
+    def _reduce():
+        diff = jnp.abs(theta - qprev)
+        cols = []
+        for g in range(n_groups):
+            cols.append(jnp.max(jnp.where(gid == g, diff, 0.0), axis=1))
+        racc_ref[...] = jnp.maximum(racc_ref[...],
+                                    jnp.stack(cols, axis=1))
+
+    @pl.when((ph == 1) & (j == 0))
+    def _schedule():
+        bits, delta, degen = bit_schedule(
+            bprev_ref[...].astype(jnp.float32), racc_ref[...],
+            rprev_ref[...].astype(jnp.float32),
+            init_ref[...].astype(jnp.float32), omega, b0, b_max)
+        range_ref[...] = racc_ref[...]
+        bits_ref[...] = bits
+        delta_ref[...] = delta.astype(jnp.float32)
+        dacc_ref[...] = delta.astype(jnp.float32)
+        gacc_ref[...] = degen.astype(jnp.float32)
+
+    @pl.when(ph == 1)
+    def _quantize():
+        unif = unif_ref[...].astype(jnp.float32)
+        delta_c = _broadcast_group_cols(dacc_ref[...], gid, theta.shape)
+        range_c = _broadcast_group_cols(racc_ref[...], gid, theta.shape)
+        degen_c = _broadcast_group_cols(gacc_ref[...], gid, theta.shape)
+        safe_delta = jnp.maximum(delta_c, _EPS)
+        c = (theta - qprev + range_c) / safe_delta
+        floor_c = jnp.floor(c)
+        q = floor_c + (unif < (c - floor_c)).astype(jnp.float32)
+        levels = 2.0 * range_c / safe_delta
+        q = jnp.clip(q, 0.0, levels)
+        out = qprev + safe_delta * q - range_c
+        out_ref[...] = jnp.where(degen_c > 0.0, qprev,
+                                 out).astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("group_runs", "omega", "b0",
+                                             "b_max", "block_n", "block_d",
+                                             "interpret"))
+def stoch_quantize_grouped_fused_tiled(
+    theta: jax.Array, q_hat_prev: jax.Array, uniforms: jax.Array,
+    bits_prev: jax.Array, range_prev: jax.Array, initialized: jax.Array,
+    group_ids: jax.Array, *, group_runs=None, omega: float, b0: int,
+    b_max: int, block_n: int = BLOCK_N, block_d: int = BLOCK_D,
+    interpret: bool = True,
+):
+    """D-tiled two-phase variant of :func:`stoch_quantize_grouped_fused`
+    for LM-scale widths: VMEM residency is O(BLOCK_N * BLOCK_D) instead of
+    O(BLOCK_N * D), at the cost of streaming theta/q_prev twice (the
+    two-phase grid). Same signature (``group_runs`` accepted and ignored —
+    the tiled reduction masks on the gid row instead of static runs) and
+    bit-identical outputs: max-reductions are order-insensitive, the
+    schedule runs on an equal panel, and the quantize chain applies the
+    same per-column scalars."""
+    n, d = theta.shape
+    n_groups = bits_prev.shape[1]
+    dtype = theta.dtype
+    n_pad = (-n) % block_n
+    d_pad = (-d) % block_d
+
+    def pad2(x):
+        return jnp.pad(x, ((0, n_pad), (0, d_pad)))
+
+    theta_p = pad2(theta)
+    qprev_p = pad2(q_hat_prev)
+    unif_p = pad2(uniforms)
+    bprev_p = jnp.pad(bits_prev, ((0, n_pad), (0, 0)))
+    rprev_p = jnp.pad(range_prev, ((0, n_pad), (0, 0)))
+    init_p = jnp.pad(initialized, ((0, n_pad), (0, 0)))
+    # padded columns carry group 0's id but theta == q_prev == 0 there, so
+    # their |diff| contributes 0 to a max over non-negative values
+    gid_p = jnp.pad(group_ids.astype(jnp.int32), (0, d_pad))[None, :]
+    np_, dp_ = theta_p.shape
+
+    grid = (np_ // block_n, 2, dp_ // block_d)
+    mat_spec = pl.BlockSpec((block_n, block_d), lambda i, ph, j: (i, j))
+    side_spec = pl.BlockSpec((block_n, n_groups), lambda i, ph, j: (i, 0))
+    gid_spec = pl.BlockSpec((1, block_d), lambda i, ph, j: (0, j))
+    kernel = functools.partial(_grouped_fused_tiled_kernel,
+                               n_groups=n_groups, omega=omega, b0=b0,
+                               b_max=b_max)
+    out, range_new, bits, delta = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[mat_spec, mat_spec, mat_spec, side_spec, side_spec,
+                  side_spec, gid_spec],
+        out_specs=(mat_spec, side_spec, side_spec, side_spec),
+        out_shape=(jax.ShapeDtypeStruct((np_, dp_), dtype),
+                   jax.ShapeDtypeStruct((np_, n_groups), jnp.float32),
+                   jax.ShapeDtypeStruct((np_, n_groups), jnp.float32),
+                   jax.ShapeDtypeStruct((np_, n_groups), jnp.float32)),
+        scratch_shapes=[
+            pltpu.VMEM((block_n, n_groups), jnp.float32),
+            pltpu.VMEM((block_n, n_groups), jnp.float32),
+            pltpu.VMEM((block_n, n_groups), jnp.float32),
+        ],
         interpret=interpret,
     )(theta_p, qprev_p, unif_p, bprev_p, rprev_p, init_p, gid_p)
     return (out[:n, :d], range_new[:n], bits[:n], delta[:n])

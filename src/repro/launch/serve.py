@@ -1,11 +1,17 @@
-"""Batched-request serving driver: prefill + token-by-token decode.
+"""Serving driver: paged continuous-batching scheduler (default) or the
+lockstep fixed-batch baseline.
 
-CPU-sized end-to-end check of the serve path that the decode dry-run shapes
-lower at production scale: builds a KV/recurrent cache, prefills a batch of
-prompts, then decodes N tokens greedily.
+``--engine paged`` routes a stream of (possibly mixed-length) requests
+through ``repro.serving.scheduler`` — paged KV-cache, admission on free
+pages, chunked prefill, mid-flight eviction (DESIGN.md §Serving).
+``--engine lockstep`` is the old fixed-batch loop kept as the benchmark
+baseline: one contiguous prompt+decode cache per request, no admission
+until the whole batch finishes. BOTH engines sample inside the jitted
+decode step (``--sample greedy|temp``) — the per-token host ``argmax``
+round-trip is gone.
 
     PYTHONPATH=src python -m repro.launch.serve --arch zamba2-7b --smoke \
-        --batch 4 --prompt-len 32 --decode-tokens 16
+        --prompt-lens 32,8,16 --decode-tokens 16
 """
 from __future__ import annotations
 
@@ -14,10 +20,140 @@ import time
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs import base
-from repro.data.lm import SyntheticLM, SyntheticLMConfig, model_batch
+from repro.data.lm import SyntheticLM, SyntheticLMConfig
 from repro.models import registry
+from repro.serving import paging
+from repro.serving.scheduler import (Scheduler, ServeConfig, per_slot_keys,
+                                     sample_tokens)
+
+
+def make_prompts(cfg, prompt_lens, seed: int):
+    """Deterministic synthetic prompts, one per requested length."""
+    data = SyntheticLM(SyntheticLMConfig(cfg.vocab_size, max(prompt_lens),
+                                         seed=seed))
+    raw = data.batch(0, len(prompt_lens))["tokens"]
+    return [np.asarray(raw[i, :n], np.int32)
+            for i, n in enumerate(prompt_lens)]
+
+
+# ------------------------------------------------------------- lockstep --
+class LockstepEngine:
+    """Fixed-batch baseline: pad every prompt to the longest, prefill the
+    wave, decode until the WHOLE wave hits its token budget. A new wave
+    starts only when the previous one has fully finished — the admission
+    pathology continuous batching removes. Jitted steps are built once so
+    benchmarks can warm the engine and time steady-state waves."""
+
+    def __init__(self, cfg, params, *, sample: str = "greedy",
+                 temperature: float = 1.0, batch: int = 4, seed: int = 0):
+        self.cfg, self.params = cfg, params
+        self.batch = batch
+        self.key = jax.random.PRNGKey(seed)
+
+        @jax.jit
+        def prefill(params, cache, tokens, positions, key, frames=None):
+            if cfg.is_encoder_decoder:       # whisper: encode + cross-KV
+                cache = registry.prefill_cross_cache(params, cfg, frames,
+                                                     cache)
+            logits, _, cache = registry.apply_model(
+                params, cfg, {"tokens": tokens,
+                              "positions": registry.build_positions(
+                                  cfg, positions)}, caches=cache)
+            nxt = sample_tokens(logits[:, -1, :],
+                                per_slot_keys(key, tokens.shape[0]),
+                                sample, temperature)
+            return nxt, cache
+
+        @jax.jit
+        def decode(params, cache, tokens, pos_scalar, key):
+            b = tokens.shape[0]
+            positions = registry.build_positions(
+                cfg, jnp.broadcast_to(pos_scalar[None, None], (b, 1)))
+            logits, cache = registry.decode_step(
+                params, cfg, tokens[:, None], positions, cache)
+            nxt = sample_tokens(logits[:, -1, :], per_slot_keys(key, b),
+                                sample, temperature)
+            return nxt, cache
+
+        self._prefill, self._decode = prefill, decode
+
+    def run(self, prompts, decode_tokens: int) -> dict:
+        """Serve ``prompts``, ``decode_tokens`` new tokens each, in waves
+        of ``self.batch``. Short prompts in a wave are right-padded by
+        repeating their last token (the baseline is defined on
+        equal-length waves)."""
+        cfg = self.cfg
+        waves = [list(range(i, min(i + self.batch, len(prompts))))
+                 for i in range(0, len(prompts), self.batch)]
+        plen = max(len(p) for p in prompts)
+        cache_len = plen + decode_tokens
+        outputs = {}
+        t0 = time.time()
+        for wi, wave in enumerate(waves):
+            wb = len(wave)
+            # per-(wave, step) call keys (the in-jit per-slot fold adds the
+            # slot axis): without the wave component, temperature sampling
+            # would replay identical draws in every wave
+            wave_key = jax.random.fold_in(self.key, wi)
+            toks = np.zeros((wb, plen), np.int32)
+            for j, i in enumerate(wave):
+                toks[j, :len(prompts[i])] = prompts[i]
+                toks[j, len(prompts[i]):] = prompts[i][-1]
+            cache = registry.init_cache(cfg, wb, cache_len)
+            frames = None
+            if cfg.is_encoder_decoder:       # stub audio frames (data.lm)
+                frames = 0.02 * jax.random.normal(
+                    jax.random.fold_in(self.key, 99),
+                    (wb, cfg.source_positions, cfg.d_model), jnp.bfloat16)
+            nxt, cache = self._prefill(
+                self.params, cache, jnp.asarray(toks),
+                jnp.broadcast_to(jnp.arange(plen)[None], (wb, plen)),
+                jax.random.fold_in(wave_key, 0), frames)
+            gen = [np.asarray(nxt)]
+            for i in range(decode_tokens - 1):
+                nxt, cache = self._decode(self.params, cache, nxt,
+                                          jnp.int32(plen + i),
+                                          jax.random.fold_in(wave_key,
+                                                             i + 1))
+                gen.append(np.asarray(nxt))
+            jax.block_until_ready(nxt)
+            stacked = np.stack(gen, axis=1)                # (wb, decode)
+            for j, i in enumerate(wave):
+                outputs[i] = stacked[j]
+        wall = time.time() - t0
+        total = decode_tokens * len(prompts)
+        return {"outputs": outputs, "wall_s": wall,
+                "tokens_per_s": total / max(wall, 1e-9),
+                "decode_steps": decode_tokens * len(waves)}
+
+
+def run_lockstep(cfg, params, prompts, decode_tokens: int, *,
+                 sample: str = "greedy", temperature: float = 1.0,
+                 batch: int = 4, seed: int = 0) -> dict:
+    return LockstepEngine(cfg, params, sample=sample,
+                          temperature=temperature, batch=batch,
+                          seed=seed).run(prompts, decode_tokens)
+
+
+# ---------------------------------------------------------------- paged --
+def run_paged(cfg, params, prompts, decode_tokens: int, *,
+              serve_cfg: ServeConfig) -> dict:
+    sched = Scheduler(cfg, params, serve_cfg)
+    rids = [sched.submit(p, decode_tokens) for p in prompts]
+    t0 = time.time()
+    finished = sched.run()
+    wall = time.time() - t0
+    total = decode_tokens * len(prompts)
+    return {"outputs": {i: finished[r] for i, r in enumerate(rids)},
+            "wall_s": wall, "tokens_per_s": total / max(wall, 1e-9),
+            "decode_steps": sched.decode_steps,
+            "prefill_chunks": sched.prefill_chunks,
+            "peak_pages_in_use": sched.peak_pages_in_use,
+            "final_pages_in_use": sched.pool.in_use,
+            "page_bytes": paging.cache_page_bytes(sched.cache)}
 
 
 def main(argv=None) -> dict:
@@ -26,72 +162,63 @@ def main(argv=None) -> dict:
                     choices=base.list_architectures())
     ap.add_argument("--smoke", action="store_true", default=True)
     ap.add_argument("--full", dest="smoke", action="store_false")
-    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--engine", choices=("paged", "lockstep"),
+                    default="paged")
+    ap.add_argument("--batch", type=int, default=4,
+                    help="lockstep wave width / paged max_seqs")
     ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--prompt-lens", type=str, default=None,
+                    help="comma-separated per-request prompt lengths "
+                         "(mixed-length stream); overrides --prompt-len")
+    ap.add_argument("--requests", type=int, default=None,
+                    help="number of requests (default: one batch)")
     ap.add_argument("--decode-tokens", type=int, default=16)
-    ap.add_argument("--cache-len", type=int, default=None)
+    ap.add_argument("--sample", choices=("greedy", "temp"), default="greedy")
+    ap.add_argument("--temperature", type=float, default=1.0)
+    ap.add_argument("--page-size", type=int, default=16)
+    ap.add_argument("--prefill-chunk", type=int, default=16)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
     cfg = (base.get_smoke_config(args.arch) if args.smoke
            else base.get_config(args.arch))
-    cache_len = args.cache_len or (args.prompt_len + args.decode_tokens)
-    print(f"[serve] arch={cfg.name} batch={args.batch} "
-          f"prompt={args.prompt_len} decode={args.decode_tokens}")
+    if cfg.is_encoder_decoder and args.engine == "paged":
+        # encoder-decoder cross caches are not paged (DESIGN.md §Serving)
+        print(f"[serve] {cfg.name} is encoder-decoder: falling back to "
+              f"--engine lockstep")
+        args.engine = "lockstep"
+    if args.prompt_lens:
+        prompt_lens = [int(x) for x in args.prompt_lens.split(",")]
+    else:
+        prompt_lens = [args.prompt_len] * (args.requests or args.batch)
+    print(f"[serve] arch={cfg.name} engine={args.engine} "
+          f"requests={len(prompt_lens)} prompt_lens={prompt_lens} "
+          f"decode={args.decode_tokens} sample={args.sample}")
 
     params = registry.init_params(cfg, jax.random.PRNGKey(args.seed))
-    cache = registry.init_cache(cfg, args.batch, cache_len)
+    prompts = make_prompts(cfg, prompt_lens, args.seed)
 
-    data = SyntheticLM(SyntheticLMConfig(cfg.vocab_size, args.prompt_len,
-                                         seed=args.seed))
-    raw = data.batch(0, args.batch)
-    batch = model_batch(cfg, {"tokens": raw["tokens"]},
-                        key=jax.random.PRNGKey(1))
-
-    @jax.jit
-    def prefill(params, cache, batch):
-        if cfg.is_encoder_decoder:
-            cache = registry.prefill_cross_cache(
-                params, cfg, batch["frames"], cache)
-            batch = {k: v for k, v in batch.items() if k != "frames"}
-        logits, _, cache = registry.apply_model(params, cfg, batch,
-                                                caches=cache)
-        return logits[:, -1, :], cache
-
-    @jax.jit
-    def decode(params, cache, tokens, positions):
-        logits, cache = registry.decode_step(params, cfg, tokens, positions,
-                                             cache)
-        return logits[:, -1, :], cache
-
-    t0 = time.time()
-    logits, cache = prefill(params, cache, batch)
-    logits.block_until_ready()
-    t_prefill = time.time() - t0
-    print(f"[serve] prefill: {args.batch}x{args.prompt_len} tokens in "
-          f"{t_prefill:.2f}s")
-
-    tokens = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
-    generated = [tokens]
-    t0 = time.time()
-    for i in range(args.decode_tokens):
-        pos_scalar = args.prompt_len + i
-        if cfg.mrope_sections is not None:
-            positions = jnp.full((args.batch, 1, 3), pos_scalar, jnp.int32)
-        else:
-            positions = jnp.full((args.batch, 1), pos_scalar, jnp.int32)
-        logits, cache = decode(params, cache, tokens, positions)
-        tokens = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
-        generated.append(tokens)
-    jax.block_until_ready(tokens)
-    t_decode = time.time() - t0
-    out = jnp.concatenate(generated, axis=1)
-    tps = args.batch * args.decode_tokens / max(t_decode, 1e-9)
-    print(f"[serve] decoded {args.decode_tokens} tokens/seq in "
-          f"{t_decode:.2f}s ({tps:.1f} tok/s aggregate)")
-    print(f"[serve] sample continuation (seq 0): {out[0].tolist()}")
-    return {"prefill_s": t_prefill, "decode_s": t_decode,
-            "tokens": out}
+    if args.engine == "lockstep":
+        out = run_lockstep(cfg, params, prompts, args.decode_tokens,
+                           sample=args.sample, temperature=args.temperature,
+                           batch=args.batch, seed=args.seed)
+    else:
+        max_ctx = max(prompt_lens) + args.decode_tokens
+        pages_per_seq = paging.pages_needed(max_ctx, args.page_size)
+        scfg = ServeConfig(
+            max_seqs=args.batch, page_size=args.page_size,
+            num_pages=args.batch * pages_per_seq * 2,
+            pages_per_seq=pages_per_seq,
+            prefill_chunk=args.prefill_chunk, sample=args.sample,
+            temperature=args.temperature, seed=args.seed)
+        out = run_paged(cfg, params, prompts, args.decode_tokens,
+                        serve_cfg=scfg)
+    print(f"[serve] {len(prompt_lens)}x{args.decode_tokens} tokens in "
+          f"{out['wall_s']:.2f}s ({out['tokens_per_s']:.1f} tok/s "
+          f"aggregate, {out['decode_steps']} decode steps)")
+    print(f"[serve] sample continuation (req 0): "
+          f"{out['outputs'][0].tolist()}")
+    return out
 
 
 if __name__ == "__main__":

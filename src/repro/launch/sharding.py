@@ -219,6 +219,11 @@ def cache_leaf_spec(path: str, shape: Tuple[int, ...], mesh, cfg, *,
 
     if name in ("k", "v", "cross_k", "cross_v") and len(rest) == 4:
         _ = try_axis(2) or try_axis(3) or try_axis(1)   # KV > HD > seq
+    elif name in ("k_pages", "v_pages") and len(rest) == 4:
+        # paged pools (num_pages, page_size, KV, hd): pages ride the batch
+        # axis (axes[0] above), heads/head-dim the model axis — pages
+        # never shard over page_size (a page is the DMA unit)
+        _ = try_axis(2) or try_axis(3)
     elif name == "state" and len(rest) == 4:            # mamba (B,H,P,N)
         _ = try_axis(1) or try_axis(2)
     elif name == "conv" and len(rest) == 3:             # (B,K-1,C)

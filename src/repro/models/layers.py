@@ -217,6 +217,109 @@ def _cache_write(cache, k, v, q_positions):
     return {"k": ck, "v": cv, "kv_pos": cpos}
 
 
+# ------------------------------------------------------- paged KV cache --
+def init_paged_kv_cache(batch: int, num_pages: int, page_size: int,
+                        pages_per_seq: int, num_kv: int, head_dim: int,
+                        dtype=jnp.bfloat16):
+    """Paged KV cache: a shared page pool plus per-sequence block tables.
+
+    ``k_pages``/``v_pages`` are the physical pool — ``num_pages`` pages of
+    ``page_size`` token slots each, shared by every sequence. ``kv_pos`` is
+    pool-shaped (-1 = unwritten slot) so a freed-and-recycled page never
+    leaks stale entries into another sequence's attention: the allocator
+    invalidates a page's kv_pos on (re)allocation and the mask does the
+    rest. ``block_tables[b, l]`` maps sequence b's logical page l to a
+    physical page id (-1 = unmapped). The entry for absolute position p
+    lives at (block_tables[b, p // page_size], p % page_size), so gathering
+    a sequence's pages in logical order reproduces the linear cache layout
+    exactly — which is what makes paged decode bit-identical to a
+    contiguous cache of length pages_per_seq * page_size (DESIGN.md
+    §Serving)."""
+    return {
+        "k_pages": jnp.zeros((num_pages, page_size, num_kv, head_dim), dtype),
+        "v_pages": jnp.zeros((num_pages, page_size, num_kv, head_dim), dtype),
+        "kv_pos": jnp.full((num_pages, page_size), -1, jnp.int32),
+        "block_tables": jnp.full((batch, pages_per_seq), -1, jnp.int32),
+    }
+
+
+def is_paged_cache(cache) -> bool:
+    return isinstance(cache, dict) and "k_pages" in cache
+
+
+def _paged_slots(cache, q_positions):
+    """(physical page, in-page slot) for each (b, s) position; invalid
+    positions (< 0 — padding / inactive decode slots) map to the
+    out-of-bounds page ``num_pages`` so scatters with mode="drop" discard
+    them and gathers never see them."""
+    num_pages, page_size = cache["kv_pos"].shape
+    logical = q_positions // page_size                        # (B, S)
+    valid = (q_positions >= 0) & (logical < cache["block_tables"].shape[1])
+    phys = jnp.take_along_axis(cache["block_tables"],
+                               jnp.clip(logical, 0, None), axis=1)
+    valid = valid & (phys >= 0)
+    phys = jnp.where(valid, phys, num_pages)                  # OOB -> drop
+    return phys, q_positions % page_size
+
+
+def _paged_cache_write(cache, k, v, q_positions):
+    """Scatter S new (k, v) entries through the block table into the pool."""
+    phys, slots = _paged_slots(cache, q_positions)            # (B, S)
+    pf, sf = phys.reshape(-1), slots.reshape(-1)
+    kf = k.reshape((-1,) + k.shape[2:]).astype(cache["k_pages"].dtype)
+    vf = v.reshape((-1,) + v.shape[2:]).astype(cache["v_pages"].dtype)
+    new = dict(cache)
+    new["k_pages"] = cache["k_pages"].at[pf, sf].set(kf, mode="drop")
+    new["v_pages"] = cache["v_pages"].at[pf, sf].set(vf, mode="drop")
+    new["kv_pos"] = cache["kv_pos"].at[pf, sf].set(
+        q_positions.reshape(-1), mode="drop")
+    return new
+
+
+def paged_gather(cache):
+    """Gather each sequence's pages in logical order into a contiguous view.
+
+    Returns (k, v, kv_pos) shaped (B, pages_per_seq * page_size, ...) —
+    elementwise equal to a linear cache of that length (unmapped pages
+    surface kv_pos = -1, so the mask removes them)."""
+    bt = cache["block_tables"]                                # (B, P)
+    b, p = bt.shape
+    ps = cache["kv_pos"].shape[1]
+    safe = jnp.where(bt >= 0, bt, 0)
+    mapped = (bt >= 0)[:, :, None]                            # (B, P, 1)
+
+    def take(pool):
+        g = jnp.take(pool, safe, axis=0)                      # (B, P, ps, ...)
+        return g.reshape((b, p * ps) + g.shape[3:])
+
+    kv_pos = jnp.where(mapped, jnp.take(cache["kv_pos"], safe, axis=0), -1)
+    return take(cache["k_pages"]), take(cache["v_pages"]), \
+        kv_pos.reshape(b, p * ps)
+
+
+def _use_paged_kernel(s: int, window) -> bool:
+    """Route single-token paged decode through the Pallas block-table
+    gather kernel. Off by default (the jnp gather path is the bit-golden
+    reference); REPRO_PAGED_ATTN_KERNEL=1 turns it on. Windowed (SWA)
+    attention stays on the gather path — the kernel masks by context
+    length only."""
+    import os
+    return (s == 1 and window is None
+            and os.environ.get("REPRO_PAGED_ATTN_KERNEL", "0") == "1")
+
+
+def _paged_attn_kernel_out(cache, q, q_positions):
+    """(B, 1, H, hd) attention output via the paged-attention decode
+    kernel: K/V pages are gathered through the block table inside the
+    ``pallas_call`` (scalar prefetch), never materialized contiguously."""
+    from repro.kernels import ops as kernel_ops
+    ctx_lens = jnp.maximum(q_positions[:, 0] + 1, 0)          # (B,)
+    out = kernel_ops.paged_attention_decode(
+        q[:, 0], cache["k_pages"], cache["v_pages"],
+        cache["block_tables"], ctx_lens)
+    return out[:, None].astype(q.dtype)
+
+
 def attention_apply(params, dims: AttnDims, x, positions, *,
                     causal: bool = True, window: Optional[int] = None,
                     rope_theta: float = 10000.0,
@@ -249,9 +352,18 @@ def attention_apply(params, dims: AttnDims, x, positions, *,
             q = apply_rope(q, positions, rope_theta, mrope_sections)
             k = apply_rope(k, positions, rope_theta, mrope_sections)
         if cache is not None:
-            new_cache = _cache_write(cache, k, v, q_positions)
-            k, v = new_cache["k"], new_cache["v"]
-            kv_positions = new_cache["kv_pos"]
+            if is_paged_cache(cache):
+                new_cache = _paged_cache_write(cache, k, v, q_positions)
+                if _use_paged_kernel(s, window):
+                    out = _paged_attn_kernel_out(new_cache, q, q_positions)
+                    out = dense(params["o"], out.reshape(b, s, h * hd))
+                    return P.constrain(out, ("batch", "res_seq", "embed")), \
+                        new_cache
+                k, v, kv_positions = paged_gather(new_cache)
+            else:
+                new_cache = _cache_write(cache, k, v, q_positions)
+                k, v = new_cache["k"], new_cache["v"]
+                kv_positions = new_cache["kv_pos"]
         else:
             kv_positions = q_positions
         eff_causal, eff_window = causal, window

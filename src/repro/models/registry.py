@@ -280,6 +280,24 @@ def decode_step(params, cfg, tokens, positions, caches, *,
     return logits, new_caches
 
 
+def build_positions(cfg, positions):
+    """Canonical serving positions for this architecture.
+
+    positions: (B, S) int32 absolute positions (-1 = padding / inactive).
+    Returns the array ``apply_model``/``decode_step`` expect: (B, S) for
+    scalar-RoPE archs, (B, S, 3) with the scalar broadcast across the
+    (temporal, height, width) planes for M-RoPE (the text-only degenerate
+    case). The ONE place serving builds positions — prefill, decode, and
+    the scheduler all call it, instead of re-branching on
+    ``cfg.mrope_sections`` per step (the old ``launch/serve.py`` bug
+    surface)."""
+    positions = jnp.asarray(positions, jnp.int32)
+    if cfg.mrope_sections is not None:
+        return jnp.broadcast_to(positions[..., None],
+                                positions.shape + (3,))
+    return positions
+
+
 # ------------------------------------------------------------ accounting --
 @functools.lru_cache(maxsize=64)
 def _param_tree_shapes(cfg):

@@ -406,6 +406,66 @@ def make_serve_bundle(cfg: ModelConfig, shape: ShapeConfig, mesh, *,
     )
 
 
+def make_paged_serve_bundle(cfg: ModelConfig, shape: ShapeConfig, mesh, *,
+                            multi_pod: bool, arch: str = "",
+                            long_context: bool = False,
+                            page_size: int = 64,
+                            sample: str = "greedy",
+                            temperature: float = 1.0,
+                            name: str = "") -> StepBundle:
+    """The scheduler's decode step at production scale: one new token per
+    sequence slot against the PAGED cache (shared page pools + block
+    tables, DESIGN.md §Serving), with sampling folded into the jitted step
+    — this is what the serve shapes lower now that ``launch/serve.py``
+    drives ``repro.serving.scheduler``. Inactive slots ride along with
+    position -1 (writes dropped); the contiguous variant survives as
+    ``make_serve_bundle`` (REPRO_SERVE_ENGINE=contiguous)."""
+    from repro.serving import paging
+    from repro.serving.scheduler import per_slot_keys, sample_tokens
+    batch_axes = _batch_axes(multi_pod)
+    batch_axis = batch_axes if len(batch_axes) > 1 else batch_axes[0]
+    rules = SH.activation_rules(mesh, cfg, batch_axes=batch_axes)
+    param_shapes, p_shard = _serve_param_shardings(cfg, mesh, multi_pod,
+                                                   arch or cfg.name)
+    b = shape.global_batch
+    pages_per_seq = paging.pages_needed(shape.seq_len, page_size)
+    num_pages = b * pages_per_seq       # full-reservation admission policy
+    window = cfg.long_context_window if long_context else None
+    cache_shapes = jax.eval_shape(
+        lambda: paging.init_paged_cache(cfg, b, num_pages, page_size,
+                                        pages_per_seq))
+    c_shard = SH.cache_shardings(cache_shapes, mesh, cfg,
+                                 batch_axis=batch_axis)
+    tok_spec = _sds((b,), jnp.int32)
+    pos_spec = _sds((b,), jnp.int32)
+    act_spec = _sds((b,), jnp.bool_)
+    key_spec = _sds((2,), jnp.uint32)
+    vec_shard = _batch_shardings(tok_spec, mesh, batch_axis)
+    key_shard = NamedSharding(mesh, PartitionSpec())
+
+    def paged_serve_step(params, cache, tokens, pos, active, key):
+        with P.logical_sharding(mesh, rules):
+            positions = registry.build_positions(
+                cfg, jnp.where(active, pos, -1)[:, None])
+            logits, new_cache = registry.decode_step(
+                params, cfg, tokens[:, None], positions, cache,
+                window_override=window)
+            nxt = sample_tokens(logits[:, -1, :], per_slot_keys(key, b),
+                                sample, temperature)
+            return jnp.where(active, nxt, 0), new_cache
+
+    return StepBundle(
+        name=name or f"{cfg.name}:{shape.name}:serve-paged",
+        fn=paged_serve_step,
+        in_shardings=(p_shard, c_shard, vec_shard, vec_shard, vec_shard,
+                      key_shard),
+        abstract_inputs=(param_shapes, cache_shapes, tok_spec, pos_spec,
+                         act_spec, key_spec),
+        mesh=mesh,
+        donate_argnums=(1,),
+    )
+
+
 # ------------------------------------------------------------- dispatch --
 def supports(arch: str, cfg: ModelConfig, shape: ShapeConfig) -> bool:
     """long_500k is skipped only where DESIGN.md records the skip."""
@@ -436,6 +496,15 @@ def make_bundle(arch: str, shape_name: str, mesh, *, multi_pod: bool,
     if shape.kind == "prefill":
         return make_prefill_bundle(cfg, shape, mesh, multi_pod=multi_pod,
                                    arch=arch, name=name)
+    # serve shapes lower the scheduler's paged decode step by default
+    # (whisper stays contiguous: encoder-decoder caches are not paged);
+    # REPRO_SERVE_ENGINE=contiguous restores the old lockstep step.
+    import os
+    engine = os.environ.get("REPRO_SERVE_ENGINE", "paged")
+    if engine == "paged" and not cfg.is_encoder_decoder:
+        return make_paged_serve_bundle(
+            cfg, shape, mesh, multi_pod=multi_pod, arch=arch,
+            long_context=(shape.name == "long_500k"), name=name)
     return make_serve_bundle(cfg, shape, mesh, multi_pod=multi_pod,
                              arch=arch,
                              long_context=(shape.name == "long_500k"),

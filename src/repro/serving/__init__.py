@@ -1,0 +1,13 @@
+"""Serving subsystem: paged KV-cache + async continuous-batching scheduler.
+
+``paging``    — fixed-size page pool, per-sequence block tables, the host
+                allocator (alloc/free/defrag) and the device-side cache
+                builders/updaters over the registry cache pytrees.
+``scheduler`` — async request queue with continuous batching: admit on free
+                pages, chunked prefill, mid-flight eviction + page
+                recycling, deterministic replay, in-jit sampling.
+
+See DESIGN.md §Serving for the page/block-table layout and the admission
+policy; ``kernels/paged_attention.py`` for the Pallas decode kernel.
+"""
+from repro.serving import paging, scheduler  # noqa: F401

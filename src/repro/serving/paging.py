@@ -1,0 +1,298 @@
+"""Paged KV-cache over the registry cache pytrees.
+
+The physical layout lives in ``models/layers.py`` (``init_paged_kv_cache``:
+a shared (num_pages, page_size, KV, hd) pool + per-sequence block tables;
+the attention path writes/gathers through the table). This module owns
+everything around it:
+
+* ``PagePool`` — the host-side allocator. Lowest-id-first allocation and
+  FIFO-deterministic free bookkeeping, so a replayed run makes identical
+  placement decisions; ``defrag()`` compacts live pages to the low indices
+  and returns the remap the device applies with :func:`apply_page_remap`.
+* ``init_paged_cache`` — a paged decode cache with the exact pytree
+  structure of ``registry.init_cache`` (stacked-unit axes and all), so the
+  model stack scans it unchanged. Attention-family blocks get page pools;
+  recurrent blocks (Mamba2 state + conv tail, xLSTM cells) page trivially
+  as ONE block per sequence — their state is fixed-size, so it stays
+  slot-indexed ``(max_seqs, ...)`` and admission just zeroes the slot.
+* device-side updaters (``admit_slot`` / ``release_slot`` /
+  ``apply_page_remap``) — jitted whole-tree transforms driven by the
+  scheduler between model steps. ``kv_pos`` of a page is invalidated on
+  every (re)allocation AND on free, so a recycled page can never leak a
+  previous sequence's entries into the attention mask.
+
+Encoder-decoder (cross-attention) caches are not paged — whisper-small
+serves through the contiguous path (DESIGN.md §Serving).
+"""
+from __future__ import annotations
+
+import functools
+import heapq
+from typing import Dict, List, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import blocks, layers, registry
+
+_POOL_LEAVES = ("k_pages", "v_pages", "kv_pos")
+_ATTN_KINDS = ("attn", "swa", "moe", "shared_attn")
+
+
+def pages_needed(total_len: int, page_size: int) -> int:
+    return -(-int(total_len) // int(page_size))
+
+
+# ------------------------------------------------------------- allocator --
+class PageAllocError(RuntimeError):
+    """Raised when an allocation exceeds the free-page budget."""
+
+
+class PagePool:
+    """Host-side page allocator with deterministic placement.
+
+    Free pages live in a min-heap: every allocation takes the lowest ids
+    available, so two runs over the same request stream produce identical
+    block tables (the replayability contract the scheduler tests pin).
+    """
+
+    def __init__(self, num_pages: int):
+        self.num_pages = int(num_pages)
+        self._free: List[int] = list(range(self.num_pages))
+        heapq.heapify(self._free)
+        self._allocated: set = set()
+
+    @property
+    def free_count(self) -> int:
+        return len(self._free)
+
+    @property
+    def in_use(self) -> int:
+        return len(self._allocated)
+
+    def can_alloc(self, n: int) -> bool:
+        return len(self._free) >= n
+
+    def alloc(self, n: int) -> List[int]:
+        if n > len(self._free):
+            raise PageAllocError(
+                f"requested {n} pages, {len(self._free)} free")
+        ids = [heapq.heappop(self._free) for _ in range(n)]
+        self._allocated.update(ids)
+        return ids
+
+    def free(self, ids: Sequence[int]) -> None:
+        for i in ids:
+            if i not in self._allocated:
+                raise PageAllocError(f"double free of page {i}")
+            self._allocated.discard(i)
+            heapq.heappush(self._free, int(i))
+
+    def defrag(self) -> np.ndarray:
+        """Compact live pages to the lowest physical ids.
+
+        Returns ``old_to_new`` (num_pages,) int32 — a permutation mapping
+        every physical page id to its post-compaction id (live pages keep
+        their relative order; free pages fill the tail). The caller must
+        apply it to the device cache (:func:`apply_page_remap`) and to any
+        host-side page lists it holds. The pool's own free list is rebuilt
+        to the tail ids."""
+        live = sorted(self._allocated)
+        old_to_new = np.full((self.num_pages,), -1, np.int32)
+        for new, old in enumerate(live):
+            old_to_new[old] = new
+        nxt = len(live)
+        for old in range(self.num_pages):
+            if old_to_new[old] < 0:
+                old_to_new[old] = nxt
+                nxt += 1
+        self._allocated = set(range(len(live)))
+        self._free = list(range(len(live), self.num_pages))
+        heapq.heapify(self._free)
+        return old_to_new
+
+
+# ------------------------------------------------------- cache structure --
+def make_paged_block_cache(kind: str, cfg, max_seqs: int, num_pages: int,
+                           page_size: int, pages_per_seq: int,
+                           dtype=jnp.bfloat16):
+    """Paged decode-time state for one block. Attention-family blocks get
+    the shared page pool (the SWA window is enforced by the attention mask,
+    not the pool — pages hold the full context); recurrent blocks keep
+    their slot-indexed fixed-size state (one trivial "page" per sequence)."""
+    if kind in _ATTN_KINDS:
+        return layers.init_paged_kv_cache(
+            max_seqs, num_pages, page_size, pages_per_seq,
+            cfg.num_kv_heads, cfg.resolved_head_dim, dtype)
+    if kind == "xattn":
+        raise NotImplementedError(
+            "encoder-decoder caches are not paged; serve whisper-small "
+            "through the contiguous path (DESIGN.md §Serving)")
+    return blocks.make_cache(kind, cfg, max_seqs, page_size, None, dtype)
+
+
+def init_paged_cache(cfg, max_seqs: int, num_pages: int, page_size: int,
+                     pages_per_seq: int, dtype=jnp.bfloat16) -> Dict:
+    """Paged analog of ``registry.init_cache``: same pytree structure
+    (stacked units / rem), so ``registry.decode_step`` runs on it
+    unchanged. Every attention layer shares the one logical block table
+    (stacked along the unit axis with the rest of the cache — a few KB of
+    int32 duplication that keeps the scan machinery untouched)."""
+    if cfg.is_encoder_decoder:
+        raise NotImplementedError(
+            "encoder-decoder caches are not paged (DESIGN.md §Serving)")
+    unit, n_full, rem = registry.segments(cfg)
+    caches: Dict = {"units": {}, "rem": {}}
+    for i, kind in enumerate(unit):
+        if n_full == 0:
+            break
+        one = make_paged_block_cache(kind, cfg, max_seqs, num_pages,
+                                     page_size, pages_per_seq, dtype)
+        caches["units"][f"p{i}"] = jax.tree_util.tree_map(
+            lambda x: jnp.broadcast_to(x[None], (n_full,) + x.shape), one)
+    for i, kind in enumerate(rem):
+        caches["rem"][f"p{i}"] = make_paged_block_cache(
+            kind, cfg, max_seqs, num_pages, page_size, pages_per_seq, dtype)
+    return caches
+
+
+# -------------------------------------------------------- leaf taxonomy --
+def _leaf_info(path):
+    """(name, stacked) for one cache leaf — stacked leaves carry the
+    leading scanned-unit axis (same convention as
+    ``launch/sharding.cache_leaf_spec``)."""
+    s = jax.tree_util.keystr(path)
+    name = s.rsplit("'", 3)[-2] if "'" in s else s
+    return name, "'units'" in s
+
+
+def _map_cache(cache, pool_fn, table_fn, seq_fn):
+    """tree_map with the serving taxonomy: page-pool leaves, block tables,
+    per-sequence (recurrent) leaves. Each fn gets (leaf, stacked)."""
+    def leaf(path, x):
+        name, stacked = _leaf_info(path)
+        if name in _POOL_LEAVES:
+            return pool_fn(x, stacked, name)
+        if name == "block_tables":
+            return table_fn(x, stacked)
+        return seq_fn(x, stacked)
+    return jax.tree_util.tree_map_with_path(leaf, cache)
+
+
+# ------------------------------------------------------ device updaters --
+def _invalidate_kv_pos(x, stacked, name, row):
+    """Mark every page in ``row`` as unwritten (kv_pos = -1); -1 entries
+    in the row map to the out-of-bounds page and are dropped. Shared by
+    admission and release — the ONE place the invalidation rule lives."""
+    if name != "kv_pos":
+        return x
+    num_pages = x.shape[1] if stacked else x.shape[0]
+    pages = jnp.where(row >= 0, row, num_pages)            # OOB -> dropped
+    if stacked:
+        return x.at[:, pages].set(-1, mode="drop")
+    return x.at[pages].set(-1, mode="drop")
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def admit_slot(cache, slot, row):
+    """Bind sequence slot ``slot`` to the physical pages in ``row``
+    ((pages_per_seq,) int32, -1 = unmapped tail): writes the block-table
+    row, invalidates kv_pos on every newly bound page (stale entries from
+    a previous owner must never be attendable), and zeroes the slot's
+    recurrent state."""
+    def table(x, stacked):
+        if stacked:
+            return x.at[:, slot].set(row)
+        return x.at[slot].set(row)
+
+    def seq(x, stacked):
+        if stacked:
+            return x.at[:, slot].set(jnp.zeros(x.shape[2:], x.dtype))
+        return x.at[slot].set(jnp.zeros(x.shape[1:], x.dtype))
+
+    return _map_cache(
+        cache, lambda x, stacked, name: _invalidate_kv_pos(x, stacked,
+                                                           name, row),
+        table, seq)
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def release_slot(cache, slot, row):
+    """Unbind slot ``slot``: clear its block-table row and invalidate the
+    released pages' kv_pos so the recycled pages are inert until the next
+    ``admit_slot`` rebinds them."""
+    def table(x, stacked):
+        empty = jnp.full(row.shape, -1, jnp.int32)
+        if stacked:
+            return x.at[:, slot].set(empty)
+        return x.at[slot].set(empty)
+
+    return _map_cache(
+        cache, lambda x, stacked, name: _invalidate_kv_pos(x, stacked,
+                                                           name, row),
+        table, lambda x, stacked: x)
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def apply_page_remap(cache, old_to_new, new_to_old):
+    """Apply a ``PagePool.defrag()`` permutation on device: permute the
+    pools so page ``o`` moves to ``old_to_new[o]``, and rewrite every
+    mapped block-table entry. Content-preserving by construction — decode
+    after a defrag is bit-identical to decode without one (pinned by the
+    scheduler tests)."""
+    def pool(x, stacked, name):
+        axis = 1 if stacked else 0
+        return jnp.take(x, new_to_old, axis=axis)
+
+    def table(x, stacked):
+        return jnp.where(x >= 0, jnp.take(old_to_new,
+                                          jnp.clip(x, 0, None)), -1)
+
+    return _map_cache(cache, pool, table, lambda x, stacked: x)
+
+
+def slice_slot(cache, slot):
+    """View the paged cache as a batch-1 cache for sequence ``slot``: the
+    shared page pools pass through whole (chunked prefill writes land in
+    them through the slot's block-table row), while per-sequence leaves
+    (recurrent state, block tables) are sliced to that slot. Lets the
+    scheduler prefill one sequence with (1, chunk)-shaped jit steps
+    regardless of ``max_seqs``."""
+    def seq_slice(x, stacked):
+        axis = 1 if stacked else 0
+        return jax.lax.dynamic_slice_in_dim(x, slot, 1, axis=axis)
+
+    return _map_cache(cache, lambda x, stacked, name: x,
+                      seq_slice, seq_slice)
+
+
+def merge_slot(cache, updated_slice, slot):
+    """Inverse of :func:`slice_slot` after a model step: pool leaves take
+    the updated values (they were written globally through the block
+    table); per-sequence leaves scatter the batch-1 slice back."""
+    def leaf(path, old, new):
+        name, stacked = _leaf_info(path)
+        if name in _POOL_LEAVES:
+            return new
+        axis = 1 if stacked else 0
+        return jax.lax.dynamic_update_slice_in_dim(old, new, slot, axis=axis)
+    return jax.tree_util.tree_map_with_path(leaf, cache, updated_slice)
+
+
+def build_block_table_row(pages: Sequence[int], pages_per_seq: int
+                          ) -> np.ndarray:
+    row = np.full((pages_per_seq,), -1, np.int32)
+    row[: len(pages)] = np.asarray(pages, np.int32)
+    return row
+
+
+# ------------------------------------------------------------- metrics --
+def cache_page_bytes(cache) -> int:
+    """Bytes held by the page pools (the quantity paging exists to bound)."""
+    total = 0
+    for path, leaf in jax.tree_util.tree_leaves_with_path(cache):
+        name, _ = _leaf_info(path)
+        if name in ("k_pages", "v_pages"):
+            total += leaf.size * leaf.dtype.itemsize
+    return total

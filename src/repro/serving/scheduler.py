@@ -1,0 +1,359 @@
+"""Async request scheduler with continuous batching over the paged cache.
+
+The serving loop this replaces (``launch/serve.py --engine lockstep``)
+admits a fixed batch, prefills it in lockstep, and cannot admit the next
+request until EVERY sequence in the batch has finished — a single long
+generation holds the whole batch hostage. The scheduler instead treats the
+decode step as a slot machine: ``max_seqs`` sequence slots share one page
+pool, finished sequences are evicted mid-flight and their pages recycled,
+and new requests are admitted the moment the pool can hold them.
+
+Scheduling policy (all ties broken deterministically, so a replayed run is
+bit-identical — pinned by ``tests/test_serving.py``):
+
+* **Admission** — strict FIFO over arrival order, head-of-line blocking:
+  the oldest waiting request is admitted iff a sequence slot is free AND
+  the pool can reserve its FULL worst-case footprint
+  (ceil((prompt + max_new_tokens) / page_size) pages). Full reservation
+  means an admitted request can always run to completion — no deadlock,
+  no preemption machinery. Slots and pages are allocated lowest-id-first.
+* **Chunked prefill** — an admitted prompt is written in exact
+  ``prefill_chunk``-token chunks (batch-1 steps against the shared pools
+  via ``paging.slice_slot``); the remainder — always at least the last
+  prompt token — rides the shared decode steps as teacher-forced tokens.
+  Chunks are never padded, so recurrent state (Mamba2/xLSTM) sees only
+  real tokens and the paged path stays bit-comparable to the contiguous
+  one.
+* **Decode** — ONE jitted step for all slots per scheduler tick: inactive
+  slots carry position -1 (their pool writes are dropped, their recurrent
+  state is re-zeroed at the next admission). Sampling (greedy or
+  temperature) happens INSIDE the jitted step — no per-token host
+  ``argmax`` round-trip — with a per-(request, position) PRNG key, so a
+  sequence's samples do not depend on which other requests share the
+  batch.
+* **Eviction** — a sequence finishing its ``max_new_tokens`` releases its
+  slot and pages in the same tick; ``defrag_every`` optionally compacts
+  live pages (content-preserving: decode after a defrag is bit-identical).
+
+``AsyncServer`` wraps the synchronous core for asyncio callers: awaiting
+``generate()`` yields to a pump task that advances ``step()`` until the
+request completes.
+"""
+from __future__ import annotations
+
+import asyncio
+import dataclasses
+from collections import deque
+from typing import Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import registry
+from repro.serving import paging
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    """Scheduler + paged-cache geometry (DESIGN.md §Serving)."""
+    max_seqs: int = 4                 # decode batch width (fixed jit shape)
+    page_size: int = 16               # tokens per page
+    num_pages: int = 128              # shared pool size
+    pages_per_seq: int = 16           # block-table width (context cap)
+    prefill_chunk: int = 16           # bulk-prefill chunk length
+    sample: str = "greedy"            # "greedy" | "temp"
+    temperature: float = 1.0
+    seed: int = 0
+    defrag_every: int = 0             # 0 = never
+    cache_dtype: str = "bfloat16"
+
+    @property
+    def max_context(self) -> int:
+        return self.page_size * self.pages_per_seq
+
+    def __post_init__(self):
+        if self.sample not in ("greedy", "temp"):
+            raise ValueError(f"unknown sample mode {self.sample!r}")
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray                # (plen,) int32
+    max_new_tokens: int
+
+
+@dataclasses.dataclass
+class _Slot:
+    req: Request
+    pages: List[int]
+    fed: int = 0                      # tokens already written to the cache
+    generated: Optional[List[int]] = None
+
+    def __post_init__(self):
+        self.generated = [] if self.generated is None else self.generated
+
+
+def sample_tokens(logits, keys, mode: str, temperature: float):
+    """(B, V) logits -> (B,) int32 sampled tokens, inside jit. Greedy is
+    argmax; "temp" draws categorically with a per-slot key."""
+    if mode == "greedy":
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    scaled = logits.astype(jnp.float32) / float(temperature)
+    return jax.vmap(jax.random.categorical)(keys, scaled).astype(jnp.int32)
+
+
+def per_slot_keys(key, n: int):
+    """(2,) key -> (n, 2) per-slot keys, inside jit. The one key-derivation
+    convention every sampling call site uses — the caller must make ``key``
+    unique per step (and per wave / request where slots are reused), or
+    same-slot draws repeat."""
+    return jax.vmap(jax.random.fold_in)(jnp.tile(key[None], (n, 1)),
+                                        jnp.arange(n))
+
+
+class Scheduler:
+    """Synchronous continuous-batching core (asyncio wrapper below).
+
+    Drive with ``submit()`` + ``step()`` (or ``run()`` to drain). Results
+    land in ``finished[rid]`` as (max_new_tokens,) int32 arrays.
+    """
+
+    def __init__(self, model_cfg, params, cfg: ServeConfig):
+        self.model_cfg = model_cfg
+        self.cfg = cfg
+        self.params = params
+        dtype = jnp.bfloat16 if cfg.cache_dtype == "bfloat16" else jnp.float32
+        self.cache = paging.init_paged_cache(
+            model_cfg, cfg.max_seqs, cfg.num_pages, cfg.page_size,
+            cfg.pages_per_seq, dtype)
+        self.pool = paging.PagePool(cfg.num_pages)
+        self.slots: List[Optional[_Slot]] = [None] * cfg.max_seqs
+        self.waiting: deque = deque()
+        self.finished: Dict[int, np.ndarray] = {}
+        self._next_rid = 0
+        self.steps = 0
+        self.decode_steps = 0
+        self.prefill_chunks = 0
+        self.peak_pages_in_use = 0
+        self._base_key = jax.random.PRNGKey(cfg.seed)
+        self._last_sampled = np.zeros((cfg.max_seqs,), np.int32)
+        self._build_steps()
+
+    # ------------------------------------------------------- jitted steps --
+    def _build_steps(self):
+        mcfg, cfg = self.model_cfg, self.cfg
+
+        def prefill_chunk(params, cache, tokens, positions, slot):
+            sliced = paging.slice_slot(cache, slot)
+            _, _, new_sliced = registry.apply_model(
+                params, mcfg,
+                {"tokens": tokens,
+                 "positions": registry.build_positions(mcfg, positions)},
+                caches=sliced)
+            return paging.merge_slot(cache, new_sliced, slot)
+
+        def decode(params, cache, tokens, pos, active, rids, counts):
+            positions = registry.build_positions(
+                mcfg, jnp.where(active, pos, -1)[:, None])
+            logits, new_cache = registry.decode_step(
+                params, mcfg, tokens[:, None], positions, cache)
+            keys = jax.vmap(
+                lambda r, c: jax.random.fold_in(
+                    jax.random.fold_in(self._base_key, r), c)
+            )(rids, counts)
+            nxt = sample_tokens(logits[:, -1, :], keys, cfg.sample,
+                                cfg.temperature)
+            return jnp.where(active, nxt, 0), new_cache
+
+        self._prefill_chunk = jax.jit(prefill_chunk, donate_argnums=(1,))
+        self._decode = jax.jit(decode, donate_argnums=(1,))
+
+    # ------------------------------------------------------------- intake --
+    def submit(self, prompt: Sequence[int], max_new_tokens: int) -> int:
+        prompt = np.asarray(prompt, np.int32)
+        total = len(prompt) + max_new_tokens
+        need = paging.pages_needed(total, self.cfg.page_size)
+        if len(prompt) < 1 or max_new_tokens < 1:
+            raise ValueError("need a non-empty prompt and max_new_tokens>=1")
+        if total > self.cfg.max_context or need > self.cfg.num_pages:
+            raise ValueError(
+                f"request of {total} tokens exceeds the serve capacity "
+                f"(max_context={self.cfg.max_context}, "
+                f"num_pages={self.cfg.num_pages})")
+        rid = self._next_rid
+        self._next_rid += 1
+        self.waiting.append(Request(rid, prompt, int(max_new_tokens)))
+        return rid
+
+    @property
+    def busy(self) -> bool:
+        return bool(self.waiting) or any(s is not None for s in self.slots)
+
+    # -------------------------------------------------------------- steps --
+    def _admit(self):
+        while self.waiting:
+            req = self.waiting[0]
+            free_slots = [i for i, s in enumerate(self.slots) if s is None]
+            need = paging.pages_needed(len(req.prompt) + req.max_new_tokens,
+                                       self.cfg.page_size)
+            if not free_slots or not self.pool.can_alloc(need):
+                return                       # FIFO head-of-line blocking
+            self.waiting.popleft()
+            slot = free_slots[0]
+            pages = self.pool.alloc(need)
+            row = paging.build_block_table_row(pages, self.cfg.pages_per_seq)
+            self.cache = paging.admit_slot(self.cache, jnp.int32(slot),
+                                           jnp.asarray(row))
+            self.slots[slot] = _Slot(req, pages)
+
+    def _bulk_prefill(self):
+        chunk = self.cfg.prefill_chunk
+        for slot, st in enumerate(self.slots):
+            if st is None or st.fed > 0:
+                continue
+            # exact chunks over the first plen-1 tokens; the rest (at least
+            # the last prompt token) rides the shared decode steps
+            n_bulk = (len(st.req.prompt) - 1) // chunk
+            for c in range(n_bulk):
+                toks = st.req.prompt[c * chunk:(c + 1) * chunk][None, :]
+                pos = np.arange(c * chunk, (c + 1) * chunk,
+                                dtype=np.int32)[None, :]
+                self.cache = self._prefill_chunk(
+                    self.params, self.cache, jnp.asarray(toks),
+                    jnp.asarray(pos), jnp.int32(slot))
+                self.prefill_chunks += 1
+            st.fed = n_bulk * chunk
+
+    def _decode_tick(self):
+        B = self.cfg.max_seqs
+        tokens = np.zeros((B,), np.int32)
+        pos = np.zeros((B,), np.int32)
+        active = np.zeros((B,), bool)
+        rids = np.zeros((B,), np.int32)
+        counts = np.zeros((B,), np.int32)
+        for slot, st in enumerate(self.slots):
+            if st is None:
+                continue
+            plen = len(st.req.prompt)
+            tokens[slot] = (st.req.prompt[st.fed] if st.fed < plen
+                            else self._last_sampled[slot])
+            pos[slot] = st.fed
+            active[slot] = True
+            rids[slot] = st.req.rid
+            counts[slot] = st.fed
+        if not active.any():
+            return
+        nxt, self.cache = self._decode(
+            self.params, self.cache, jnp.asarray(tokens), jnp.asarray(pos),
+            jnp.asarray(active), jnp.asarray(rids), jnp.asarray(counts))
+        nxt = np.asarray(nxt)
+        self.decode_steps += 1
+        for slot, st in enumerate(self.slots):
+            if st is None:
+                continue
+            st.fed += 1
+            if st.fed >= len(st.req.prompt):     # this step sampled a token
+                st.generated.append(int(nxt[slot]))
+                self._last_sampled[slot] = nxt[slot]
+            if len(st.generated) >= st.req.max_new_tokens:
+                self._evict(slot)
+
+    def _evict(self, slot: int):
+        st = self.slots[slot]
+        self.finished[st.req.rid] = np.asarray(st.generated, np.int32)
+        row = paging.build_block_table_row(st.pages, self.cfg.pages_per_seq)
+        self.cache = paging.release_slot(self.cache, jnp.int32(slot),
+                                         jnp.asarray(row))
+        self.pool.free(st.pages)
+        self.slots[slot] = None
+
+    def defrag(self):
+        """Compact live pages to the low pool indices (host allocator +
+        device pools + block tables + per-slot page lists, atomically)."""
+        old_to_new = self.pool.defrag()
+        new_to_old = np.argsort(old_to_new).astype(np.int32)
+        self.cache = paging.apply_page_remap(
+            self.cache, jnp.asarray(old_to_new), jnp.asarray(new_to_old))
+        for st in self.slots:
+            if st is not None:
+                st.pages = [int(old_to_new[p]) for p in st.pages]
+
+    def step(self) -> List[int]:
+        """One scheduler tick: admit -> bulk prefill -> one decode step
+        (+ optional defrag). Returns the rids finished in this tick."""
+        before = set(self.finished)
+        self._admit()
+        # sample the high-water mark before this tick's evictions can
+        # release pages (an admit+finish within one tick must still count)
+        self.peak_pages_in_use = max(self.peak_pages_in_use,
+                                     self.pool.in_use)
+        self._bulk_prefill()
+        self._decode_tick()
+        self.steps += 1
+        if self.cfg.defrag_every and self.steps % self.cfg.defrag_every == 0:
+            self.defrag()
+        return sorted(set(self.finished) - before)
+
+    def run(self, max_steps: int = 100_000) -> Dict[int, np.ndarray]:
+        """Drain the queue. Raises if the stream does not finish within
+        ``max_steps`` ticks (a liveness bug, not a workload property:
+        admission reserves full footprints, so progress is guaranteed)."""
+        for _ in range(max_steps):
+            if not self.busy:
+                return self.finished
+            self.step()
+        raise RuntimeError(f"stream not drained after {max_steps} steps")
+
+
+class AsyncServer:
+    """asyncio facade: ``await generate(prompt, max_new)`` returns the
+    generated tokens; a single pump task advances the scheduler while any
+    request is pending, yielding between ticks."""
+
+    def __init__(self, scheduler: Scheduler):
+        self.scheduler = scheduler
+        self._events: Dict[int, asyncio.Event] = {}
+        self._abandoned: set = set()
+        self._pump_task: Optional[asyncio.Task] = None
+
+    async def generate(self, prompt: Sequence[int],
+                       max_new_tokens: int) -> np.ndarray:
+        rid = self.scheduler.submit(prompt, max_new_tokens)
+        ev = asyncio.Event()
+        self._events[rid] = ev
+        if self._pump_task is None or self._pump_task.done():
+            self._pump_task = asyncio.ensure_future(self._pump())
+        delivered = False
+        try:
+            await ev.wait()
+            # pop the result: a long-running server must not retain every
+            # completed request's tokens forever
+            result = self.scheduler.finished.pop(rid)
+            delivered = True
+            return result
+        finally:
+            # on cancellation (client disconnect): the stale event must
+            # not keep the pump alive, and the request's eventual output
+            # must still be reaped (the pump drops abandoned results)
+            self._events.pop(rid, None)
+            if not delivered:
+                self._abandoned.add(rid)
+
+    async def _pump(self):
+        # _abandoned alone (scheduler idle) still needs one reap pass: the
+        # orphaned result is already in finished when the waiter cancelled
+        while self._events or self._abandoned:
+            if self.scheduler.busy:
+                done = self.scheduler.step()
+            else:           # only cancelled/stale waiters can remain
+                done = list(self.scheduler.finished)
+            for rid in done:
+                ev = self._events.get(rid)
+                if ev is not None:
+                    ev.set()
+            for rid in list(self._abandoned):
+                if self.scheduler.finished.pop(rid, None) is not None:
+                    self._abandoned.discard(rid)
+            await asyncio.sleep(0)

@@ -229,6 +229,138 @@ def test_fused_range_matches_two_pass_path(kind):
             np.testing.assert_array_equal(np.asarray(fa), np.asarray(fb))
 
 
+@pytest.mark.parametrize("kind", ["model", "leaf", "ragged"])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_fused_tiled_bit_parity_with_single_slab(kind, dtype):
+    """The D-tiled two-phase grid variant (bounded VMEM for LM-scale
+    widths) equals the single-slab fused kernel bit-for-bit on all four
+    outputs — the max reduction is order-insensitive, the schedule runs on
+    an equal panel, and the quantize chain applies identical scalars."""
+    from repro.kernels.stoch_quant import (
+        stoch_quantize_grouped_fused, stoch_quantize_grouped_fused_tiled)
+    tree, gids = _fused_tree_case(kind)
+    pk, theta, qprev, unif, bprev, rprev, init = _fused_inputs(tree, gids,
+                                                              dtype)
+    sched = dict(omega=0.97, b0=3, b_max=16)
+    gid_cols = jnp.asarray(pk.col_group_ids)
+    slab = stoch_quantize_grouped_fused(
+        theta, qprev, unif, bprev, rprev, init, gid_cols,
+        group_runs=pk.group_runs, interpret=True, **sched)
+    for block_d in (128, 256):
+        tiled = stoch_quantize_grouped_fused_tiled(
+            theta, qprev, unif, bprev, rprev, init, gid_cols,
+            block_d=block_d, interpret=True, **sched)
+        for g, w, name in zip(tiled, slab, ("out", "range", "bits",
+                                            "delta")):
+            np.testing.assert_array_equal(np.asarray(g), np.asarray(w),
+                                          err_msg=f"{name}@{block_d}")
+
+
+def test_fused_tiled_env_dispatch(monkeypatch):
+    """REPRO_QUANT_TILE_D routes the ops-layer fused entry point through
+    the tiled kernel without changing a bit."""
+    from repro.kernels import ops
+    tree, gids = _fused_tree_case("ragged")
+    pk, theta, qprev, unif, bprev, rprev, init = _fused_inputs(
+        tree, gids, jnp.float32)
+    args = (theta, qprev, unif, bprev, rprev, init,
+            jnp.asarray(pk.col_group_ids))
+    kw = dict(group_runs=pk.group_runs, omega=0.97, b0=3, b_max=16)
+    monkeypatch.delenv("REPRO_QUANT_TILE_D", raising=False)
+    slab = ops.stoch_quantize_grouped_fused(*args, **kw)
+    monkeypatch.setenv("REPRO_QUANT_TILE_D", "256")
+    tiled = ops.stoch_quantize_grouped_fused(*args, **kw)
+    for g, w in zip(tiled, slab):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(w))
+
+
+# ------------------------------------------------------ paged attention --
+def _paged_attn_inputs(bsz, h, kv, hd, ps, pps, num_pages, seed=3,
+                       kv_dtype=jnp.bfloat16):
+    key = jax.random.PRNGKey(seed)
+    q = jax.random.normal(key, (bsz, h, hd), jnp.float32)
+    k = jax.random.normal(jax.random.fold_in(key, 1),
+                          (num_pages, ps, kv, hd)).astype(kv_dtype)
+    v = jax.random.normal(jax.random.fold_in(key, 2),
+                          (num_pages, ps, kv, hd)).astype(kv_dtype)
+    # scattered, non-contiguous page placement + an unmapped tail
+    perm = np.random.RandomState(seed).permutation(num_pages)
+    bt = jnp.asarray(perm[:bsz * pps].reshape(bsz, pps), jnp.int32)
+    bt = bt.at[0, pps - 1:].set(-1)
+    ctx = jnp.asarray(
+        np.random.RandomState(seed + 1).randint(1, (pps - 1) * ps,
+                                                (bsz,)), jnp.int32)
+    return q, k, v, bt, ctx
+
+
+@pytest.mark.parametrize("shape", [(2, 4, 4, 16, 4, 3, 16),   # MHA
+                                   (3, 8, 2, 16, 8, 4, 32),   # GQA
+                                   (1, 4, 1, 32, 4, 5, 8)])   # MQA
+@pytest.mark.parametrize("kv_dtype", [jnp.float32, jnp.bfloat16])
+def test_paged_attention_kernel_bit_exact_vs_ref(shape, kv_dtype):
+    """Block-table gather kernel vs jnp oracle: identical inputs produce
+    bit-identical outputs (same per-page dots, one-shot softmax, page-order
+    accumulation) across MHA/GQA/MQA and pool dtypes."""
+    from repro.kernels.paged_attention import paged_attention_decode
+    bsz, h, kv, hd, ps, pps, num_pages = shape
+    q, k, v, bt, ctx = _paged_attn_inputs(bsz, h, kv, hd, ps, pps,
+                                          num_pages, kv_dtype=kv_dtype)
+    got = paged_attention_decode(q, k, v, bt, ctx, interpret=True)
+    # jit the oracle so XLA applies the same FMA contractions to both
+    # programs (the fused-range test's convention)
+    want = jax.jit(ref.paged_attention_ref)(q, k, v, bt, ctx)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_paged_attention_matches_dense_gather():
+    """The kernel agrees with gather-then-dense mha to float tolerance
+    (different contraction order over the kv axis, same math)."""
+    from repro.kernels.paged_attention import paged_attention_decode
+    from repro.models import layers
+    bsz, h, kv, hd, ps, pps, num_pages = 3, 8, 2, 16, 4, 5, 32
+    q, k, v, bt, ctx = _paged_attn_inputs(bsz, h, kv, hd, ps, pps,
+                                          num_pages)
+    got = paged_attention_decode(q, k, v, bt, ctx, interpret=True)
+    safe = jnp.maximum(bt, 0)
+    kg = jnp.take(k, safe, axis=0).reshape(bsz, pps * ps, kv, hd)
+    vg = jnp.take(v, safe, axis=0).reshape(bsz, pps * ps, kv, hd)
+    idx = jnp.arange(pps * ps)[None]
+    kv_pos = jnp.where((idx < ctx[:, None])
+                       & jnp.repeat(bt >= 0, ps, axis=1), idx, -1)
+    mask = layers._attn_mask((ctx - 1)[:, None], kv_pos, True, None)
+    want = layers.mha(q[:, None].astype(jnp.float32),
+                      kg.astype(jnp.float32), vg.astype(jnp.float32),
+                      mask)[:, 0]
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_paged_attention_ignores_unmapped_and_stale_pages():
+    """Entries beyond ctx_len — stale tokens in a recycled page, unmapped
+    block-table slots — contribute exactly nothing: poisoning them with
+    huge values does not change the output."""
+    from repro.kernels.paged_attention import paged_attention_decode
+    bsz, h, kv, hd, ps, pps, num_pages = 2, 4, 4, 16, 4, 3, 16
+    q, k, v, bt, ctx = _paged_attn_inputs(bsz, h, kv, hd, ps, pps,
+                                          num_pages)
+    clean = paged_attention_decode(q, k, v, bt, ctx, interpret=True)
+    # poison every slot at-or-beyond each sequence's context length
+    k2, v2 = np.asarray(k, np.float32), np.asarray(v, np.float32)
+    bt_np, ctx_np = np.asarray(bt), np.asarray(ctx)
+    for b in range(bsz):
+        for p in range(pps):
+            if bt_np[b, p] < 0:
+                continue
+            for s in range(ps):
+                if p * ps + s >= ctx_np[b]:
+                    k2[bt_np[b, p], s] = 1e4
+                    v2[bt_np[b, p], s] = -1e4
+    poisoned = paged_attention_decode(
+        q, jnp.asarray(k2).astype(k.dtype), jnp.asarray(v2).astype(v.dtype),
+        bt, ctx, interpret=True)
+    np.testing.assert_array_equal(np.asarray(clean), np.asarray(poisoned))
+
+
 def _outer_primitives(jaxpr, out):
     """Primitive names of a jaxpr, descending into nested jaxprs (pjit,
     scan, ...) but NOT into a pallas_call's kernel body — what remains is

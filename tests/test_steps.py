@@ -52,6 +52,16 @@ SCRIPT = textwrap.dedent("""
                         long_context=(sname == "long"))
                 compiled = b.lower().compile()
                 results[tag] = compiled.cost_analysis() is not None
+        # the scheduler's paged decode step (serve shapes lower this now);
+        # the multi-pod variant lowers the temperature-sampling path
+        for mesh, mp in ((mesh_single, False), (mesh_multi, True)):
+            b = steps.make_paged_serve_bundle(
+                cfg, shapes["decode"], mesh, multi_pod=mp, arch=arch,
+                page_size=16, sample=("temp" if mp else "greedy"),
+                temperature=0.8)
+            compiled = b.lower().compile()
+            results[f"{arch}:paged:{'m' if mp else 's'}"] = \\
+                compiled.cost_analysis() is not None
     print("RESULTS=" + json.dumps(results))
 """)
 
@@ -67,7 +77,7 @@ def test_bundles_lower_and_compile():
     line = [ln for ln in proc.stdout.splitlines()
             if ln.startswith("RESULTS=")][-1]
     results = json.loads(line[len("RESULTS="):])
-    assert len(results) == 3 * 4 * 2
+    assert len(results) == 3 * 5 * 2
     assert all(results.values())
 
 
