@@ -80,10 +80,51 @@ def edge_gather_mix(values: jax.Array, nbr_table: jax.Array,
                                  interpret=_interpret())
 
 
-def paged_attention_decode(q, k_pages, v_pages, block_tables, ctx_lens):
+# One-shot softmax keeps a (H, pages_per_seq*page_size) f32 logits slab
+# resident in VMEM; past this footprint the online-softmax variant (one
+# (H, ps) page slab + fixed carries) takes over. 512 KB leaves the
+# short-context default comfortably inside VMEM next to the K/V page
+# blocks while switching long before the ~16 MB/core ceiling.
+ONESHOT_SLAB_BYTES = 512 * 1024
+
+
+def paged_attention_decode(q, k_pages, v_pages, block_tables, ctx_lens, *,
+                           k_scale=None, v_scale=None, kv_bits: int = 32):
+    """Paged-attention decode with kernel selection.
+
+    Public contract (callers pass block tables as-is): unmapped (-1) and
+    out-of-range physical page ids are clamped into the pool HERE — their
+    logits are masked by ``ctx_lens``, so a poisoned table slot is
+    harmless through this entry point (pinned by
+    ``test_ops_paged_attention_clamps_poisoned_tables``).
+
+    Selection: the one-shot kernel (bit-exact vs ``ref.paged_attention_ref``)
+    runs while its (H, P*ps) f32 logits slab fits ``ONESHOT_SLAB_BYTES``;
+    beyond that the online-softmax variant bounds VMEM to one page slab.
+    ``REPRO_PAGED_ATTN_ONLINE=1|0`` forces the choice either way.
+
+    ``kv_bits`` in (8, 4) reads ``ref.kv_page_quantize`` code pools with
+    ``k_scale``/``v_scale`` side info, dequantized inside the kernel.
+    """
+    import os
+
+    import jax.numpy as jnp
+
     from repro.kernels import paged_attention as _paged
-    return _paged.paged_attention_decode(q, k_pages, v_pages, block_tables,
-                                         ctx_lens, interpret=_interpret())
+    num_pages = k_pages.shape[0]
+    page_size = k_pages.shape[1]
+    h = q.shape[1]
+    bt = jnp.clip(block_tables.astype(jnp.int32), 0, num_pages - 1)
+    force = os.environ.get("REPRO_PAGED_ATTN_ONLINE", "")
+    if force in ("0", "1"):
+        online = force == "1"
+    else:
+        slab_bytes = h * block_tables.shape[1] * page_size * 4
+        online = slab_bytes > ONESHOT_SLAB_BYTES
+    fn = (_paged.paged_attention_decode_online if online
+          else _paged.paged_attention_decode)
+    return fn(q, k_pages, v_pages, bt, ctx_lens, k_scale=k_scale,
+              v_scale=v_scale, kv_bits=kv_bits, interpret=_interpret())
 
 
 def slstm_cell(wx, r_w, fbias, c0, n0, m0, h0):

@@ -118,6 +118,127 @@ def stoch_quantize_grouped_fused_ref(
     return out, range_new, bits, delta.astype(jnp.float32)
 
 
+# --------------------------------------------------- KV page quantization --
+def _kv_page_delta(rng: jax.Array, kv_bits: int) -> jax.Array:
+    """Step size Δ = 2R / (2^b - 1) for a fixed-bit page codec, via the
+    SAME ``bit_schedule`` the engine's adaptive rounds use: a cache page is
+    just a group whose bit width never grows (initialized=0 pins b = b0 =
+    ``kv_bits``), so the codec cannot drift from the paper's Eq. (18)/(19)
+    machinery."""
+    zeros = jnp.zeros_like(rng)
+    _, delta, _ = bit_schedule(zeros, rng, zeros, zeros,
+                               0.0, kv_bits, kv_bits)
+    return jnp.maximum(delta, _EPS)
+
+
+def kv_page_quantize(x: jax.Array, *, kv_bits: int):
+    """Encode K/V page entries to ``kv_bits``-bit codes (paper Eqs. 14/15
+    with Q̂_prev = 0 and the deterministic u = 0.5 rounding draw, so a
+    replayed stream re-encodes identically).
+
+    x: (..., KV, hd) -> (codes (..., KV, hd_store) uint8, rng (..., KV)
+    f32).  hd_store = hd for 8-bit; hd // 2 for 4-bit (two codes packed
+    per byte along head_dim — hd must be even).  The per-token per-KV-head
+    range R = max|x| is the side information; Δ is derived from it
+    statically (:func:`_kv_page_delta`), so R is the ONLY float carried
+    per entry."""
+    if kv_bits not in (8, 4):
+        raise ValueError(f"kv_bits must be 8 or 4, got {kv_bits}")
+    x32 = x.astype(jnp.float32)
+    rng = jnp.max(jnp.abs(x32), axis=-1)                      # (..., KV)
+    delta = _kv_page_delta(rng, kv_bits)[..., None]
+    c = (x32 + rng[..., None]) / delta
+    floor_c = jnp.floor(c)
+    q = floor_c + (0.5 < (c - floor_c)).astype(jnp.float32)   # u = 0.5
+    q = jnp.clip(q, 0.0, float(2 ** kv_bits - 1)).astype(jnp.int32)
+    if kv_bits == 4:
+        if x.shape[-1] % 2:
+            raise ValueError("4-bit KV pages need an even head_dim")
+        pair = q.reshape(q.shape[:-1] + (x.shape[-1] // 2, 2))
+        q = pair[..., 0] | (pair[..., 1] << 4)
+    return q.astype(jnp.uint8), rng
+
+
+def kv_page_dequantize(codes: jax.Array, rng: jax.Array, *, kv_bits: int,
+                       head_dim: int) -> jax.Array:
+    """Decode :func:`kv_page_quantize` output back to f32: x̂ = Δ·q - R
+    (Eq. 20 with Q̂_prev = 0). Shared by the jnp gather path AND traced
+    inside both paged-attention kernel bodies (right after each page DMA),
+    so the in-kernel dequant cannot drift from this definition.
+
+    codes: (..., KV, hd_store) uint8; rng: (..., KV) f32 ->
+    (..., KV, head_dim) f32."""
+    q = codes.astype(jnp.int32)
+    if kv_bits == 4:
+        lo, hi = q & 0xF, (q >> 4) & 0xF
+        q = jnp.stack([lo, hi], axis=-1).reshape(
+            q.shape[:-1] + (head_dim,))
+    delta = _kv_page_delta(rng, kv_bits)[..., None]
+    return delta * q.astype(jnp.float32) - rng[..., None]
+
+
+def paged_attention_ref(q: jax.Array, k_pages: jax.Array,
+                        v_pages: jax.Array, block_tables: jax.Array,
+                        ctx_lens: jax.Array, *,
+                        k_scale: jax.Array | None = None,
+                        v_scale: jax.Array | None = None,
+                        kv_bits: int = 32) -> jax.Array:
+    """Single-token decode attention through a paged KV cache — ground
+    truth for the ``paged_attention_decode`` kernel, mirroring its exact
+    evaluation order (per-page QK dots, ONE softmax over the full logits
+    slab, f32 V accumulation in logical page order), so identical inputs
+    produce bit-identical outputs.
+
+    q: (B, H, hd); k_pages/v_pages: (num_pages, page_size, KV, hd_store);
+    block_tables: (B, P) int32 (-1 = unmapped, clamped + masked);
+    ctx_lens: (B,) int32. With ``kv_bits`` in (8, 4) the pools hold
+    :func:`kv_page_quantize` codes and ``k_scale``/``v_scale``
+    ((num_pages, page_size, KV) f32 ranges) carry the side info — each
+    page is dequantized just before its dots, exactly as the kernels do
+    after the page DMA. Returns (B, H, hd) f32."""
+    bsz, h, hd = q.shape
+    num_pages, page_size, num_kv, _ = k_pages.shape
+    groups = h // num_kv
+    pages_per_seq = block_tables.shape[1]
+    scale = 1.0 / float(np.sqrt(np.float32(hd)))
+    bt = jnp.clip(block_tables.astype(jnp.int32), 0, num_pages - 1)
+
+    def page(pool, scales, pid):                           # (ps, KV, hd) f32
+        if kv_bits == 32:
+            return pool[pid].astype(jnp.float32)
+        return kv_page_dequantize(pool[pid], scales[pid], kv_bits=kv_bits,
+                                  head_dim=hd)
+
+    def dots(a, b_mat):                                    # (G,hd)x(ps,hd)
+        return jax.lax.dot_general(a, b_mat, (((1,), (1,)), ((), ())),
+                                   preferred_element_type=jnp.float32)
+
+    outs = []
+    for b in range(bsz):
+        qb = q[b].astype(jnp.float32).reshape(num_kv, groups, hd)
+        slabs = []
+        for p in range(pages_per_seq):
+            k = page(k_pages, k_scale, bt[b, p])           # (ps, KV, hd)
+            rows = [dots(qb[kvh], k[:, kvh]) * scale
+                    for kvh in range(num_kv)]
+            slab = jnp.concatenate(rows, axis=0)           # (H, ps)
+            idx = p * page_size + jnp.arange(page_size)[None, :]
+            slabs.append(jnp.where(idx < ctx_lens[b], slab, -1e30))
+        probs = jax.nn.softmax(jnp.concatenate(slabs, axis=1), axis=-1)
+        acc = jnp.zeros((h, hd), jnp.float32)
+        for p in range(pages_per_seq):
+            v = page(v_pages, v_scale, bt[b, p])           # (ps, KV, hd)
+            pg = probs[:, p * page_size:(p + 1) * page_size]
+            parts = [jax.lax.dot_general(
+                pg[kvh * groups:(kvh + 1) * groups], v[:, kvh],
+                (((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32)
+                for kvh in range(num_kv)]
+            acc = acc + jnp.concatenate(parts, axis=0)
+        outs.append(acc)
+    return jnp.stack(outs, axis=0)
+
+
 def bipartite_mix_ref(adjacency: jax.Array, values: jax.Array) -> jax.Array:
     """Neighbor aggregation sum_{m in N_n} v_m  =  A @ V.
 
@@ -138,56 +259,6 @@ def edge_gather_mix_ref(values: jax.Array, nbr_table: jax.Array,
     rows = values.astype(jnp.float32)[nbr_table]          # (N, S, d)
     return jnp.einsum("nsd,ns->nd", rows,
                       nbr_valid.astype(jnp.float32))
-
-
-def paged_attention_ref(q: jax.Array, k_pages: jax.Array,
-                        v_pages: jax.Array, block_tables: jax.Array,
-                        ctx_lens: jax.Array) -> jax.Array:
-    """Single-token decode attention through a paged KV cache — ground
-    truth for the ``paged_attention_decode`` kernel, mirroring its exact
-    evaluation order (per-page QK dots, ONE softmax over the full logits
-    slab, f32 V accumulation in logical page order), so identical inputs
-    produce bit-identical outputs.
-
-    q: (B, H, hd); k_pages/v_pages: (num_pages, page_size, KV, hd);
-    block_tables: (B, P) int32 (-1 = unmapped, clamped + masked);
-    ctx_lens: (B,) int32. Returns (B, H, hd) f32.
-    """
-    bsz, h, hd = q.shape
-    _, page_size, num_kv, _ = k_pages.shape
-    groups = h // num_kv
-    pages_per_seq = block_tables.shape[1]
-    scale = 1.0 / float(np.sqrt(np.float32(hd)))
-    bt = jnp.maximum(block_tables.astype(jnp.int32), 0)
-
-    def dots(a, b_mat):                                    # (G,hd)x(ps,hd)
-        return jax.lax.dot_general(a, b_mat, (((1,), (1,)), ((), ())),
-                                   preferred_element_type=jnp.float32)
-
-    outs = []
-    for b in range(bsz):
-        qb = q[b].astype(jnp.float32).reshape(num_kv, groups, hd)
-        slabs = []
-        for p in range(pages_per_seq):
-            k = k_pages[bt[b, p]].astype(jnp.float32)      # (ps, KV, hd)
-            rows = [dots(qb[kvh], k[:, kvh]) * scale
-                    for kvh in range(num_kv)]
-            slab = jnp.concatenate(rows, axis=0)           # (H, ps)
-            idx = p * page_size + jnp.arange(page_size)[None, :]
-            slabs.append(jnp.where(idx < ctx_lens[b], slab, -1e30))
-        probs = jax.nn.softmax(jnp.concatenate(slabs, axis=1), axis=-1)
-        acc = jnp.zeros((h, hd), jnp.float32)
-        for p in range(pages_per_seq):
-            v = v_pages[bt[b, p]].astype(jnp.float32)      # (ps, KV, hd)
-            pg = probs[:, p * page_size:(p + 1) * page_size]
-            parts = [jax.lax.dot_general(
-                pg[kvh * groups:(kvh + 1) * groups], v[:, kvh],
-                (((1,), (0,)), ((), ())),
-                preferred_element_type=jnp.float32)
-                for kvh in range(num_kv)]
-            acc = acc + jnp.concatenate(parts, axis=0)
-        outs.append(acc)
-    return jnp.stack(outs, axis=0)
 
 
 def slstm_cell_ref(wx: jax.Array, r_w: jax.Array, fbias: jax.Array,

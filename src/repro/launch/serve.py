@@ -177,6 +177,10 @@ def main(argv=None) -> dict:
     ap.add_argument("--temperature", type=float, default=1.0)
     ap.add_argument("--page-size", type=int, default=16)
     ap.add_argument("--prefill-chunk", type=int, default=16)
+    ap.add_argument("--kv-bits", type=int, choices=(32, 8, 4), default=None,
+                    help="KV-page storage width: 32 = full precision, 8/4 "
+                         "= quantized code pools (default: "
+                         "REPRO_SERVE_KV_BITS or 32)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -210,7 +214,8 @@ def main(argv=None) -> dict:
             num_pages=args.batch * pages_per_seq * 2,
             pages_per_seq=pages_per_seq,
             prefill_chunk=args.prefill_chunk, sample=args.sample,
-            temperature=args.temperature, seed=args.seed)
+            temperature=args.temperature, seed=args.seed,
+            **({} if args.kv_bits is None else {"kv_bits": args.kv_bits}))
         out = run_paged(cfg, params, prompts, args.decode_tokens,
                         serve_cfg=scfg)
     print(f"[serve] {len(prompt_lens)}x{args.decode_tokens} tokens in "

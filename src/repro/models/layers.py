@@ -220,7 +220,7 @@ def _cache_write(cache, k, v, q_positions):
 # ------------------------------------------------------- paged KV cache --
 def init_paged_kv_cache(batch: int, num_pages: int, page_size: int,
                         pages_per_seq: int, num_kv: int, head_dim: int,
-                        dtype=jnp.bfloat16):
+                        dtype=jnp.bfloat16, kv_bits: int = 32):
     """Paged KV cache: a shared page pool plus per-sequence block tables.
 
     ``k_pages``/``v_pages`` are the physical pool — ``num_pages`` pages of
@@ -234,17 +234,54 @@ def init_paged_kv_cache(batch: int, num_pages: int, page_size: int,
     a sequence's pages in logical order reproduces the linear cache layout
     exactly — which is what makes paged decode bit-identical to a
     contiguous cache of length pages_per_seq * page_size (DESIGN.md
-    §Serving)."""
-    return {
-        "k_pages": jnp.zeros((num_pages, page_size, num_kv, head_dim), dtype),
-        "v_pages": jnp.zeros((num_pages, page_size, num_kv, head_dim), dtype),
+    §Serving).
+
+    ``kv_bits`` in (8, 4) switches the pools to low-bit storage: uint8
+    ``ref.kv_page_quantize`` codes (4-bit packs two codes per byte along
+    head_dim) plus per-(page, slot, KV-head) f32 ranges in
+    ``k_scale``/``v_scale`` — entries are quantized at write time and
+    dequantized at gather/kernel time (DESIGN.md §Serving, "KV page
+    quantization"). ``dtype`` then only shapes the kv_bits=32 pools."""
+    common = {
         "kv_pos": jnp.full((num_pages, page_size), -1, jnp.int32),
         "block_tables": jnp.full((batch, pages_per_seq), -1, jnp.int32),
+    }
+    if kv_bits == 32:
+        return {
+            "k_pages": jnp.zeros((num_pages, page_size, num_kv, head_dim),
+                                 dtype),
+            "v_pages": jnp.zeros((num_pages, page_size, num_kv, head_dim),
+                                 dtype),
+            **common,
+        }
+    if kv_bits not in (8, 4):
+        raise ValueError(f"kv_bits must be 32, 8 or 4, got {kv_bits}")
+    if kv_bits == 4 and head_dim % 2:
+        raise ValueError("4-bit KV pages need an even head_dim")
+    hd_store = head_dim if kv_bits == 8 else head_dim // 2
+    return {
+        "k_pages": jnp.zeros((num_pages, page_size, num_kv, hd_store),
+                             jnp.uint8),
+        "v_pages": jnp.zeros((num_pages, page_size, num_kv, hd_store),
+                             jnp.uint8),
+        "k_scale": jnp.zeros((num_pages, page_size, num_kv), jnp.float32),
+        "v_scale": jnp.zeros((num_pages, page_size, num_kv), jnp.float32),
+        **common,
     }
 
 
 def is_paged_cache(cache) -> bool:
     return isinstance(cache, dict) and "k_pages" in cache
+
+
+def paged_kv_bits(cache, head_dim: int) -> int:
+    """Storage bits of a paged cache's pools, recovered from structure:
+    full-precision caches carry no scale leaves; quantized pools are uint8
+    codes whose last axis is head_dim (8-bit) or head_dim // 2 (4-bit
+    packed)."""
+    if "k_scale" not in cache:
+        return 32
+    return 8 if cache["k_pages"].shape[-1] == head_dim else 4
 
 
 def _paged_slots(cache, q_positions):
@@ -263,25 +300,48 @@ def _paged_slots(cache, q_positions):
 
 
 def _paged_cache_write(cache, k, v, q_positions):
-    """Scatter S new (k, v) entries through the block table into the pool."""
+    """Scatter S new (k, v) entries through the block table into the pool.
+    Quantized pools encode each entry at write time (per-token ranges land
+    in the scale leaves alongside the codes), so prefill chunks and decode
+    steps fill pages in their storage format — nothing re-encodes later."""
     phys, slots = _paged_slots(cache, q_positions)            # (B, S)
     pf, sf = phys.reshape(-1), slots.reshape(-1)
-    kf = k.reshape((-1,) + k.shape[2:]).astype(cache["k_pages"].dtype)
-    vf = v.reshape((-1,) + v.shape[2:]).astype(cache["v_pages"].dtype)
+
+    def flat(a):
+        return a.reshape((-1,) + a.shape[2:])
+
     new = dict(cache)
-    new["k_pages"] = cache["k_pages"].at[pf, sf].set(kf, mode="drop")
-    new["v_pages"] = cache["v_pages"].at[pf, sf].set(vf, mode="drop")
+    if "k_scale" in cache:
+        from repro.kernels import ref as kernel_ref
+        bits = paged_kv_bits(cache, k.shape[-1])
+        kq, kr = kernel_ref.kv_page_quantize(k, kv_bits=bits)
+        vq, vr = kernel_ref.kv_page_quantize(v, kv_bits=bits)
+        new["k_pages"] = cache["k_pages"].at[pf, sf].set(flat(kq),
+                                                        mode="drop")
+        new["v_pages"] = cache["v_pages"].at[pf, sf].set(flat(vq),
+                                                        mode="drop")
+        new["k_scale"] = cache["k_scale"].at[pf, sf].set(flat(kr),
+                                                        mode="drop")
+        new["v_scale"] = cache["v_scale"].at[pf, sf].set(flat(vr),
+                                                        mode="drop")
+    else:
+        kf = flat(k).astype(cache["k_pages"].dtype)
+        vf = flat(v).astype(cache["v_pages"].dtype)
+        new["k_pages"] = cache["k_pages"].at[pf, sf].set(kf, mode="drop")
+        new["v_pages"] = cache["v_pages"].at[pf, sf].set(vf, mode="drop")
     new["kv_pos"] = cache["kv_pos"].at[pf, sf].set(
         q_positions.reshape(-1), mode="drop")
     return new
 
 
-def paged_gather(cache):
+def paged_gather(cache, head_dim: Optional[int] = None):
     """Gather each sequence's pages in logical order into a contiguous view.
 
     Returns (k, v, kv_pos) shaped (B, pages_per_seq * page_size, ...) —
     elementwise equal to a linear cache of that length (unmapped pages
-    surface kv_pos = -1, so the mask removes them)."""
+    surface kv_pos = -1, so the mask removes them). Quantized pools are
+    dequantized to f32 after the gather; ``head_dim`` is required then (the
+    packed 4-bit layout is not recoverable from pool shapes alone)."""
     bt = cache["block_tables"]                                # (B, P)
     b, p = bt.shape
     ps = cache["kv_pos"].shape[1]
@@ -292,9 +352,19 @@ def paged_gather(cache):
         g = jnp.take(pool, safe, axis=0)                      # (B, P, ps, ...)
         return g.reshape((b, p * ps) + g.shape[3:])
 
+    k, v = take(cache["k_pages"]), take(cache["v_pages"])
+    if "k_scale" in cache:
+        if head_dim is None:
+            raise ValueError("quantized paged cache: paged_gather needs "
+                             "head_dim to undo the code packing")
+        from repro.kernels import ref as kernel_ref
+        bits = paged_kv_bits(cache, head_dim)
+        k = kernel_ref.kv_page_dequantize(k, take(cache["k_scale"]),
+                                          kv_bits=bits, head_dim=head_dim)
+        v = kernel_ref.kv_page_dequantize(v, take(cache["v_scale"]),
+                                          kv_bits=bits, head_dim=head_dim)
     kv_pos = jnp.where(mapped, jnp.take(cache["kv_pos"], safe, axis=0), -1)
-    return take(cache["k_pages"]), take(cache["v_pages"]), \
-        kv_pos.reshape(b, p * ps)
+    return k, v, kv_pos.reshape(b, p * ps)
 
 
 def _use_paged_kernel(s: int, window) -> bool:
@@ -311,12 +381,18 @@ def _use_paged_kernel(s: int, window) -> bool:
 def _paged_attn_kernel_out(cache, q, q_positions):
     """(B, 1, H, hd) attention output via the paged-attention decode
     kernel: K/V pages are gathered through the block table inside the
-    ``pallas_call`` (scalar prefetch), never materialized contiguously."""
+    ``pallas_call`` (scalar prefetch), never materialized contiguously.
+    Quantized pools ship their codes + scale side info into the kernel,
+    which dequantizes each page right after its DMA."""
     from repro.kernels import ops as kernel_ops
     ctx_lens = jnp.maximum(q_positions[:, 0] + 1, 0)          # (B,)
+    kw = {}
+    if "k_scale" in cache:
+        kw = dict(k_scale=cache["k_scale"], v_scale=cache["v_scale"],
+                  kv_bits=paged_kv_bits(cache, q.shape[-1]))
     out = kernel_ops.paged_attention_decode(
         q[:, 0], cache["k_pages"], cache["v_pages"],
-        cache["block_tables"], ctx_lens)
+        cache["block_tables"], ctx_lens, **kw)
     return out[:, None].astype(q.dtype)
 
 
@@ -359,7 +435,7 @@ def attention_apply(params, dims: AttnDims, x, positions, *,
                     out = dense(params["o"], out.reshape(b, s, h * hd))
                     return P.constrain(out, ("batch", "res_seq", "embed")), \
                         new_cache
-                k, v, kv_positions = paged_gather(new_cache)
+                k, v, kv_positions = paged_gather(new_cache, head_dim=hd)
             else:
                 new_cache = _cache_write(cache, k, v, q_positions)
                 k, v = new_cache["k"], new_cache["v"]

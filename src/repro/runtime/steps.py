@@ -412,6 +412,7 @@ def make_paged_serve_bundle(cfg: ModelConfig, shape: ShapeConfig, mesh, *,
                             page_size: int = 64,
                             sample: str = "greedy",
                             temperature: float = 1.0,
+                            kv_bits: Optional[int] = None,
                             name: str = "") -> StepBundle:
     """The scheduler's decode step at production scale: one new token per
     sequence slot against the PAGED cache (shared page pools + block
@@ -431,9 +432,15 @@ def make_paged_serve_bundle(cfg: ModelConfig, shape: ShapeConfig, mesh, *,
     pages_per_seq = paging.pages_needed(shape.seq_len, page_size)
     num_pages = b * pages_per_seq       # full-reservation admission policy
     window = cfg.long_context_window if long_context else None
+    # KV-page storage width: explicit arg > REPRO_SERVE_KV_BITS env > f32
+    # pages (long-context shapes are exactly where the 4-8x cache-byte cut
+    # pays; DESIGN.md §Serving, "KV page quantization")
+    if kv_bits is None:
+        import os
+        kv_bits = int(os.environ.get("REPRO_SERVE_KV_BITS", "32"))
     cache_shapes = jax.eval_shape(
         lambda: paging.init_paged_cache(cfg, b, num_pages, page_size,
-                                        pages_per_seq))
+                                        pages_per_seq, kv_bits=kv_bits))
     c_shard = SH.cache_shardings(cache_shapes, mesh, cfg,
                                  batch_axis=batch_axis)
     tok_spec = _sds((b,), jnp.int32)

@@ -36,7 +36,7 @@ import numpy as np
 
 from repro.models import blocks, layers, registry
 
-_POOL_LEAVES = ("k_pages", "v_pages", "kv_pos")
+_POOL_LEAVES = ("k_pages", "v_pages", "k_scale", "v_scale", "kv_pos")
 _ATTN_KINDS = ("attn", "swa", "moe", "shared_attn")
 
 
@@ -116,15 +116,19 @@ class PagePool:
 # ------------------------------------------------------- cache structure --
 def make_paged_block_cache(kind: str, cfg, max_seqs: int, num_pages: int,
                            page_size: int, pages_per_seq: int,
-                           dtype=jnp.bfloat16):
+                           dtype=jnp.bfloat16, kv_bits: int = 32):
     """Paged decode-time state for one block. Attention-family blocks get
     the shared page pool (the SWA window is enforced by the attention mask,
     not the pool — pages hold the full context); recurrent blocks keep
-    their slot-indexed fixed-size state (one trivial "page" per sequence)."""
+    their slot-indexed fixed-size state (one trivial "page" per sequence).
+    ``kv_bits`` in (8, 4) stores attention pools as low-bit codes + scale
+    side info (recurrent state is never quantized — it is O(1) per
+    sequence, not the HBM-bound payload)."""
     if kind in _ATTN_KINDS:
         return layers.init_paged_kv_cache(
             max_seqs, num_pages, page_size, pages_per_seq,
-            cfg.num_kv_heads, cfg.resolved_head_dim, dtype)
+            cfg.num_kv_heads, cfg.resolved_head_dim, dtype,
+            kv_bits=kv_bits)
     if kind == "xattn":
         raise NotImplementedError(
             "encoder-decoder caches are not paged; serve whisper-small "
@@ -133,7 +137,8 @@ def make_paged_block_cache(kind: str, cfg, max_seqs: int, num_pages: int,
 
 
 def init_paged_cache(cfg, max_seqs: int, num_pages: int, page_size: int,
-                     pages_per_seq: int, dtype=jnp.bfloat16) -> Dict:
+                     pages_per_seq: int, dtype=jnp.bfloat16,
+                     kv_bits: int = 32) -> Dict:
     """Paged analog of ``registry.init_cache``: same pytree structure
     (stacked units / rem), so ``registry.decode_step`` runs on it
     unchanged. Every attention layer shares the one logical block table
@@ -148,12 +153,14 @@ def init_paged_cache(cfg, max_seqs: int, num_pages: int, page_size: int,
         if n_full == 0:
             break
         one = make_paged_block_cache(kind, cfg, max_seqs, num_pages,
-                                     page_size, pages_per_seq, dtype)
+                                     page_size, pages_per_seq, dtype,
+                                     kv_bits=kv_bits)
         caches["units"][f"p{i}"] = jax.tree_util.tree_map(
             lambda x: jnp.broadcast_to(x[None], (n_full,) + x.shape), one)
     for i, kind in enumerate(rem):
         caches["rem"][f"p{i}"] = make_paged_block_cache(
-            kind, cfg, max_seqs, num_pages, page_size, pages_per_seq, dtype)
+            kind, cfg, max_seqs, num_pages, page_size, pages_per_seq, dtype,
+            kv_bits=kv_bits)
     return caches
 
 
@@ -289,10 +296,30 @@ def build_block_table_row(pages: Sequence[int], pages_per_seq: int
 
 # ------------------------------------------------------------- metrics --
 def cache_page_bytes(cache) -> int:
-    """Bytes held by the page pools (the quantity paging exists to bound)."""
+    """Bytes held by the page pools (the quantity paging exists to bound):
+    K/V payload plus, for quantized pools, the scale side info — everything
+    a decode step's attention must read per cached token. ``kv_pos`` and
+    block tables are bookkeeping, identical across storage modes, and not
+    counted."""
     total = 0
     for path, leaf in jax.tree_util.tree_leaves_with_path(cache):
         name, _ = _leaf_info(path)
-        if name in ("k_pages", "v_pages"):
+        if name in ("k_pages", "v_pages", "k_scale", "v_scale"):
             total += leaf.size * leaf.dtype.itemsize
     return total
+
+
+def cache_bytes_per_token(cache) -> float:
+    """Pool bytes per cached-token slot, summed over every layer (K + V +
+    side info). This is the modeled HBM-read cost of attending one cached
+    token in one decode step — at context C a step reads ~C times this per
+    sequence — the quantity the ``long_context`` bench section gates."""
+    slots = None
+    for path, leaf in jax.tree_util.tree_leaves_with_path(cache):
+        name, _ = _leaf_info(path)
+        if name == "kv_pos" and leaf.ndim >= 2:
+            slots = leaf.shape[-2] * leaf.shape[-1]     # num_pages * ps
+            break
+    if not slots:
+        raise ValueError("not a paged cache (no pool-shaped kv_pos leaf)")
+    return cache_page_bytes(cache) / slots

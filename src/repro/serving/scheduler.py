@@ -43,6 +43,8 @@ from __future__ import annotations
 
 import asyncio
 import dataclasses
+import os
+import time
 from collections import deque
 from typing import Dict, List, Optional, Sequence
 
@@ -52,6 +54,12 @@ import numpy as np
 
 from repro.models import registry
 from repro.serving import paging
+
+
+def _env_kv_bits() -> int:
+    """Default KV-page storage width; REPRO_SERVE_KV_BITS overrides (the
+    CI kernel-matrix knob)."""
+    return int(os.environ.get("REPRO_SERVE_KV_BITS", "32"))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -67,6 +75,9 @@ class ServeConfig:
     seed: int = 0
     defrag_every: int = 0             # 0 = never
     cache_dtype: str = "bfloat16"
+    # 32 = full-precision pages; 8/4 = quantized code pools + scale side
+    # info (DESIGN.md §Serving, "KV page quantization")
+    kv_bits: int = dataclasses.field(default_factory=_env_kv_bits)
 
     @property
     def max_context(self) -> int:
@@ -75,6 +86,9 @@ class ServeConfig:
     def __post_init__(self):
         if self.sample not in ("greedy", "temp"):
             raise ValueError(f"unknown sample mode {self.sample!r}")
+        if self.kv_bits not in (32, 8, 4):
+            raise ValueError(f"kv_bits must be 32, 8 or 4, "
+                             f"got {self.kv_bits}")
 
 
 @dataclasses.dataclass
@@ -127,7 +141,7 @@ class Scheduler:
         dtype = jnp.bfloat16 if cfg.cache_dtype == "bfloat16" else jnp.float32
         self.cache = paging.init_paged_cache(
             model_cfg, cfg.max_seqs, cfg.num_pages, cfg.page_size,
-            cfg.pages_per_seq, dtype)
+            cfg.pages_per_seq, dtype, kv_bits=cfg.kv_bits)
         self.pool = paging.PagePool(cfg.num_pages)
         self.slots: List[Optional[_Slot]] = [None] * cfg.max_seqs
         self.waiting: deque = deque()
@@ -139,6 +153,13 @@ class Scheduler:
         self.peak_pages_in_use = 0
         self._base_key = jax.random.PRNGKey(cfg.seed)
         self._last_sampled = np.zeros((cfg.max_seqs,), np.int32)
+        # tail-latency bookkeeping (bench_serving reports p50/p99 + TTFT):
+        # per-decode-step device walls (bounded window — a long-running
+        # server must not grow without limit) and time-to-first-token per
+        # finished-or-flying request, measured from submit()
+        self.decode_step_s: deque = deque(maxlen=4096)
+        self.ttft_s: Dict[int, float] = {}
+        self._submit_t: Dict[int, float] = {}
         self._build_steps()
 
     # ------------------------------------------------------- jitted steps --
@@ -184,6 +205,7 @@ class Scheduler:
                 f"num_pages={self.cfg.num_pages})")
         rid = self._next_rid
         self._next_rid += 1
+        self._submit_t[rid] = time.perf_counter()
         self.waiting.append(Request(rid, prompt, int(max_new_tokens)))
         return rid
 
@@ -245,10 +267,12 @@ class Scheduler:
             counts[slot] = st.fed
         if not active.any():
             return
+        t0 = time.perf_counter()
         nxt, self.cache = self._decode(
             self.params, self.cache, jnp.asarray(tokens), jnp.asarray(pos),
             jnp.asarray(active), jnp.asarray(rids), jnp.asarray(counts))
-        nxt = np.asarray(nxt)
+        nxt = np.asarray(nxt)                    # blocks until device-done
+        self.decode_step_s.append(time.perf_counter() - t0)
         self.decode_steps += 1
         for slot, st in enumerate(self.slots):
             if st is None:
@@ -257,6 +281,12 @@ class Scheduler:
             if st.fed >= len(st.req.prompt):     # this step sampled a token
                 st.generated.append(int(nxt[slot]))
                 self._last_sampled[slot] = nxt[slot]
+                if len(st.generated) == 1:       # first token: record TTFT
+                    t_sub = self._submit_t.pop(st.req.rid, None)
+                    if t_sub is not None:
+                        self.ttft_s[st.req.rid] = time.perf_counter() - t_sub
+                        while len(self.ttft_s) > 4096:   # bounded window
+                            self.ttft_s.pop(next(iter(self.ttft_s)))
             if len(st.generated) >= st.req.max_new_tokens:
                 self._evict(slot)
 

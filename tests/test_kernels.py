@@ -361,6 +361,283 @@ def test_paged_attention_ignores_unmapped_and_stale_pages():
     np.testing.assert_array_equal(np.asarray(clean), np.asarray(poisoned))
 
 
+_PAGED_LAYOUTS = [(2, 4, 4, 16, 4, 3, 16),   # MHA
+                  (3, 8, 2, 16, 8, 4, 32),   # GQA
+                  (1, 4, 1, 32, 4, 5, 8)]    # MQA
+
+
+@pytest.mark.parametrize("shape", _PAGED_LAYOUTS)
+@pytest.mark.parametrize("kv_dtype", [jnp.float32, jnp.bfloat16])
+def test_paged_attention_online_matches_oneshot_ctx_matrix(shape, kv_dtype):
+    """The flash-style online-softmax variant equals the one-shot kernel to
+    float tolerance at every context-length edge: 1 token, one-under/exact/
+    one-over a page boundary, and the full multi-page extent."""
+    from repro.kernels.paged_attention import (paged_attention_decode,
+                                               paged_attention_decode_online)
+    bsz, h, kv, hd, ps, pps, num_pages = shape
+    q, k, v, bt, _ = _paged_attn_inputs(bsz, h, kv, hd, ps, pps, num_pages,
+                                        kv_dtype=kv_dtype)
+    bt = jnp.asarray(np.random.RandomState(0).permutation(num_pages)
+                     [:bsz * pps].reshape(bsz, pps), jnp.int32)  # all mapped
+    for c in (1, ps - 1, ps, ps + 1, pps * ps):
+        ctx = jnp.full((bsz,), c, jnp.int32)
+        one = paged_attention_decode(q, k, v, bt, ctx, interpret=True)
+        onl = paged_attention_decode_online(q, k, v, bt, ctx,
+                                            interpret=True)
+        np.testing.assert_allclose(np.asarray(onl), np.asarray(one),
+                                   rtol=1e-5, atol=1e-5,
+                                   err_msg=f"ctx={c}")
+
+
+def test_paged_attention_online_matches_ref_to_1e5():
+    """Direct pin against the jnp oracle (not just the one-shot kernel):
+    running-max rescaling reorders the float ops, so parity is 1e-5, and
+    ctx == 0 rows come back as exact zeros (l == 0 guard)."""
+    from repro.kernels.paged_attention import paged_attention_decode_online
+    bsz, h, kv, hd, ps, pps, num_pages = 3, 8, 2, 16, 8, 4, 32
+    q, k, v, bt, ctx = _paged_attn_inputs(bsz, h, kv, hd, ps, pps, num_pages)
+    got = paged_attention_decode_online(q, k, v, bt, ctx, interpret=True)
+    want = jax.jit(ref.paged_attention_ref)(q, k, v, bt, ctx)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+    zero = paged_attention_decode_online(q, k, v, bt,
+                                         jnp.zeros((bsz,), jnp.int32),
+                                         interpret=True)
+    np.testing.assert_array_equal(np.asarray(zero),
+                                  np.zeros((bsz, h, hd), np.float32))
+
+
+def test_paged_attention_online_adversarial_max_shift():
+    """Per-page K magnitudes growing 4x page over page force the running
+    max to move at EVERY page (worst case for the rescale chain); the
+    accumulator still lands within 1e-5 of the one-shot softmax."""
+    from repro.kernels.paged_attention import (paged_attention_decode,
+                                               paged_attention_decode_online)
+    bsz, h, kv, hd, ps, pps, num_pages = 2, 4, 2, 16, 4, 5, 16
+    q, k, v, bt, _ = _paged_attn_inputs(bsz, h, kv, hd, ps, pps, num_pages,
+                                        kv_dtype=jnp.float32)
+    bt = jnp.asarray(np.arange(bsz * pps).reshape(bsz, pps), jnp.int32)
+    scale = jnp.asarray(4.0) ** jnp.arange(num_pages, dtype=jnp.float32)
+    k = k * scale[:, None, None, None] * 0.25
+    ctx = jnp.full((bsz,), pps * ps, jnp.int32)
+    one = paged_attention_decode(q, k, v, bt, ctx, interpret=True)
+    onl = paged_attention_decode_online(q, k, v, bt, ctx, interpret=True)
+    np.testing.assert_allclose(np.asarray(onl), np.asarray(one),
+                               rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=15, deadline=None)
+@given(ctx0=st.integers(1, 20), ctx1=st.integers(1, 20),
+       kv=st.sampled_from([1, 2, 4]), seed=st.integers(0, 99))
+def test_paged_attention_online_oneshot_parity_property(ctx0, ctx1, kv,
+                                                        seed):
+    """Property sweep: arbitrary per-sequence context lengths (including
+    page-boundary stragglers) keep the two kernels within 1e-5."""
+    from repro.kernels.paged_attention import (paged_attention_decode,
+                                               paged_attention_decode_online)
+    bsz, h, hd, ps, pps, num_pages = 2, 4, 16, 4, 5, 16
+    q, k, v, bt, _ = _paged_attn_inputs(bsz, h, kv, hd, ps, pps, num_pages,
+                                        seed=seed)
+    bt = jnp.asarray(np.random.RandomState(seed).permutation(num_pages)
+                     [:bsz * pps].reshape(bsz, pps), jnp.int32)
+    ctx = jnp.asarray([ctx0, ctx1], jnp.int32)
+    one = paged_attention_decode(q, k, v, bt, ctx, interpret=True)
+    onl = paged_attention_decode_online(q, k, v, bt, ctx, interpret=True)
+    np.testing.assert_allclose(np.asarray(onl), np.asarray(one),
+                               rtol=1e-5, atol=1e-5)
+
+
+def _kernel_invar_shapes(fn, *args):
+    """Shapes of the pallas_call kernel-body invars inside fn's jaxpr."""
+    jx = jax.make_jaxpr(fn)(*args)
+    found = []
+
+    def walk(jaxpr):
+        for eqn in jaxpr.eqns:
+            if eqn.primitive.name == "pallas_call":
+                found.append(eqn)
+                continue
+            for v in eqn.params.values():
+                for j in jax.tree_util.tree_leaves(
+                        v, is_leaf=lambda x: hasattr(x, "eqns")
+                        or hasattr(x, "jaxpr")):
+                    inner = getattr(j, "jaxpr", j)
+                    if hasattr(inner, "eqns"):
+                        walk(inner)
+
+    walk(jx.jaxpr)
+    assert found, "no pallas_call traced"
+    kj = found[0].params["jaxpr"]
+    return [tuple(var.aval.shape) for var in kj.invars]
+
+
+def test_paged_attention_online_vmem_independent_of_context():
+    """The acceptance pin for 'one page slab in VMEM': the online kernel's
+    in-VMEM block + scratch shapes are IDENTICAL for pages_per_seq 2 and 8
+    (only the grid grows), while the one-shot kernel's logits scratch
+    visibly scales with pages_per_seq."""
+    from repro.kernels.paged_attention import (paged_attention_decode,
+                                               paged_attention_decode_online)
+
+    def shapes(entry, pps):
+        bsz, h, kv, hd, ps = 2, 4, 2, 16, 4
+        q, k, v, bt, ctx = _paged_attn_inputs(bsz, h, kv, hd, ps, pps,
+                                              4 * pps)
+        # drop the two scalar-prefetch operands (block table, ctx_lens):
+        # those live in SMEM and legitimately scale with pages_per_seq
+        return _kernel_invar_shapes(
+            lambda *a: entry(*a, interpret=True), q, k, v,
+            jnp.maximum(bt, 0), ctx)[2:]
+
+    assert (shapes(paged_attention_decode_online, 2)
+            == shapes(paged_attention_decode_online, 8))
+    one2 = shapes(paged_attention_decode, 2)
+    one8 = shapes(paged_attention_decode, 8)
+    assert one2 != one8
+    assert (4, 8 * 4) in one8          # (h, pps*ps) logits slab grows
+    # online scratch: (h, hd) accumulator + (h, 1) running max and sum
+    on = shapes(paged_attention_decode_online, 8)
+    assert (4, 16) in on and on.count((4, 1)) == 2
+
+
+def test_ops_paged_attention_clamps_poisoned_tables(monkeypatch):
+    """Satellite regression: unmapped (negative) and out-of-range slot ids
+    reaching the PUBLIC ops entry are clamped into the pool before the
+    kernel gather — same output as the clean table, no OOB read — under
+    both the one-shot and the online kernel."""
+    from repro.kernels import ops
+    bsz, h, kv, hd, ps, pps, num_pages = 2, 4, 2, 16, 4, 3, 16
+    q, k, v, bt, ctx = _paged_attn_inputs(bsz, h, kv, hd, ps, pps,
+                                          num_pages)
+    poisoned = np.asarray(bt).copy()
+    poisoned[0, -1] = num_pages + 7      # out-of-range high
+    poisoned[1, -1] = -9                  # unmapped / corrupt low
+    for force in ("0", "1"):
+        monkeypatch.setenv("REPRO_PAGED_ATTN_ONLINE", force)
+        clean = ops.paged_attention_decode(q, k, v, bt, ctx)
+        hit = ops.paged_attention_decode(q, k, v, jnp.asarray(poisoned),
+                                         ctx)
+        np.testing.assert_array_equal(np.asarray(clean), np.asarray(hit),
+                                      err_msg=f"online={force}")
+
+
+def test_ops_paged_attention_selects_kernel_by_slab_bytes(monkeypatch):
+    """ops.paged_attention_decode picks one-shot while the full logits slab
+    fits the VMEM budget and switches to online-softmax beyond it;
+    REPRO_PAGED_ATTN_ONLINE forces either way."""
+    from repro.kernels import ops, paged_attention
+    calls = []
+    real_one = paged_attention.paged_attention_decode
+    real_onl = paged_attention.paged_attention_decode_online
+    monkeypatch.setattr(paged_attention, "paged_attention_decode",
+                        lambda *a, **k: calls.append("oneshot")
+                        or real_one(*a, **k))
+    monkeypatch.setattr(paged_attention, "paged_attention_decode_online",
+                        lambda *a, **k: calls.append("online")
+                        or real_onl(*a, **k))
+    monkeypatch.delenv("REPRO_PAGED_ATTN_ONLINE", raising=False)
+    q, k, v, bt, ctx = _paged_attn_inputs(2, 4, 2, 16, 4, 3, 16)
+    ops.paged_attention_decode(q, k, v, bt, ctx)      # tiny slab: one-shot
+    monkeypatch.setattr(ops, "ONESHOT_SLAB_BYTES", 0)
+    ops.paged_attention_decode(q, k, v, bt, ctx)      # over budget: online
+    monkeypatch.setenv("REPRO_PAGED_ATTN_ONLINE", "0")
+    ops.paged_attention_decode(q, k, v, bt, ctx)      # forced one-shot
+    assert calls == ["oneshot", "online", "oneshot"]
+
+
+# ------------------------------------------------- quantized KV pages ----
+@pytest.mark.parametrize("kv_bits", [8, 4])
+def test_kv_page_codec_roundtrip_and_paper_parity(kv_bits):
+    """The page codec IS the paper quantizer (Eqs. 14/15/20) specialized to
+    q_prev = 0 and the deterministic u = 0.5 draw: bit-identical to the
+    stochastic_round + bit_schedule composition, within one float ulp of
+    stoch_quantize_ref (whose clip ceiling 2R/delta is computed in f32
+    rather than as the exact integer 2^b - 1), and reconstruction error is
+    bounded by delta/2 everywhere."""
+    from repro.core import quantization as Q
+    x = jax.random.normal(jax.random.PRNGKey(7), (6, 5, 2, 16), jnp.float32)
+    codes, rng = ref.kv_page_quantize(x, kv_bits=kv_bits)
+    assert codes.dtype == jnp.uint8
+    xhat = np.asarray(ref.kv_page_dequantize(codes, rng, kv_bits=kv_bits,
+                                             head_dim=16))
+    delta = ref._kv_page_delta(rng, kv_bits)
+    err = np.abs(xhat - np.asarray(x))
+    assert (err <= np.asarray(delta)[..., None] / 2 + 1e-6).all()
+    c = (x + rng[..., None]) / delta[..., None]
+    qq = jnp.clip(Q.stochastic_round(c, jnp.full_like(c, 0.5)), 0.0,
+                  float(2 ** kv_bits - 1))
+    np.testing.assert_array_equal(
+        xhat, np.asarray(delta[..., None] * qq - rng[..., None]))
+    flat = x.reshape(-1, 16)
+    sq = ref.stoch_quantize_ref(flat, jnp.zeros_like(flat),
+                                jnp.full_like(flat, 0.5),
+                                delta.reshape(-1), rng.reshape(-1))
+    np.testing.assert_allclose(xhat.reshape(-1, 16), np.asarray(sq),
+                               rtol=0, atol=1e-6)
+
+
+def test_kv_page_codec_int4_packing():
+    """int4 packs two codes per byte along head_dim; unpack restores the
+    exact code sequence (spot-checked against an unpacked int8-style
+    requantize of the same levels)."""
+    x = jax.random.normal(jax.random.PRNGKey(2), (4, 3, 8), jnp.float32)
+    codes, rng = ref.kv_page_quantize(x, kv_bits=4)
+    assert codes.shape == (4, 3, 4)                    # hd/2 bytes
+    lo = np.asarray(codes) & 0xF
+    hi = (np.asarray(codes) >> 4) & 0xF
+    assert lo.max() <= 15 and hi.max() <= 15
+    xhat = ref.kv_page_dequantize(codes, rng, kv_bits=4, head_dim=8)
+    delta = np.asarray(ref._kv_page_delta(rng, 4))[..., None]
+    q = np.stack([lo, hi], axis=-1).reshape(4, 3, 8)
+    np.testing.assert_array_equal(np.asarray(xhat),
+                                  delta * q - np.asarray(rng)[..., None])
+
+
+@pytest.mark.parametrize("kv_bits", [8, 4])
+@pytest.mark.parametrize("shape", _PAGED_LAYOUTS)
+def test_paged_attention_quantized_pages_vs_ref(shape, kv_bits):
+    """Both kernels dequantize int8/int4-packed pages in-kernel after the
+    page DMA: the one-shot kernel stays bit-identical to the (extended) jnp
+    oracle, the online variant stays within 1e-5."""
+    from repro.kernels.paged_attention import (paged_attention_decode,
+                                               paged_attention_decode_online)
+    bsz, h, kv, hd, ps, pps, num_pages = shape
+    q, k, v, bt, ctx = _paged_attn_inputs(bsz, h, kv, hd, ps, pps,
+                                          num_pages, kv_dtype=jnp.float32)
+    kc, kr = ref.kv_page_quantize(k, kv_bits=kv_bits)
+    vc, vr = ref.kv_page_quantize(v, kv_bits=kv_bits)
+    want = jax.jit(lambda *a: ref.paged_attention_ref(
+        *a, k_scale=kr, v_scale=vr, kv_bits=kv_bits))(q, kc, vc, bt, ctx)
+    one = paged_attention_decode(q, kc, vc, bt, ctx, k_scale=kr, v_scale=vr,
+                                 kv_bits=kv_bits, interpret=True)
+    np.testing.assert_array_equal(np.asarray(one), np.asarray(want))
+    onl = paged_attention_decode_online(q, kc, vc, bt, ctx, k_scale=kr,
+                                        v_scale=vr, kv_bits=kv_bits,
+                                        interpret=True)
+    np.testing.assert_allclose(np.asarray(onl), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_paged_attention_quantized_error_tracks_bit_width():
+    """Reconstruction error vs full-precision pages shrinks with more bits
+    and stays small in absolute terms (int8 within ~2e-2 on unit-scale
+    activations), pinning the codec wiring end-to-end."""
+    from repro.kernels.paged_attention import paged_attention_decode
+    q, k, v, bt, ctx = _paged_attn_inputs(2, 4, 2, 16, 4, 3, 16,
+                                          kv_dtype=jnp.float32)
+    full = np.asarray(paged_attention_decode(q, k, v, bt, ctx,
+                                             interpret=True))
+    devs = {}
+    for bits in (8, 4):
+        kc, kr = ref.kv_page_quantize(k, kv_bits=bits)
+        vc, vr = ref.kv_page_quantize(v, kv_bits=bits)
+        out = paged_attention_decode(q, kc, vc, bt, ctx, k_scale=kr,
+                                     v_scale=vr, kv_bits=bits,
+                                     interpret=True)
+        devs[bits] = np.abs(np.asarray(out) - full).max()
+    assert devs[8] < 2e-2 and devs[8] < devs[4] < 1.0
+
+
 def _outer_primitives(jaxpr, out):
     """Primitive names of a jaxpr, descending into nested jaxprs (pjit,
     scan, ...) but NOT into a pallas_call's kernel body — what remains is

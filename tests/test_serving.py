@@ -73,7 +73,10 @@ def _lockstep_reference(cfg, params, prompt, max_new):
 
 # --------------------------------------------- paged == contiguous, bitwise
 @pytest.mark.parametrize("arch", ["tinyllama-1.1b", "zamba2-7b"])
-def test_paged_decode_bit_identical_to_contiguous(smoke, arch):
+def test_paged_decode_bit_identical_to_contiguous(smoke, arch, monkeypatch):
+    # bit-identity is defined on the default path: jnp gather attention over
+    # full-precision pages (CI's kernel/kv-bits matrix must not retarget it)
+    monkeypatch.setenv("REPRO_PAGED_ATTN_KERNEL", "0")
     cfg, params = smoke(arch)
     B, plen, dec = 3, 8, 6
     cache_c = registry.init_cache(cfg, B, CACHE_LEN)
@@ -149,12 +152,15 @@ def test_scheduler_mixed_stream_completes_without_leaks(smoke):
 
 
 @pytest.mark.parametrize("arch", ["tinyllama-1.1b", "zamba2-7b"])
-def test_scheduler_matches_contiguous_reference(smoke, arch):
+def test_scheduler_matches_contiguous_reference(smoke, arch, monkeypatch):
     """Greedy continuous batching must produce token-for-token the output
     of the old per-request contiguous decode — batch composition, chunked
-    prefill, and page placement are not allowed to change results."""
+    prefill, and page placement are not allowed to change results. The
+    contiguous reference is dense/full-precision, so the paged side is
+    pinned to the matching default path regardless of the CI matrix env."""
+    monkeypatch.setenv("REPRO_PAGED_ATTN_KERNEL", "0")
     cfg, params = smoke(arch)
-    sched = Scheduler(cfg, params, _serve_cfg())
+    sched = Scheduler(cfg, params, _serve_cfg(kv_bits=32))
     lens, news = (9, 17, 5, 13), (5, 3, 6, 4)
     prompts = _prompts(cfg, lens)
     rids = [sched.submit(p, m) for p, m in zip(prompts, news)]
@@ -292,6 +298,112 @@ def test_async_server_survives_cancellation(smoke):
     assert server.scheduler.pool.in_use == 0
 
 
+# ------------------------------------------------- quantized KV pages ----
+def test_serve_config_kv_bits_env_default(monkeypatch):
+    """REPRO_SERVE_KV_BITS sets the ServeConfig default; an explicit
+    kv_bits argument beats the env; invalid widths are rejected."""
+    monkeypatch.delenv("REPRO_SERVE_KV_BITS", raising=False)
+    assert ServeConfig().kv_bits == 32
+    monkeypatch.setenv("REPRO_SERVE_KV_BITS", "8")
+    assert ServeConfig().kv_bits == 8
+    assert ServeConfig(kv_bits=4).kv_bits == 4
+    with pytest.raises(ValueError, match="kv_bits"):
+        ServeConfig(kv_bits=16)
+
+
+def test_quantized_cache_pools_and_modeled_bytes():
+    """kv_bits 8/4 swap the attention pools for uint8 code pools plus f32
+    per-(token, KV-head) scale side info; the modeled cache bytes per
+    cached token — the acceptance metric — drop >= 3.5x (int8) and >= 6x
+    (int4) against the float32 pools."""
+    cfg = base.get_smoke_config("tinyllama-1.1b")
+    per_tok = {}
+    for bits in (32, 8, 4):
+        cache = paging.init_paged_cache(
+            cfg, 2, 16, PAGE, PPS,
+            dtype=jnp.float32 if bits == 32 else jnp.bfloat16,
+            kv_bits=bits)
+        names = {jax.tree_util.keystr(path).rsplit("'", 2)[-2]: leaf
+                 for path, leaf in
+                 jax.tree_util.tree_leaves_with_path(cache)
+                 if "pages" in jax.tree_util.keystr(path)
+                 or "scale" in jax.tree_util.keystr(path)}
+        if bits == 32:
+            assert not any("scale" in n for n in names)
+        else:
+            assert names["k_pages"].dtype == jnp.uint8
+            assert names["k_scale"].dtype == jnp.float32
+            assert (names["k_scale"].shape
+                    == names["k_pages"].shape[:-1])
+        per_tok[bits] = paging.cache_bytes_per_token(cache)
+    assert per_tok[32] / per_tok[8] >= 3.5
+    assert per_tok[32] / per_tok[4] >= 6.0
+
+
+@pytest.mark.parametrize("kv_bits", [8, 4])
+def test_scheduler_quantized_stream_completes_without_leaks(smoke, kv_bits):
+    cfg, params = smoke("tinyllama-1.1b")
+    scfg = _serve_cfg(kv_bits=kv_bits)
+    sched = Scheduler(cfg, params, scfg)
+    lens, news = (9, 17, 5, 13), (5, 3, 6, 4)
+    rids = [sched.submit(p, m)
+            for p, m in zip(_prompts(cfg, lens), news)]
+    out = sched.run()
+    assert sorted(out) == sorted(rids)
+    for rid, m in zip(rids, news):
+        assert out[rid].shape == (m,)
+    assert sched.pool.in_use == 0
+    assert sched.pool.free_count == scfg.num_pages
+
+
+def test_scheduler_int8_greedy_matches_f32_cache(smoke, monkeypatch):
+    """Acceptance gate shape, in miniature: greedy tokens decoded through
+    int8 KV pages are identical to the full-precision float32 cache on the
+    smoke stream (quantization noise stays below every argmax margin)."""
+    monkeypatch.setenv("REPRO_PAGED_ATTN_KERNEL", "0")
+    cfg, params = smoke("tinyllama-1.1b")
+
+    def run(bits):
+        sched = Scheduler(cfg, params, _serve_cfg(
+            kv_bits=bits, cache_dtype="float32"))
+        rids = [sched.submit(p, m) for p, m in
+                zip(_prompts(cfg, (9, 17, 5, 13)), (5, 3, 6, 4))]
+        out = sched.run()
+        return [out[r].tolist() for r in rids]
+
+    assert run(8) == run(32)
+
+
+def test_scheduler_quantized_replay_deterministic(smoke):
+    """Page quantization keeps the scheduler's replay guarantee: two runs
+    from the same seed produce identical tokens at kv_bits=4."""
+    cfg, params = smoke("tinyllama-1.1b")
+
+    def one_run():
+        sched = Scheduler(cfg, params, _serve_cfg(kv_bits=4, seed=7))
+        rids = [sched.submit(p, m) for p, m in
+                zip(_prompts(cfg, (9, 17, 5)), (5, 3, 6))]
+        out = sched.run()
+        return [out[r].tolist() for r in rids]
+
+    assert one_run() == one_run()
+
+
+def test_scheduler_records_latency_metrics(smoke):
+    """The scheduler instruments per-decode-step wall time and per-request
+    TTFT (submit -> first sampled token), the satellite inputs to
+    bench_serving's p50/p99 section."""
+    cfg, params = smoke("tinyllama-1.1b")
+    sched = Scheduler(cfg, params, _serve_cfg())
+    rids = [sched.submit(p, m)
+            for p, m in zip(_prompts(cfg, (9, 5)), (4, 3))]
+    sched.run()
+    assert len(sched.decode_step_s) >= 3          # one per decode tick
+    assert all(t > 0.0 for t in sched.decode_step_s)
+    assert set(sched.ttft_s) == set(rids)
+    assert all(t > 0.0 for t in sched.ttft_s.values())
+
+
 # ------------------------------------------------------------ page pool --
 def test_page_pool_deterministic_and_safe():
     pool = paging.PagePool(8)
@@ -332,13 +444,14 @@ def test_build_positions_centralizes_mrope():
 
 # ------------------------------------------------------------- long case --
 @pytest.mark.slow
-def test_long_decode_paged_matches_contiguous(smoke):
+def test_long_decode_paged_matches_contiguous(smoke, monkeypatch):
     """Long-decode endurance: 160 generated tokens spanning many pages,
     greedy paged scheduler vs contiguous reference, token-for-token."""
+    monkeypatch.setenv("REPRO_PAGED_ATTN_KERNEL", "0")
     cfg, params = smoke("tinyllama-1.1b")
     sched = Scheduler(cfg, params, ServeConfig(
         max_seqs=2, page_size=8, num_pages=64, pages_per_seq=32,
-        prefill_chunk=8))
+        prefill_chunk=8, kv_bits=32))
     prompt = _prompts(cfg, (17,))[0]
     rid = sched.submit(prompt, 160)
     out = sched.run()
