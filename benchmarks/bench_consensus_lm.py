@@ -1,28 +1,25 @@
 """Beyond-paper benchmark: CQ-GGADMM vs unquantized GGADMM consensus
 training of a reduced LM (pytree consensus path) — bits moved to reach the
 same loss. This is the neural-network extension the paper motivates but
-only evaluates on convex tasks."""
+only evaluates on convex tasks.
+
+Decomposed into the ``lm-baseline`` stage of campaign ``lm-sweep``
+(the stage function is ``repro.launch.train:campaign_lm_run``); this
+module is the back-compat entry running just that stage. The full
+layer-wise bits-to-loss grid (groups x censor_mode x mix_backend) is the
+``lm-grid`` stage:
+
+    PYTHONPATH=src python -m benchmarks.run --campaign lm-sweep
+"""
 from __future__ import annotations
-
-from repro.launch import train as train_mod
-
-COMMON = ["--arch", "tinyllama-1.1b", "--smoke", "--mode", "admm",
-          "--workers", "4", "--steps", "12", "--batch", "8",
-          "--seq", "64", "--local-steps", "2", "--log-every", "100"]
 
 
 def main() -> int:
+    from benchmarks import campaigns
+    from repro.campaign.runner import Runner
     print("# consensus_lm: variant,final_loss,total_bits")
-    q = train_mod.main(COMMON)
-    print(f"cq-ggadmm,{q['final_loss']:.4f},{q['total_bits']:.4g}")
-    f = train_mod.main(COMMON + ["--no-quantize"])
-    print(f"ggadmm,{f['final_loss']:.4f},{f['total_bits']:.4g}")
-    saved = 1.0 - q["total_bits"] / f["total_bits"]
-    ok = (q["total_bits"] < 0.5 * f["total_bits"]
-          and q["final_loss"] < f["final_loss"] + 1.0)
-    print(f"claim,consensus_lm,quantization_saves_bits,"
-          f"{'PASS' if ok else 'FAIL'} (saved {saved:.0%})")
-    return int(not ok)
+    return Runner(campaigns.get("lm-sweep"),
+                  only="lm-baseline").run().exit_code
 
 
 if __name__ == "__main__":

@@ -1,39 +1,41 @@
-"""Engine-refactor benchmark: (a) unified engine vs frozen seed stepper
-wall-time on the paper's flat workload, (b) whole-model (G=1) vs per-layer
-(G=num_leaves) payload bits on a heterogeneous-scale model, (c) the fused
-packed-buffer quantize path vs the per-leaf loop on a multi-leaf pytree,
-(d) the in-kernel grouped range reduction vs the two-pass side-info path
-on the 16-leaf workload (``fused_range``), (e) the structured group-spec
-axis — model / leaf / named block spec / auto:4 / index buckets, both
-censor modes — each gated on the spec-agnostic payload-accounting identity
-(``group_specs``), (f) the pluggable topology backends: every
-``mix_backend`` runs the same engine workload and must agree with dense,
-and a dense-vs-sparse mixing sweep over (N, p) records wall-time and
-topology-operand bytes.
+"""Engine benchmark stages (campaign ``engine-smoke``): (a) unified
+engine vs frozen seed stepper wall-time on the paper's flat workload,
+(b) whole-model (G=1) vs per-layer (G=num_leaves) payload bits on a
+heterogeneous-scale model, (c) the fused packed-buffer quantize path vs
+the per-leaf loop on a multi-leaf pytree, (d) the in-kernel grouped range
+reduction vs the two-pass side-info path on the 16-leaf workload
+(``fused_range``), (e) the structured group-spec axis — model / leaf /
+named block spec / auto:4 / index buckets, both censor modes — each gated
+on the spec-agnostic payload-accounting identity (``group_specs``),
+(f) the pluggable topology backends: every ``mix_backend`` runs the same
+engine workload and must agree with dense, and a dense-vs-sparse mixing
+sweep over (N, p) records wall-time and topology-operand bytes.
 
-Emits ``BENCH_engine.json`` (cwd) with the comparisons plus claim checks:
-the engine must stay within 1.1x of the seed stepper's wall time on the
-tiny convex workload (the CI perf gate), layer-wise quantization must not
-move more bits than whole-model on the heterogeneous-decay construction,
-the single fused call must beat the per-leaf loop on both dispatch
-wall-time (one op chain vs one ``jax.random.uniform`` + one quantize chain
-per leaf) and trace+compile time (O(1) vs O(L) HLO), every topology
-backend must reproduce the dense trajectories, and the sparse backend's
-O(E) edge arrays must undercut the O(N²) dense adjacency operand at every
-sweep point with p ≤ 0.3.
+Each ``stage_*`` function is one campaign run returning a typed
+:class:`~repro.campaign.store.Record`; the campaign runner merges the
+records into ``BENCH_engine.json`` (sections ``walltime``, ``payload``,
+``pytree_fusion``, ``fused_range``, ``group_specs``, ``mix_backends``,
+``mix_sweep`` plus the CI-gated ``claims``) through the atomic results
+store. Claim gates are unchanged from the pre-campaign monolith: the
+engine must stay within 1.1x of the seed stepper, layer-wise quantization
+must not move more bits than whole-model, the fused call must beat the
+per-leaf loop on dispatch and compile, every topology backend must
+reproduce the dense trajectories, and the sparse backend's O(E) edge
+arrays must undercut the O(N^2) dense adjacency at every p <= 0.3 point.
 
-    PYTHONPATH=src python -m benchmarks.bench_engine
+    PYTHONPATH=src python -m benchmarks.run --campaign engine-smoke
 """
 from __future__ import annotations
 
 import dataclasses
-import json
 import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.campaign.measure import time_run as _time_run
+from repro.campaign.store import Claim, Record
 from repro.core import admm_baselines as ab
 from repro.core import engine as E
 from repro.core import seed_reference as ref
@@ -42,19 +44,6 @@ from repro.core.graph import random_bipartite_graph
 from repro.core.quantization import QuantConfig
 from repro.core.solvers import LinearRegressionProblem
 from repro.data import regression as R
-
-OUT_PATH = "BENCH_engine.json"
-
-
-def _time_run(fn, repeats=5):
-    fn()                                   # compile / warm up
-    best = float("inf")
-    for _ in range(repeats):
-        t0 = time.perf_counter()
-        out = fn()
-        jax.block_until_ready(out)
-        best = min(best, time.perf_counter() - t0)
-    return best
 
 
 def bench_walltime(n_workers=16, dim=64, iters=200) -> dict:
@@ -402,80 +391,118 @@ def bench_mix_sweep(ns=(64, 128, 256), ps=(0.1, 0.3, 1.0), dim=256,
     }
 
 
-def main() -> int:
-    wall = bench_walltime()
-    payload = bench_payload()
-    fusion = bench_pytree_fusion()
-    fused_range = bench_fused_range()
-    gspecs = bench_group_specs()
-    backends = bench_mix_backends()
-    sweep = bench_mix_sweep()
-    claims = {
-        # the in-kernel range reduction must not lose to the extra
-        # side-info pass it deletes — and must change nothing numerically
-        # (1.05x headroom absorbs interpret-mode dispatch jitter on loaded
-        # CI runners, same spirit as the 1.1x engine_walltime gate;
-        # measured ~0.76x on this container)
-        "fused_range_dispatch_leq_twopass":
-            fused_range["fused_dispatch_s"]
-            <= 1.05 * fused_range["twopass_dispatch_s"],
-        "fused_range_bit_identical": fused_range["bit_identical"],
-        # every structured spec satisfies the QSGD payload-accounting
-        # identity in both censor modes (the CI groups-axis gate)
-        "group_spec_payload_accounting": gspecs["accounting_ok"],
-        # the unified path runs the same math; the CI gate holds it to 1.1x
-        "engine_walltime_comparable": wall["engine_over_seed"] < 1.1,
-        "per_layer_leq_whole_model":
-            payload["per_layer_bits"] <= payload["whole_model_bits"],
-        # one fused call beats the per-leaf dispatch loop AND compiles faster
-        "fused_quantize_faster_dispatch":
-            fusion["fused_dispatch_s"] < fusion["perleaf_dispatch_s"],
-        "fused_quantize_faster_compile":
-            fusion["fused_compile_s"] < fusion["perleaf_compile_s"],
-        # every topology backend reproduces the dense trajectories
-        "mix_backends_agree": backends["agree"],
-        # program-level: the sparse backend's traced mix carries no dense
-        # matmul and no (N, N) operand (checked against the lowered HLO,
-        # with dense as the positive probe)
-        "sparse_mix_matmul_free": sweep["sparse_mix_matmul_free"],
-        # the O(E) edge arrays undercut the O(N²) adjacency (state AND
-        # arithmetic work) at every sweep point with p <= 0.3, N >= 64
-        "sparse_mix_state_smaller_at_low_p":
-            sweep["sparse_state_smaller_at_low_p"],
-        "sparse_mix_less_work_at_low_p":
-            sweep["sparse_less_work_at_low_p"],
-    }
-    result = {"walltime": wall, "payload": payload,
-              "pytree_fusion": fusion, "fused_range": fused_range,
-              "group_specs": gspecs, "mix_backends": backends,
-              "mix_sweep": sweep, "claims": claims}
-    with open(OUT_PATH, "w") as f:
-        json.dump(result, f, indent=2)
+# ------------------------------------------------------- campaign stages --
+def stage_walltime(n_workers=16, dim=64, iters=200, ctx=None) -> Record:
+    wall = bench_walltime(n_workers=n_workers, dim=dim, iters=iters)
     print(f"# engine: wall engine={wall['engine_s']:.3f}s "
           f"seed={wall['seed_s']:.3f}s "
           f"ratio={wall['engine_over_seed']:.2f}")
+    return Record(
+        section=("walltime",), data=wall,
+        claims=(
+            # the unified path runs the same math; the CI gate holds it
+            # to 1.1x of the frozen seed stepper
+            Claim("engine_walltime_comparable",
+                  wall["engine_over_seed"] < 1.1,
+                  value=wall["engine_over_seed"],
+                  gate="engine_over_seed < 1.1"),))
+
+
+def stage_payload(n=4, iters=40, ctx=None) -> Record:
+    payload = bench_payload(n=n, iters=iters)
     print(f"# engine: payload per-layer/whole-model="
           f"{payload['per_layer_over_whole']:.2f}")
+    return Record(
+        section=("payload",), data=payload,
+        claims=(
+            Claim("per_layer_leq_whole_model",
+                  payload["per_layer_bits"] <= payload["whole_model_bits"],
+                  value=payload["per_layer_over_whole"],
+                  gate="per_layer_bits <= whole_model_bits"),))
+
+
+def stage_pytree_fusion(n_leaves=16, n=8, dim=256, iters=20,
+                        ctx=None) -> Record:
+    fusion = bench_pytree_fusion(n_leaves=n_leaves, n=n, dim=dim,
+                                 iters=iters)
     print(f"# engine: fused/perleaf dispatch="
           f"{fusion['fused_over_perleaf_dispatch']:.2f} "
           f"compile={fusion['fused_over_perleaf_compile']:.2f} "
           f"({fusion['n_leaves']} leaves)")
+    return Record(
+        section=("pytree_fusion",), data=fusion,
+        claims=(
+            # one fused call beats the per-leaf dispatch loop AND
+            # compiles faster (O(1) vs O(L) HLO)
+            Claim("fused_quantize_faster_dispatch",
+                  fusion["fused_dispatch_s"] < fusion["perleaf_dispatch_s"],
+                  value=fusion["fused_over_perleaf_dispatch"],
+                  gate="fused_dispatch < perleaf_dispatch"),
+            Claim("fused_quantize_faster_compile",
+                  fusion["fused_compile_s"] < fusion["perleaf_compile_s"],
+                  value=fusion["fused_over_perleaf_compile"],
+                  gate="fused_compile < perleaf_compile"),))
+
+
+def stage_fused_range(n_leaves=16, n=8, dim=256, iters=30,
+                      ctx=None) -> Record:
+    fr = bench_fused_range(n_leaves=n_leaves, n=n, dim=dim, iters=iters)
     print(f"# engine: fused-range/twopass dispatch="
-          f"{fused_range['fused_over_twopass_dispatch']:.2f} "
-          f"({fused_range['fused_dispatch_s'] * 1e3:.2f}ms vs "
-          f"{fused_range['twopass_dispatch_s'] * 1e3:.2f}ms, "
-          f"bit_identical={fused_range['bit_identical']})")
+          f"{fr['fused_over_twopass_dispatch']:.2f} "
+          f"({fr['fused_dispatch_s'] * 1e3:.2f}ms vs "
+          f"{fr['twopass_dispatch_s'] * 1e3:.2f}ms, "
+          f"bit_identical={fr['bit_identical']})")
+    return Record(
+        section=("fused_range",), data=fr,
+        claims=(
+            # the in-kernel range reduction must not lose to the extra
+            # side-info pass it deletes — and must change nothing
+            # numerically (1.05x headroom absorbs interpret-mode dispatch
+            # jitter on loaded CI runners; measured ~0.76x here)
+            Claim("fused_range_dispatch_leq_twopass",
+                  fr["fused_dispatch_s"] <= 1.05 * fr["twopass_dispatch_s"],
+                  value=fr["fused_over_twopass_dispatch"],
+                  gate="fused_dispatch <= 1.05 * twopass_dispatch"),
+            Claim("fused_range_bit_identical", fr["bit_identical"],
+                  gate="fused == twopass bitwise"),))
+
+
+def stage_group_specs(n_workers=8, iters=40, ctx=None) -> Record:
+    gspecs = bench_group_specs(n_workers=n_workers, iters=iters)
     for mode in ("global", "group"):
         for name, r in gspecs[mode].items():
             print(f"# engine: groups={name:8s} censor={mode:6s} "
                   f"G={r['n_groups']:2d} "
                   f"bits={r['total_payload_bits']:.3e} "
                   f"accounting_ok={r['accounting_ok']}")
+    return Record(
+        section=("group_specs",), data=gspecs,
+        claims=(
+            # every structured spec satisfies the QSGD payload-accounting
+            # identity in both censor modes (the CI groups-axis gate)
+            Claim("group_spec_payload_accounting", gspecs["accounting_ok"],
+                  gate="payload == sum over groups, both censor modes"),))
+
+
+def stage_mix_backends(n_workers=16, dim=64, iters=60, ctx=None) -> Record:
+    backends = bench_mix_backends(n_workers=n_workers, dim=dim, iters=iters)
     for b in T.BACKENDS:
         r = backends[b]
         print(f"# engine: mix_backend={b:8s} wall={r['wall_s']:.3f}s "
               f"max_theta_dev={r['max_theta_dev']:.2e} "
               f"tx_identical={r['tx_mask_identical']}")
+    return Record(
+        section=("mix_backends",), data=backends,
+        claims=(
+            # every topology backend reproduces the dense trajectories
+            Claim("mix_backends_agree", backends["agree"],
+                  gate="tx identical, theta dev < 1e-4"),))
+
+
+def stage_mix_sweep(ns=(64, 128, 256), ps=(0.1, 0.3, 1.0), dim=256,
+                    inner=10, ctx=None) -> Record:
+    sweep = bench_mix_sweep(ns=tuple(ns), ps=tuple(ps), dim=dim,
+                            inner=inner)
     for pt in sweep["points"]:
         print(f"# engine: mix N={pt['n']:4d} p={pt['p']:.1f} "
               f"E={pt['edges']:6d} dense={pt['dense_mix_s'] * 1e6:9.1f}us "
@@ -489,12 +516,29 @@ def main() -> int:
     print(f"# engine: sparse_walltime_leq_dense_at_low_p="
           f"{sweep['sparse_walltime_leq_dense_at_low_p']} "
           f"(informational; {sweep['backend_note']})")
-    failures = 0
-    for claim, ok in claims.items():
-        print(f"claim,engine,{claim},{'PASS' if ok else 'FAIL'}")
-        failures += (not ok)
-    print(f"# wrote {OUT_PATH}")
-    return failures
+    return Record(
+        section=("mix_sweep",), data=sweep,
+        claims=(
+            # program-level: the sparse backend's traced mix carries no
+            # dense matmul and no (N, N) operand (checked against the
+            # lowered HLO, with dense as the positive probe)
+            Claim("sparse_mix_matmul_free", sweep["sparse_mix_matmul_free"],
+                  gate="no dot_general / (N,N) operand in sparse HLO"),
+            # the O(E) edge arrays undercut the O(N^2) adjacency (state
+            # AND arithmetic work) at every sweep point with p <= 0.3
+            Claim("sparse_mix_state_smaller_at_low_p",
+                  sweep["sparse_state_smaller_at_low_p"],
+                  gate="edge bytes < adjacency bytes at p <= 0.3"),
+            Claim("sparse_mix_less_work_at_low_p",
+                  sweep["sparse_less_work_at_low_p"],
+                  gate="2E/N^2 < 1 at p <= 0.3"),))
+
+
+def main() -> int:
+    """Back-compat entry: run the engine-smoke campaign (fresh)."""
+    from benchmarks import campaigns
+    from repro.campaign.runner import Runner
+    return Runner(campaigns.get("engine-smoke")).run().exit_code
 
 
 if __name__ == "__main__":

@@ -2,7 +2,12 @@
 
 Each returns {scheme: {iters, rounds, bits, energy, final_gap}} at the
 figure's target objective error, plus a claim-check dict asserting the
-paper's qualitative findings on this run.
+paper's qualitative findings on this run. ``stage_figure`` wraps one
+figure as a campaign run (campaign ``paper-figures``): results land in
+the ``figures.<tag>`` sections of ``BENCH_engine.json`` with the
+per-figure claims merged into ``figures.claims``.
+
+    PYTHONPATH=src python -m benchmarks.run --campaign paper-figures
 """
 from __future__ import annotations
 
@@ -10,6 +15,7 @@ from typing import Dict, Tuple
 
 from benchmarks.common import make_problem, print_figure, run_figure, \
     run_scheme
+from repro.campaign.store import Claim, Record
 
 EPS = 1e-4
 
@@ -108,15 +114,26 @@ ALL_FIGURES = {
 }
 
 
+def stage_figure(figure: str, ctx=None) -> Record:
+    """One paper figure as a campaign run."""
+    if figure not in ALL_FIGURES:
+        raise ValueError(f"unknown figure {figure!r} "
+                         f"(have: {sorted(ALL_FIGURES)})")
+    res, claims = ALL_FIGURES[figure]()
+    print_figure(figure, res)
+    return Record(
+        section=("figures", figure), data=res,
+        claims=tuple(Claim(f"{figure}_{name}", ok,
+                           gate="paper qualitative claim")
+                     for name, ok in claims.items()),
+        claims_path=("figures", "claims"))
+
+
 def main() -> int:
-    failures = 0
-    for tag, fn in ALL_FIGURES.items():
-        res, claims = fn()
-        print_figure(tag, res)
-        for claim, ok in claims.items():
-            print(f"claim,{tag},{claim},{'PASS' if ok else 'FAIL'}")
-            failures += (not ok)
-    return failures
+    """Back-compat entry: run the paper-figures campaign (fresh)."""
+    from benchmarks import campaigns
+    from repro.campaign.runner import Runner
+    return Runner(campaigns.get("paper-figures")).run().exit_code
 
 
 if __name__ == "__main__":

@@ -1,13 +1,18 @@
 """Roofline table from the dry-run records (experiments/dryrun/*.json).
 
 Prints one CSV row per (arch, shape, mesh) with the three roofline terms
-and the dominant bottleneck. Run `python -m repro.launch.dryrun --all
---mesh both` first; missing records are listed as `missing`."""
+and the dominant bottleneck; ``stage_roofline`` wraps the table as a
+campaign run (the ``roofline`` stage of campaign ``all``), landing it in
+the ``roofline`` section of ``BENCH_engine.json``. Run `python -m
+repro.launch.dryrun --all --mesh both` first; missing records are listed
+as `missing` (informational — only ``fail`` records trip the claim).
+"""
 from __future__ import annotations
 
 import json
 from pathlib import Path
 
+from repro.campaign.store import Claim, Record
 from repro.configs import base
 
 DRYRUN_DIR = Path("experiments/dryrun")
@@ -33,24 +38,40 @@ def rows(mesh: str = "single"):
     return out
 
 
-def main() -> int:
-    fails = 0
+def _print_table(mesh: str, table) -> None:
     cols = ("t_compute_s", "t_memory_s", "t_collective_s", "bottleneck",
             "useful_fraction", "peak_mem_gb")
-    for mesh in ("single", "multi"):
-        print(f"# roofline ({mesh}-pod): arch,shape,status," +
-              ",".join(cols))
-        for row in rows(mesh):
-            if row["status"] != "ok":
-                print(f"{row['arch']},{row['shape']},{row['status']},,,,,,")
-                fails += row["status"] == "fail"
-                continue
-            vals = []
-            for c in cols:
-                v = row.get(c)
-                vals.append(f"{v:.3e}" if isinstance(v, float) else str(v))
-            print(f"{row['arch']},{row['shape']},ok," + ",".join(vals))
-    return fails
+    print(f"# roofline ({mesh}-pod): arch,shape,status," + ",".join(cols))
+    for row in table:
+        if row["status"] != "ok":
+            print(f"{row['arch']},{row['shape']},{row['status']},,,,,,")
+            continue
+        vals = []
+        for c in cols:
+            v = row.get(c)
+            vals.append(f"{v:.3e}" if isinstance(v, float) else str(v))
+        print(f"{row['arch']},{row['shape']},ok," + ",".join(vals))
+
+
+def stage_roofline(ctx=None) -> Record:
+    tables = {mesh: rows(mesh) for mesh in ("single", "multi")}
+    fails = 0
+    for mesh, table in tables.items():
+        _print_table(mesh, table)
+        fails += sum(row["status"] == "fail" for row in table)
+    return Record(
+        section=("roofline",), data=tables,
+        claims=(
+            Claim("roofline_no_failed_records", fails == 0,
+                  value=fails, gate="0 dryrun records with status=fail"),),
+        claims_path=("roofline", "claims"))
+
+
+def main() -> int:
+    """Back-compat entry: run only the roofline stage of campaign ``all``."""
+    from benchmarks import campaigns
+    from repro.campaign.runner import Runner
+    return Runner(campaigns.get("all"), only="roofline").run().exit_code
 
 
 if __name__ == "__main__":

@@ -1,59 +1,91 @@
-"""Benchmark driver: one section per paper table/figure + kernels +
-roofline + the beyond-paper LM-consensus benchmark.
+"""Benchmark driver: a thin CLI over the campaign runner.
 
-    PYTHONPATH=src python -m benchmarks.run [--skip-lm] [--skip-roofline]
+Every benchmark is a stage of a declared campaign (``benchmarks/campaigns.py``);
+this module only selects a campaign and hands it to ``repro.campaign.runner``:
+
+    PYTHONPATH=src python -m benchmarks.run --campaign engine-smoke
+    PYTHONPATH=src python -m benchmarks.run --campaign serve-smoke --resume
+    PYTHONPATH=src python -m benchmarks.run --campaign all --only kernels
+    PYTHONPATH=src python -m benchmarks.run --list
+
+``--resume`` skips runs whose record already exists under
+``campaigns/<name>/<run_key>/`` and re-merges their persisted records, so a
+killed campaign picks up where it stopped and the merged document is
+byte-identical to an uninterrupted one. Legacy flags (``--engine-smoke``,
+``--serve-smoke``, ``--skip-lm``, ``--skip-roofline``) map onto campaigns.
 """
+from __future__ import annotations
+
 import argparse
 import sys
 import time
 
 
-def main() -> None:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--skip-lm", action="store_true")
-    ap.add_argument("--skip-roofline", action="store_true")
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--campaign", default=None,
+                    help="campaign name (see --list); default: all")
+    ap.add_argument("--resume", action="store_true",
+                    help="skip runs already completed on disk")
+    ap.add_argument("--only", default=None, metavar="STAGE",
+                    help="run one stage (plus its dependency closure; "
+                         "completed dep runs are skipped)")
+    ap.add_argument("--list", action="store_true", dest="list_campaigns",
+                    help="list registered campaigns and their stages")
+    ap.add_argument("--out", default="BENCH_engine.json",
+                    help="results store path (default: BENCH_engine.json)")
+    ap.add_argument("--state-root", default="campaigns",
+                    help="per-run state directory root (default: campaigns)")
+    # legacy aliases, kept so existing invocations keep working
     ap.add_argument("--engine-smoke", action="store_true",
-                    help="only the engine-vs-seed benchmark "
-                         "(emits BENCH_engine.json)")
+                    help=argparse.SUPPRESS)
     ap.add_argument("--serve-smoke", action="store_true",
-                    help="only the serving benchmark (merges the "
-                         "`serving` section into BENCH_engine.json)")
-    args = ap.parse_args()
+                    help=argparse.SUPPRESS)
+    ap.add_argument("--skip-lm", action="store_true", help=argparse.SUPPRESS)
+    ap.add_argument("--skip-roofline", action="store_true",
+                    help=argparse.SUPPRESS)
+    args = ap.parse_args(argv)
+
+    from benchmarks import campaigns
+    from repro.campaign.runner import Runner
+    from repro.campaign.spec import CAMPAIGNS
+    from repro.campaign.store import ResultStore
+
+    if args.list_campaigns:
+        for name in sorted(CAMPAIGNS):
+            camp = CAMPAIGNS[name]
+            n_runs = sum(len(s.runs) for s in camp.stages)
+            print(f"{name}: {n_runs} runs")
+            for line in Runner(camp).describe():
+                print(f"  {line}")
+        return 0
+
+    name = args.campaign
+    if name is None:
+        if args.engine_smoke:
+            name = "engine-smoke"
+        elif args.serve_smoke:
+            name = "serve-smoke"
+        else:
+            name = "all"
+
+    campaign = campaigns.get(name)
+    if name == "all" and (args.skip_lm or args.skip_roofline):
+        drop = set()
+        if args.skip_lm:
+            drop |= {"lm-baseline", "lm-grid"}
+        if args.skip_roofline:
+            drop |= {"roofline"}
+        campaign = campaign.subset(
+            [s.name for s in campaign.stages if s.name not in drop])
 
     t0 = time.time()
-    failures = 0
-
-    if args.serve_smoke:
-        from benchmarks import bench_serving
-        failures += bench_serving.main()
-        print(f"# serve smoke done in {time.time() - t0:.0f}s, "
-              f"{failures} claim failures")
-        sys.exit(1 if failures else 0)
-
-    from benchmarks import bench_engine
-    failures += bench_engine.main()
-    if args.engine_smoke:
-        print(f"# engine smoke done in {time.time() - t0:.0f}s, "
-              f"{failures} claim failures")
-        sys.exit(1 if failures else 0)
-
-    from benchmarks import bench_figures, bench_kernels, bench_serving
-    failures += bench_figures.main()
-    failures += bench_kernels.main()
-    failures += bench_serving.main()
-
-    if not args.skip_roofline:
-        from benchmarks import bench_roofline
-        failures += bench_roofline.main()
-
-    if not args.skip_lm:
-        from benchmarks import bench_consensus_lm
-        failures += bench_consensus_lm.main()
-
-    print(f"# benchmarks done in {time.time() - t0:.0f}s, "
-          f"{failures} claim failures")
-    sys.exit(1 if failures else 0)
+    summary = Runner(campaign, store=ResultStore(args.out),
+                     state_root=args.state_root, resume=args.resume,
+                     only=args.only).run()
+    print(f"# benchmarks done in {time.time() - t0:.0f}s")
+    return summary.exit_code
 
 
-if __name__ == '__main__':
-    main()
+if __name__ == "__main__":
+    sys.exit(main())

@@ -10,6 +10,11 @@ on a two-layer pytree whose layers converge at different rates; per-layer
 quantization groups pay fewer bits than the whole-model quantizer.
 
     PYTHONPATH=src python examples/quickstart.py
+
+The full experiment suite (paper figures, engine/serving benchmarks, the
+layer-wise LM bits-to-loss sweep) runs as declarative, resumable
+campaigns — `python -m benchmarks.run --list` to see them,
+`--campaign <name> [--resume]` to run one (DESIGN.md §Campaign).
 """
 import jax
 import jax.numpy as jnp

@@ -1,0 +1,25 @@
+"""Campaign subsystem: declarative, resumable experiment DAGs.
+
+A *campaign* is a named DAG of *stages*; a stage is an ordered list of
+*runs*, each a pure function call described by a ``RunSpec`` (module path
+plus a resolved, JSON-serializable config that deterministically hashes to
+the run's key). The :mod:`~repro.campaign.runner` executes stages in
+topological order with transient-vs-fatal retry and crash-resume; every
+run emits a typed :class:`~repro.campaign.store.Record` whose sections and
+claims the :class:`~repro.campaign.store.ResultStore` merges atomically
+into ``BENCH_engine.json``. See DESIGN.md §Campaign.
+"""
+from repro.campaign.measure import percentiles, time_per_call, time_run
+from repro.campaign.runner import (FatalError, RetryPolicy, RunContext,
+                                   Runner, TransientError)
+from repro.campaign.spec import (CAMPAIGNS, Campaign, RunSpec, Stage,
+                                 get_campaign, register_campaign, run_key,
+                                 stage, sweep)
+from repro.campaign.store import Claim, Record, ResultStore
+
+__all__ = [
+    "CAMPAIGNS", "Campaign", "Claim", "FatalError", "Record", "ResultStore",
+    "RetryPolicy", "RunContext", "Runner", "RunSpec", "Stage", "TransientError",
+    "get_campaign", "percentiles", "register_campaign", "run_key", "stage",
+    "sweep", "time_per_call", "time_run",
+]

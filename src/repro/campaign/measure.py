@@ -1,0 +1,47 @@
+"""Shared timing discipline for every benchmark stage.
+
+All six bench modules time through these helpers so the rules live in one
+place: the warm-up (compile) call is always ``block_until_ready``'d before
+the first timed repeat — otherwise async dispatch from warm-up overlaps
+(and inflates) the first measurement — and wall times are best-of-N with a
+block after every repeat.
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, Iterable, Tuple
+
+import jax
+import numpy as np
+
+
+def time_run(fn: Callable[[], object], repeats: int = 5) -> float:
+    """Best-of-``repeats`` wall seconds of ``fn()`` after a blocked warm-up."""
+    jax.block_until_ready(fn())            # compile; block so async dispatch
+    best = float("inf")                    # cannot leak into the first repeat
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = fn()
+        jax.block_until_ready(out)
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def time_per_call(fn: Callable, *args, reps: int = 3) -> Tuple[float, object]:
+    """Mean microseconds per ``fn(*args)`` call after a blocked warm-up,
+    plus the last output (for parity checks)."""
+    jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    out = None
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps * 1e6, out
+
+
+def percentiles(seconds: Iterable[float]) -> Dict[str, float]:
+    """p50/p99 latency summary in milliseconds."""
+    arr = np.asarray(list(seconds), np.float64) * 1e3
+    return {"p50_ms": float(np.percentile(arr, 50)),
+            "p99_ms": float(np.percentile(arr, 99)),
+            "n": int(arr.size)}

@@ -2,13 +2,22 @@
 
 Layout: <dir>/step_<k>.npz with leaves stored under their jax keystr paths,
 plus a tiny JSON sidecar describing the tree for restore-time validation.
-``latest_step`` scans the directory; ``restore`` rebuilds into the template
-pytree (shape/dtype checked leaf by leaf).
+A step is *complete* only when both files exist: the npz is renamed into
+place first and the manifest second (each written tmp-then-rename, so a
+crash at any point leaves either a previous complete step or a harmless
+orphan, never a torn file), and ``all_steps``/``latest_step``/pruning only
+consider complete steps — a concurrent ``restore`` can never pick a step
+whose manifest (or data) is still missing, and pruning drops the manifest
+before the data so a step disappears from listings before its npz goes.
+``restore`` rebuilds into the template pytree (shape/dtype checked leaf by
+leaf).
 """
 from __future__ import annotations
 
 import json
+import os
 import re
+import tempfile
 from pathlib import Path
 from typing import Any, Optional
 
@@ -31,26 +40,43 @@ def save(directory: str | Path, step: int, tree: Any,
     directory.mkdir(parents=True, exist_ok=True)
     flat = _flatten(tree)
     path = directory / f"step_{step}.npz"
-    tmp = path.with_suffix(".tmp.npz")
-    np.savez(tmp, **flat)
-    tmp.rename(path)
+    manifest_path = directory / f"step_{step}.json"
     manifest = {k: {"shape": list(v.shape), "dtype": str(v.dtype)}
                 for k, v in flat.items()}
-    (directory / f"step_{step}.json").write_text(json.dumps(manifest))
+
+    fd, tmp = tempfile.mkstemp(dir=directory, prefix=f"step_{step}.",
+                               suffix=".tmp.npz")
+    with os.fdopen(fd, "wb") as f:
+        np.savez(f, **flat)
+    os.replace(tmp, path)
+    fd, tmp = tempfile.mkstemp(dir=directory, prefix=f"step_{step}.",
+                               suffix=".tmp.json")
+    with os.fdopen(fd, "w") as f:
+        json.dump(manifest, f)
+    os.replace(tmp, manifest_path)
+
     if keep is not None:
+        # prune only *complete* steps (both files), never the one just
+        # written; manifest goes first so the step vanishes from listings
+        # before its data does (a racing restore either already resolved
+        # its npz path or no longer sees the step)
         steps = sorted(all_steps(directory))
         for old in steps[:-keep]:
-            (directory / f"step_{old}.npz").unlink(missing_ok=True)
+            if old == step:
+                continue
             (directory / f"step_{old}.json").unlink(missing_ok=True)
+            (directory / f"step_{old}.npz").unlink(missing_ok=True)
     return path
 
 
 def all_steps(directory: str | Path):
+    """Steps with BOTH the npz and its manifest (complete checkpoints)."""
     directory = Path(directory)
     if not directory.exists():
         return []
     return [int(m.group(1)) for p in directory.iterdir()
-            if (m := _STEP_RE.search(p.name))]
+            if (m := _STEP_RE.search(p.name))
+            and (directory / f"step_{m.group(1)}.json").exists()]
 
 
 def latest_step(directory: str | Path) -> Optional[int]:

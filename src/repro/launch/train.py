@@ -8,6 +8,16 @@ mesh (see dryrun.py); here the mesh is whatever the host offers.
 
     PYTHONPATH=src python -m repro.launch.train --arch tinyllama-1.1b \
         --smoke --workers 4 --steps 50 --mode admm
+
+Campaign entry (DESIGN.md §Campaign): ``campaign_lm_run`` wraps one
+consensus-LM training run as a resumable campaign stage function — the
+layer-wise bits-to-loss grid (groups x censor_mode x mix_backend) and the
+quantized-vs-unquantized baseline pair run as the ``lm-sweep`` campaign,
+with full engine state checkpointed through the run context so a killed
+sweep resumes mid-run bit-exactly:
+
+    PYTHONPATH=src python -m repro.launch.train --campaign lm-sweep \
+        [--resume] [--campaign-only lm-grid]
 """
 from __future__ import annotations
 
@@ -162,6 +172,108 @@ def run_fsdp(cfg, args) -> dict:
             "total_bits": 0.0}
 
 
+# ------------------------------------------------------- campaign entry --
+def campaign_lm_run(section, quantize=True, groups="model",
+                    censor_mode="global", mix_backend="dense",
+                    workers=4, steps=12, batch=8, seq=64, local_steps=2,
+                    arch="tinyllama-1.1b", rho=0.01, tau0=5.0, xi=0.995,
+                    bits=4, omega=0.999, lr=1e-3, seed=0, ckpt_every=3,
+                    compare_with=None, ctx=None):
+    """One consensus-LM training run as a campaign stage function.
+
+    Deterministic given the config (per-step PRNG keys are derived from
+    the step index), and resumable: the full ``EngineState`` plus the
+    loss/bits history is checkpointed through ``ctx`` every
+    ``ckpt_every`` steps, so a killed campaign restarts from the last
+    complete step and finishes bit-exactly where an uninterrupted run
+    would. Emits the run's metrics at ``section`` of BENCH_engine.json;
+    with ``compare_with`` (a section path to an earlier quantized run),
+    also emits the paper's quantization-saves-bits claim against it.
+    """
+    from repro.campaign.runner import FatalError
+    from repro.campaign.store import Claim, Record
+
+    cfg = base.get_smoke_config(arch)
+    graph = ST.worker_graph(workers, "random")
+    ecfg = E.EngineConfig(
+        rho=rho, censor=CensorConfig(tau0=tau0, xi=xi),
+        quantize=QuantConfig(b0=bits, omega=omega) if quantize else None,
+        groups=groups, censor_mode=censor_mode, mix_backend=mix_backend)
+
+    def grad_fn(theta, b):
+        return jax.vmap(lambda p, bb: jax.grad(
+            lambda pp: registry.lm_loss(pp, cfg, bb)[0])(p))(theta, b)
+
+    def loss_fn(theta, b):
+        return jnp.mean(jax.vmap(
+            lambda p, bb: registry.lm_loss(p, cfg, bb)[0])(theta, b))
+
+    solver = E.InexactSolver(grad_fn=grad_fn, local_steps=local_steps,
+                             local_lr=lr)
+    one = registry.init_params(cfg, jax.random.PRNGKey(seed))
+    params = jax.tree_util.tree_map(
+        lambda x: jnp.broadcast_to(x[None], (workers,) + x.shape), one)
+    state = E.init_state(params, ecfg, solver)
+    step = jax.jit(E.make_step(graph, ecfg, solver,
+                               extra_metrics=E.consensus_metrics(loss_fn)))
+    data = SyntheticLM(SyntheticLMConfig(cfg.vocab_size, seq, seed=seed))
+
+    loss_hist = np.full(steps, np.nan)
+    bits_hist = np.full(steps, np.nan)
+    start = 0
+    if ctx is not None:
+        restored = ctx.restore({"state": state, "loss": loss_hist,
+                                "bits": bits_hist})
+        if restored is not None:
+            tree, start = restored
+            state, loss_hist, bits_hist = (tree["state"], tree["loss"],
+                                           tree["bits"])
+            print(f"[lm-campaign] resumed {section[-1]} at step {start}")
+    for i in range(start, steps):
+        raw = data.worker_batch(i, workers, batch // workers)
+        b = model_batch(cfg, raw, key=jax.random.PRNGKey(i))
+        state, m = step(state, b, jax.random.PRNGKey(1000 + i))
+        loss_hist[i] = float(m["loss"])
+        bits_hist[i] = float(m["payload_bits"].sum())   # already tx-masked
+        if ctx is not None and ((i + 1) % ckpt_every == 0
+                                or i == steps - 1):
+            ctx.checkpoint(i + 1, {"state": state, "loss": loss_hist,
+                                   "bits": bits_hist})
+
+    label = section[-1]
+    total_bits = float(np.nansum(bits_hist))
+    final_loss = float(loss_hist[-1])
+    out = {"arch": cfg.name, "workers": workers, "steps": steps,
+           "quantize": bool(quantize), "groups": groups,
+           "censor_mode": censor_mode, "mix_backend": mix_backend,
+           "final_loss": final_loss, "total_bits": total_bits,
+           "loss_history": [float(x) for x in loss_hist],
+           "resumed_from": start}
+    print(f"[lm-campaign] {label}: final_loss={final_loss:.4f} "
+          f"total_bits={total_bits:.4g} (groups={groups} "
+          f"censor={censor_mode} backend={mix_backend})")
+    claims = [Claim(f"lm_{label}_loss_finite".replace("|", "_"),
+                    bool(np.isfinite(final_loss)), value=final_loss,
+                    gate="finite")]
+    if compare_with is not None:
+        if ctx is None:
+            raise FatalError("compare_with needs a run context")
+        ref = ctx.store.section(tuple(compare_with))
+        if ref is None:
+            raise FatalError(f"section {compare_with} missing — run the "
+                             f"quantized baseline first")
+        saved = 1.0 - ref["total_bits"] / max(total_bits, 1e-9)
+        ok = (ref["total_bits"] < 0.5 * total_bits
+              and ref["final_loss"] < final_loss + 1.0)
+        print(f"claim basis: quantization saved {saved:.0%} of bits, "
+              f"dloss={ref['final_loss'] - final_loss:+.3f}")
+        claims.append(Claim(
+            "lm_quantization_saves_bits", ok, value=saved,
+            gate="quantized bits < 0.5x unquantized, loss within 1.0"))
+    return Record(section=tuple(section), data=out, claims=tuple(claims),
+                  claims_path=("lm_sweep", "claims"))
+
+
 def main(argv=None) -> dict:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--arch", default="tinyllama-1.1b",
@@ -211,7 +323,31 @@ def main(argv=None) -> dict:
     ap.add_argument("--log-every", type=int, default=5)
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=100)
+    ap.add_argument("--campaign", default=None, metavar="NAME",
+                    help="run a registered experiment campaign (e.g. "
+                         "'lm-sweep') through the resumable campaign "
+                         "runner instead of a single training run")
+    ap.add_argument("--resume", action="store_true",
+                    help="with --campaign: skip completed runs")
+    ap.add_argument("--campaign-only", default=None, metavar="STAGE",
+                    help="with --campaign: run one stage (plus its "
+                         "incomplete dependencies)")
     args = ap.parse_args(argv)
+
+    if args.campaign:
+        try:
+            from benchmarks import campaigns
+        except ImportError as e:
+            raise SystemExit(
+                "[train] --campaign needs the benchmarks package on the "
+                "path — run from the repo root: PYTHONPATH=src python -m "
+                f"repro.launch.train --campaign {args.campaign} ({e})")
+        from repro.campaign.runner import Runner
+        summary = Runner(campaigns.get(args.campaign), resume=args.resume,
+                         only=args.campaign_only).run()
+        return {"campaign": args.campaign, "executed": summary.executed,
+                "skipped": summary.skipped, "failed": summary.failed,
+                "claim_failures": summary.claims_failed}
 
     cfg = (base.get_smoke_config(args.arch) if args.smoke
            else base.get_config(args.arch))

@@ -1,0 +1,237 @@
+"""Campaign subsystem: grid expansion, run-key determinism, retry/backoff,
+crash-resume byte-identity, dependency handling, in-flight checkpoints."""
+import json
+from pathlib import Path
+
+import pytest
+
+from repro.campaign.runner import RetryPolicy, Runner
+from repro.campaign.spec import Campaign, run_key, stage, sweep
+from repro.campaign.store import ResultStore
+
+EMIT = "repro.campaign._selftest:emit"
+ACC = "repro.campaign._selftest:accumulate"
+
+
+def _calls(calls_dir, tag):
+    p = Path(calls_dir) / f"{tag}.calls"
+    return int(p.read_text()) if p.exists() else 0
+
+
+def _campaign(name, *stages):
+    return Campaign(name=name, stages=tuple(stages))
+
+
+# ------------------------------------------------------------------ spec --
+def test_sweep_grid_order():
+    grid = sweep(a=[1, 2], b=["x", "y"])
+    assert grid == [{"a": 1, "b": "x"}, {"a": 1, "b": "y"},
+                    {"a": 2, "b": "x"}, {"a": 2, "b": "y"}]
+
+
+def test_run_key_deterministic_and_sensitive():
+    k1 = run_key("s", "m:f", {"a": 1, "b": [2, 3]})
+    k2 = run_key("s", "m:f", {"b": [2, 3], "a": 1})   # key order irrelevant
+    assert k1 == k2
+    assert len(k1) == 12
+    assert run_key("s", "m:f", {"a": 1, "b": [2, 4]}) != k1
+    assert run_key("s2", "m:f", {"a": 1, "b": [2, 3]}) != k1
+    assert run_key("s", "m:g", {"a": 1, "b": [2, 3]}) != k1
+
+
+def test_campaign_validation_rejects_cycles_and_dups():
+    with pytest.raises(ValueError):
+        _campaign("bad",
+                  stage("a", EMIT, deps=["b"]),
+                  stage("b", EMIT, deps=["a"])).validate()
+    with pytest.raises(ValueError):
+        _campaign("dup", stage("a", EMIT), stage("a", EMIT)).validate()
+    with pytest.raises(ValueError):
+        _campaign("dupkeys",
+                  stage("a", EMIT,
+                        configs=[{"tag": "t"}, {"tag": "t"}])).validate()
+
+
+def test_topological_respects_deps():
+    camp = _campaign("topo",
+                     stage("late", EMIT, deps=["early"],
+                           configs=[{"tag": "l"}]),
+                     stage("early", EMIT, configs=[{"tag": "e"}]))
+    assert [s.name for s in camp.topological()] == ["early", "late"]
+
+
+# ----------------------------------------------------------- retry logic --
+def test_transient_twice_then_succeeds_with_backoff(tmp_path):
+    calls_dir = str(tmp_path / "calls")
+    camp = _campaign("retry", stage("s", EMIT, configs=[
+        {"tag": "t", "value": 1.0, "calls_dir": calls_dir,
+         "transient_failures": 2}]))
+    slept = []
+    summary = Runner(camp, store=ResultStore(tmp_path / "out.json"),
+                     state_root=tmp_path / "state",
+                     retry=RetryPolicy(max_retries=2, backoff_s=0.5,
+                                       backoff_mult=2.0),
+                     sleep=slept.append).run()
+    assert summary.executed == 1 and summary.failed == 0
+    assert summary.exit_code == 0
+    assert _calls(calls_dir, "t") == 3          # 2 transient + 1 success
+    assert slept == [0.5, 1.0]                  # exponential backoff
+
+
+def test_transient_retries_exhausted_fails(tmp_path):
+    calls_dir = str(tmp_path / "calls")
+    camp = _campaign("retry", stage("s", EMIT, configs=[
+        {"tag": "t", "calls_dir": calls_dir, "transient_failures": 99}]))
+    summary = Runner(camp, store=ResultStore(tmp_path / "out.json"),
+                     state_root=tmp_path / "state",
+                     retry=RetryPolicy(max_retries=2),
+                     sleep=lambda s: None).run()
+    assert summary.failed == 1 and summary.exit_code == 1
+    assert _calls(calls_dir, "t") == 3          # initial + 2 retries, no more
+
+
+def test_fatal_error_never_retried(tmp_path):
+    calls_dir = str(tmp_path / "calls")
+    marker = tmp_path / "fatal.marker"
+    marker.write_text("")
+    camp = _campaign("fatal", stage("s", EMIT, configs=[
+        {"tag": "t", "calls_dir": calls_dir,
+         "fatal_marker": str(marker)}]))
+    summary = Runner(camp, store=ResultStore(tmp_path / "out.json"),
+                     state_root=tmp_path / "state",
+                     sleep=lambda s: None).run()
+    assert summary.failed == 1
+    assert _calls(calls_dir, "t") == 1          # exactly one attempt
+
+
+def test_failed_dependency_blocks_downstream(tmp_path):
+    calls_dir = str(tmp_path / "calls")
+    marker = tmp_path / "fatal.marker"
+    marker.write_text("")
+    camp = _campaign(
+        "blocked",
+        stage("a", EMIT, configs=[{"tag": "a", "calls_dir": calls_dir,
+                                   "fatal_marker": str(marker)}]),
+        stage("b", EMIT, deps=["a"],
+              configs=[{"tag": "b", "calls_dir": calls_dir}]))
+    summary = Runner(camp, store=ResultStore(tmp_path / "out.json"),
+                     state_root=tmp_path / "state").run()
+    assert summary.failed == 2                  # a failed, b blocked
+    assert _calls(calls_dir, "b") == 0          # b never executed
+
+
+# ---------------------------------------------------------- crash-resume --
+def _kill_resume_campaign(calls_dir, die_marker):
+    return _campaign(
+        "kr",
+        stage("s", EMIT, configs=[
+            {"tag": "one", "value": 1.5, "calls_dir": calls_dir},
+            {"tag": "two", "value": 2.5, "calls_dir": calls_dir},
+            {"tag": "three", "value": 3.5, "calls_dir": calls_dir,
+             "die_marker": die_marker}]))
+
+
+def test_kill_then_resume_skips_completed_and_is_byte_identical(tmp_path):
+    calls_dir = str(tmp_path / "calls")
+    marker = tmp_path / "die.marker"
+    marker.write_text("")
+    camp = _kill_resume_campaign(calls_dir, str(marker))
+    store = ResultStore(tmp_path / "out.json")
+    state = tmp_path / "state"
+
+    with pytest.raises(KeyboardInterrupt):
+        Runner(camp, store=store, state_root=state).run()
+    assert _calls(calls_dir, "one") == 1
+    assert _calls(calls_dir, "three") == 1      # attempted, then killed
+
+    marker.unlink()                             # "restart" after the kill
+    summary = Runner(camp, store=store, state_root=state, resume=True).run()
+    assert summary.executed == 1                # only the killed run
+    assert summary.skipped == 2                 # completed runs not re-run
+    assert _calls(calls_dir, "one") == 1
+    assert _calls(calls_dir, "two") == 1
+    assert _calls(calls_dir, "three") == 2
+
+    # reference: the same campaign uninterrupted, in a fresh store/state
+    ref_calls = str(tmp_path / "ref_calls")
+    ref_camp = _kill_resume_campaign(ref_calls, str(tmp_path / "no.marker"))
+    ref_store = ResultStore(tmp_path / "ref.json")
+    Runner(ref_camp, store=ref_store, state_root=tmp_path / "ref_state").run()
+    assert store.path.read_bytes() == ref_store.path.read_bytes()
+
+
+def test_resume_with_nothing_done_runs_everything(tmp_path):
+    calls_dir = str(tmp_path / "calls")
+    camp = _campaign("fresh", stage("s", EMIT, configs=[
+        {"tag": "t", "calls_dir": calls_dir}]))
+    summary = Runner(camp, store=ResultStore(tmp_path / "out.json"),
+                     state_root=tmp_path / "state", resume=True).run()
+    assert summary.executed == 1 and summary.skipped == 0
+
+
+# -------------------------------------------------------------- only=... --
+def test_only_runs_dependency_closure(tmp_path):
+    calls_dir = str(tmp_path / "calls")
+    camp = _campaign(
+        "only",
+        stage("a", EMIT, configs=[{"tag": "a", "calls_dir": calls_dir}]),
+        stage("b", EMIT, deps=["a"],
+              configs=[{"tag": "b", "calls_dir": calls_dir}]),
+        stage("c", EMIT, configs=[{"tag": "c", "calls_dir": calls_dir}]))
+    store = ResultStore(tmp_path / "out.json")
+    state = tmp_path / "state"
+
+    s1 = Runner(camp, store=store, state_root=state, only="b").run()
+    assert s1.executed == 2                     # a (dep) + b
+    assert _calls(calls_dir, "c") == 0          # outside the closure
+
+    # re-running --only b: the completed dep is skipped, the target re-runs
+    s2 = Runner(camp, store=store, state_root=state, only="b").run()
+    assert s2.executed == 1 and s2.skipped == 1
+    assert _calls(calls_dir, "a") == 1
+    assert _calls(calls_dir, "b") == 2
+    assert _calls(calls_dir, "c") == 0
+
+
+# --------------------------------------------------- in-flight checkpoints --
+def test_ctx_checkpoint_resume_mid_run(tmp_path):
+    marker = tmp_path / "die.marker"
+    marker.write_text("")
+    camp = _campaign("acc", stage("s", ACC, configs=[
+        {"tag": "t", "steps": 8, "die_marker": str(marker),
+         "die_at_step": 5}]))
+    store = ResultStore(tmp_path / "out.json")
+    state = tmp_path / "state"
+
+    with pytest.raises(KeyboardInterrupt):
+        Runner(camp, store=store, state_root=state).run()
+
+    marker.unlink()
+    summary = Runner(camp, store=store, state_root=state, resume=True).run()
+    assert summary.executed == 1 and summary.claims_failed == 0
+    doc = store.load()
+    sec = doc["selftest"]["t"]
+    assert sec["acc"] == sum(range(8))
+    assert sec["resumed_from"] == 5             # picked up mid-run, not at 0
+    assert doc["selftest"]["claims"]["t_sum_ok"] is True
+
+
+# ------------------------------------------------------------------ store --
+def test_store_merge_is_atomic_and_key_stable(tmp_path):
+    from repro.campaign.store import Claim, Record
+    store = ResultStore(tmp_path / "out.json")
+    store.merge(Record(section=("x",), data={"v": 1},
+                       claims=(Claim("x_ok", True),)))
+    store.merge(Record(section=("y", "z"), data={"v": 2},
+                       claims=(Claim("y_ok", False),)))
+    first = json.loads(store.path.read_text())
+    assert first == {"x": {"v": 1}, "claims": {"x_ok": True, "y_ok": False},
+                     "y": {"z": {"v": 2}}}
+    # re-merging an existing section updates in place, preserving key order
+    store.merge(Record(section=("x",), data={"v": 3},
+                       claims=(Claim("x_ok", True),)))
+    again = json.loads(store.path.read_text())
+    assert again["x"] == {"v": 3}
+    assert list(again) == list(first)
+    assert (tmp_path / "out.json").exists()
+    assert list(tmp_path.glob("*.tmp")) == []   # no temp litter

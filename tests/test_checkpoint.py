@@ -50,3 +50,22 @@ def test_shape_mismatch_raises(tmp_path):
 def test_missing_dir_raises(tmp_path):
     with pytest.raises(FileNotFoundError):
         ckpt.restore(tmp_path / "nope", _tree())
+
+
+def test_incomplete_step_invisible(tmp_path):
+    """A step missing its manifest (crash between the two renames) is not
+    listed, never restored, and pruned away by the next save."""
+    t = _tree()
+    ckpt.save(tmp_path, 1, t)
+    ckpt.save(tmp_path, 2, t)
+    (tmp_path / "step_2.json").unlink()         # simulate torn write
+    assert sorted(ckpt.all_steps(tmp_path)) == [1]
+    assert ckpt.latest_step(tmp_path) == 1
+    _, step = ckpt.restore(tmp_path, t)
+    assert step == 1
+
+
+def test_save_leaves_no_temp_litter(tmp_path):
+    ckpt.save(tmp_path, 7, _tree())
+    names = {p.name for p in tmp_path.iterdir()}
+    assert names == {"step_7.npz", "step_7.json"}
