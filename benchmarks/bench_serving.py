@@ -100,7 +100,11 @@ def bench_continuous_vs_lockstep(cfg, params) -> dict:
     sched_wall = min(sched_walls)
     sched_tps = tokens / max(sched_wall, 1e-9)
     step_lat = _pcts(list(sched.decode_step_s)[lat0:])
+    # TTFT clocks from submit() (queueing included — under load the old
+    # admission-clocked number hid the wait entirely); ttft_queue is its
+    # submit -> first-admission component, so execution = ttft - queue
     ttft = _pcts(sched.ttft_s[r] for r in timed_rids)
+    ttft_queue = _pcts(sched.ttft_queue_s[r] for r in timed_rids)
 
     return {
         "workload": {"arch": cfg.name, "batch": BATCH,
@@ -116,6 +120,7 @@ def bench_continuous_vs_lockstep(cfg, params) -> dict:
         "speedup": sched_tps / max(lock_tps, 1e-9),
         "decode_step_latency": step_lat,
         "ttft": ttft,
+        "ttft_queue": ttft_queue,
         "peak_pages_in_use": int(sched.peak_pages_in_use),
         "final_pages_in_use": int(sched.pool.in_use),
         "num_pages": sched.cfg.num_pages,
@@ -265,6 +270,124 @@ def bench_long_context(cfg, params) -> dict:
     return out
 
 
+# ------------------------------------------------------------ serve load --
+# Production-shaped pressure workload (DESIGN.md §Serving, "Prefix
+# sharing"): N_PREFIX system prompts drawn Zipf(ZIPF_S) — most requests
+# open with the same PREFIX_PAGES-page prefix — each followed by a short
+# unique suffix and a varied decode budget, arriving in bursts against a
+# pool sized well below the unshared worst case. The shared arm maps the
+# hot prefix pages copy-on-write; the unshared arm pays for private copies
+# and queues at admission. Both arms run watermark admission + preemption,
+# so the measured gap isolates prefix sharing.
+ZIPF_S = 1.1
+N_PREFIX = 4
+PREFIX_PAGES = 10            # 80-token shared system prompt
+LOAD_REQS = 24
+LOAD_BURSTS = 4
+BURST_EVERY = 6              # scheduler ticks between arrival bursts
+LOAD_POOL = 56               # ~1/3 of the unshared worst-case demand
+LOAD_SEQS = 8
+
+
+def _zipf_load_workload(cfg, seed: int = 3):
+    """(prompt, decode_len, prefix_id) per request — Zipf-weighted prefix
+    choice, unique suffix of 3-10 tokens, decode budget of 12-28."""
+    rng = np.random.RandomState(seed)
+    plen = PREFIX_PAGES * PAGE_SIZE
+    prefixes = [rng.randint(0, cfg.vocab_size, plen).astype(np.int32)
+                for _ in range(N_PREFIX)]
+    weights = 1.0 / np.arange(1, N_PREFIX + 1) ** ZIPF_S
+    weights /= weights.sum()
+    reqs = []
+    for _ in range(LOAD_REQS):
+        pid = int(rng.choice(N_PREFIX, p=weights))
+        suffix = rng.randint(0, cfg.vocab_size,
+                             3 + int(rng.randint(8))).astype(np.int32)
+        dec = 12 + int(rng.randint(17))
+        reqs.append((np.concatenate([prefixes[pid], suffix]), dec, pid))
+    return reqs
+
+
+def _run_serve_load(cfg, params, reqs, *, share: bool) -> dict:
+    max_ctx = max(len(p) + d for p, d, _ in reqs)
+    scfg = ServeConfig(
+        max_seqs=LOAD_SEQS, page_size=PAGE_SIZE, num_pages=LOAD_POOL,
+        pages_per_seq=paging.pages_needed(max_ctx, PAGE_SIZE),
+        prefill_chunk=16, sample="greedy", seed=0,
+        share_prefix=share, preempt=True, decode_watermark=2,
+        wm_low=0.05, wm_high=0.2)
+    sched = Scheduler(cfg, params, scfg)
+    warm = sched.submit(reqs[0][0][:PROMPT_LEN], 2)    # compile warmup
+    sched.run()
+    assert warm in sched.finished and sched.pool.in_use == 0
+    alloc0, hits0 = sched.pages_alloc_events, sched.shared_page_hits
+    itl0, tick0 = len(sched.itl_s), sched.steps
+    per_burst = (LOAD_REQS + LOAD_BURSTS - 1) // LOAD_BURSTS
+    bursts = [reqs[b * per_burst:(b + 1) * per_burst]
+              for b in range(LOAD_BURSTS)]
+    rids, b = [], 0
+    t0 = time.time()
+    while b < LOAD_BURSTS or sched.busy:
+        while b < LOAD_BURSTS and sched.steps - tick0 >= b * BURST_EVERY:
+            rids += [sched.submit(p, d) for p, d, _ in bursts[b]]
+            b += 1
+        sched.step()
+    wall = time.time() - t0
+    assert sched.pool.in_use == 0, "page leak under load"
+    tokens = float(sum(d for _, d, _ in reqs))
+    return {
+        "share_prefix": share,
+        "wall_s": wall,
+        "tokens_per_s": tokens / max(wall, 1e-9),
+        "ttft": _pcts(sched.ttft_s[r] for r in rids),
+        "ttft_queue": _pcts(sched.ttft_queue_s[r] for r in rids),
+        "itl": _pcts(list(sched.itl_s)[itl0:]),
+        "pages_alloc_events": sched.pages_alloc_events - alloc0,
+        "pages_alloc_per_request":
+            (sched.pages_alloc_events - alloc0) / len(reqs),
+        "shared_page_hits": sched.shared_page_hits - hits0,
+        "cow_forks": int(sched.cow_forks),
+        "preemptions": int(sched.preemptions),
+        "forced_preemptions": int(sched.forced_preemptions),
+        "peak_pages_in_use": int(sched.peak_pages_in_use),
+        "final_pages_in_use": int(sched.pool.in_use),
+        "outputs": {r: sched.finished[r].tolist() for r in rids},
+    }
+
+
+def bench_serve_load(cfg, params) -> dict:
+    reqs = _zipf_load_workload(cfg)
+    unshared = _run_serve_load(cfg, params, reqs, share=False)
+    shared = _run_serve_load(cfg, params, reqs, share=True)
+    # greedy + deterministic replay: sharing and preemption must be
+    # invisible in the tokens, or the speedup is measuring a wrong answer
+    identical = shared["outputs"] == unshared["outputs"]
+    out_shared = {k: v for k, v in shared.items() if k != "outputs"}
+    out_unshared = {k: v for k, v in unshared.items() if k != "outputs"}
+    return {
+        "workload": {
+            "arch": cfg.name, "requests": LOAD_REQS,
+            "zipf_s": ZIPF_S, "n_prefixes": N_PREFIX,
+            "prefix_tokens": PREFIX_PAGES * PAGE_SIZE,
+            "bursts": LOAD_BURSTS, "burst_every_ticks": BURST_EVERY,
+            "num_pages": LOAD_POOL, "max_seqs": LOAD_SEQS,
+            "page_size": PAGE_SIZE},
+        "shared": out_shared,
+        "unshared": out_unshared,
+        "tokens_identical": bool(identical),
+        "shared_over_unshared_tps":
+            shared["tokens_per_s"] / max(unshared["tokens_per_s"], 1e-9),
+        "pages_per_request_reduction":
+            unshared["pages_alloc_per_request"]
+            / max(shared["pages_alloc_per_request"], 1e-9),
+        "ttft_p99_shared_over_unshared":
+            shared["ttft"]["p99_ms"] / max(unshared["ttft"]["p99_ms"],
+                                           1e-9),
+        "no_page_leaks": (shared["final_pages_in_use"] == 0
+                          and unshared["final_pages_in_use"] == 0),
+    }
+
+
 # ------------------------------------------------------- campaign stages --
 @functools.lru_cache(maxsize=1)
 def _setup():
@@ -296,7 +419,9 @@ def stage_stream(ctx=None) -> Record:
           f"p50={stream['decode_step_latency']['p50_ms']:.2f}ms "
           f"p99={stream['decode_step_latency']['p99_ms']:.2f}ms, "
           f"ttft p50={stream['ttft']['p50_ms']:.1f}ms "
-          f"p99={stream['ttft']['p99_ms']:.1f}ms")
+          f"p99={stream['ttft']['p99_ms']:.1f}ms "
+          f"(queue p50={stream['ttft_queue']['p50_ms']:.1f}ms "
+          f"p99={stream['ttft_queue']['p99_ms']:.1f}ms)")
     return Record(
         section=("serving", "stream"), data=stream,
         claims=(
@@ -370,6 +495,48 @@ def stage_long_context(ctx=None) -> Record:
                   gate="flip margin < 2 * max|dlogits|"),
             Claim("long_context_no_page_leaks", lc["no_page_leaks"],
                   gate="0 pages in use after drain, all bit widths"),),
+        claims_path=("serving", "claims"))
+
+
+def stage_serve_load(ctx=None) -> Record:
+    cfg, params = _setup()
+    load = bench_serve_load(cfg, params)
+    sh, un = load["shared"], load["unshared"]
+    print(f"# serve_load: unshared {un['tokens_per_s']:.1f} tok/s "
+          f"({un['pages_alloc_per_request']:.1f} pages/req, "
+          f"{un['preemptions']} preempt) vs shared "
+          f"{sh['tokens_per_s']:.1f} tok/s "
+          f"({sh['pages_alloc_per_request']:.1f} pages/req, "
+          f"{sh['shared_page_hits']} hits, {sh['cow_forks']} forks) -> "
+          f"{load['shared_over_unshared_tps']:.2f}x tps, "
+          f"{load['pages_per_request_reduction']:.2f}x fewer pages/req")
+    print(f"# serve_load: ttft p99 shared={sh['ttft']['p99_ms']:.0f}ms "
+          f"(queue {sh['ttft_queue']['p99_ms']:.0f}ms) unshared="
+          f"{un['ttft']['p99_ms']:.0f}ms "
+          f"(queue {un['ttft_queue']['p99_ms']:.0f}ms); itl p50 "
+          f"shared={sh['itl']['p50_ms']:.1f}ms "
+          f"unshared={un['itl']['p50_ms']:.1f}ms; "
+          f"tokens_identical={load['tokens_identical']}")
+    return Record(
+        section=("serving", "load"), data=load,
+        claims=(
+            Claim("serve_load_tokens_identical",
+                  load["tokens_identical"],
+                  gate="shared greedy tokens == unshared greedy tokens"),
+            Claim("serve_load_shared_tps_geq_1_3x",
+                  load["shared_over_unshared_tps"] >= 1.3,
+                  value=load["shared_over_unshared_tps"],
+                  gate=">= 1.3x unshared tokens/s at pool pressure"),
+            Claim("serve_load_pages_per_request_reduction_geq_2x",
+                  load["pages_per_request_reduction"] >= 2.0,
+                  value=load["pages_per_request_reduction"],
+                  gate=">= 2x fewer physical pages per request"),
+            Claim("serve_load_p99_ttft_shared_leq_unshared",
+                  load["ttft_p99_shared_over_unshared"] <= 0.8,
+                  value=load["ttft_p99_shared_over_unshared"],
+                  gate="shared p99 TTFT <= 0.8x unshared"),
+            Claim("serve_load_no_page_leaks", load["no_page_leaks"],
+                  gate="0 pages in use after drain, both arms"),),
         claims_path=("serving", "claims"))
 
 

@@ -5,8 +5,9 @@ One place declares what the benchmark layer runs (DESIGN.md §Campaign):
 * ``engine-smoke``  — the seven engine runs (walltime / payload / fusion /
   fused-range / group-specs / topology backends / mix sweep) emitting the
   historical ``BENCH_engine.json`` sections + CI-gated ``claims``;
-* ``serve-smoke``   — the serving stream / agreement / long-context runs
-  (three chained stages — agreement's leak gate reads the stream section);
+* ``serve-smoke``   — the serving stream / agreement / long-context /
+  serve-load runs (chained stages — agreement's leak gate reads the
+  stream section; serve-load gates the prefix-sharing claims);
 * ``paper-figures`` — Figs. 2-6 reproductions, one run per figure;
 * ``lm-sweep``      — the quantized-vs-unquantized LM baseline pair plus
   the layer-wise bits-to-loss grid (groups x censor_mode x mix_backend),
@@ -59,6 +60,10 @@ SERVING_STAGES = (
     stage("serving-long-context",
           "benchmarks.bench_serving:stage_long_context",
           deps=["serving-stream"], names=["long_context"]),
+    # prefix sharing + watermark admission under Zipf pool pressure; the
+    # dep keeps serve-smoke serialized (one process, shared _setup cache)
+    stage("serving-load", "benchmarks.bench_serving:stage_serve_load",
+          deps=["serving-stream"], names=["load"]),
 )
 
 serve_smoke = register_campaign(

@@ -39,6 +39,35 @@ def time_per_call(fn: Callable, *args, reps: int = 3) -> Tuple[float, object]:
     return (time.perf_counter() - t0) / reps * 1e6, out
 
 
+def interleaved_median(fns: Iterable[Callable[[], object]], *,
+                       rounds: int = 7, iters: int = 1) -> Tuple[float, ...]:
+    """Median-of-``rounds`` per-call wall seconds for several callables,
+    timed in interleaved rounds (A B A B ...) rather than arm-by-arm.
+
+    Best-of-N timed arm-by-arm is the wrong discipline for RATIO gates on
+    a shared container: a background-load spike during one arm's window
+    skews the ratio even when both arms are unaffected code (the
+    ``fused_range_dispatch_leq_twopass`` flake — 1.07-1.29x on unchanged
+    code). Interleaving puts every arm inside every load window, and the
+    per-arm median over rounds rejects the spiky rounds instead of
+    rewarding whichever arm got the single quietest one. Each fn is
+    compiled/warmed with a blocked call before any timing starts.
+    """
+    fns = list(fns)
+    for fn in fns:
+        jax.block_until_ready(fn())
+    times = [[] for _ in fns]
+    for _ in range(rounds):
+        for j, fn in enumerate(fns):
+            out = None
+            t0 = time.perf_counter()
+            for _ in range(iters):
+                out = fn()
+            jax.block_until_ready(out)
+            times[j].append((time.perf_counter() - t0) / iters)
+    return tuple(float(np.median(t)) for t in times)
+
+
 def percentiles(seconds: Iterable[float]) -> Dict[str, float]:
     """p50/p99 latency summary in milliseconds."""
     arr = np.asarray(list(seconds), np.float64) * 1e3

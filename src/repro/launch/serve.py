@@ -30,12 +30,18 @@ from repro.serving.scheduler import (Scheduler, ServeConfig, per_slot_keys,
                                      sample_tokens)
 
 
-def make_prompts(cfg, prompt_lens, seed: int):
-    """Deterministic synthetic prompts, one per requested length."""
-    data = SyntheticLM(SyntheticLMConfig(cfg.vocab_size, max(prompt_lens),
-                                         seed=seed))
-    raw = data.batch(0, len(prompt_lens))["tokens"]
-    return [np.asarray(raw[i, :n], np.int32)
+def make_prompts(cfg, prompt_lens, seed: int, prefix_len: int = 0):
+    """Deterministic synthetic prompts, one per requested length. With
+    ``prefix_len`` > 0 every prompt starts with the SAME ``prefix_len``
+    tokens (a shared system prompt) — the workload ``--share-prefix``
+    deduplicates into shared physical pages."""
+    rows = len(prompt_lens) + (1 if prefix_len else 0)
+    data = SyntheticLM(SyntheticLMConfig(
+        cfg.vocab_size, prefix_len + max(prompt_lens), seed=seed))
+    raw = data.batch(0, rows)["tokens"]
+    prefix = np.asarray(raw[-1, :prefix_len], np.int32) \
+        if prefix_len else np.zeros((0,), np.int32)
+    return [np.concatenate([prefix, np.asarray(raw[i, :n], np.int32)])
             for i, n in enumerate(prompt_lens)]
 
 
@@ -147,13 +153,22 @@ def run_paged(cfg, params, prompts, decode_tokens: int, *,
     finished = sched.run()
     wall = time.time() - t0
     total = decode_tokens * len(prompts)
+    ttft = sorted(sched.ttft_s.values())
+    queue = sorted(sched.ttft_queue_s.values())
     return {"outputs": {i: finished[r] for i, r in enumerate(rids)},
             "wall_s": wall, "tokens_per_s": total / max(wall, 1e-9),
             "decode_steps": sched.decode_steps,
             "prefill_chunks": sched.prefill_chunks,
             "peak_pages_in_use": sched.peak_pages_in_use,
             "final_pages_in_use": sched.pool.in_use,
-            "page_bytes": paging.cache_page_bytes(sched.cache)}
+            "page_bytes": paging.cache_page_bytes(sched.cache),
+            "pages_alloc_events": sched.pages_alloc_events,
+            "shared_page_hits": sched.shared_page_hits,
+            "cow_forks": sched.cow_forks,
+            "preemptions": sched.preemptions,
+            "swa_recycled_pages": sched.swa_recycled_pages,
+            "ttft_p50_s": ttft[len(ttft) // 2] if ttft else 0.0,
+            "ttft_queue_p50_s": queue[len(queue) // 2] if queue else 0.0}
 
 
 def main(argv=None) -> dict:
@@ -181,6 +196,29 @@ def main(argv=None) -> dict:
                     help="KV-page storage width: 32 = full precision, 8/4 "
                          "= quantized code pools (default: "
                          "REPRO_SERVE_KV_BITS or 32)")
+    ap.add_argument("--prefix-len", type=int, default=0,
+                    help="prepend the SAME n synthetic tokens to every "
+                         "prompt (a shared system prompt) — pair with "
+                         "--share-prefix to map it once physically")
+    ap.add_argument("--share-prefix", action="store_true",
+                    help="copy-on-write prefix page sharing: requests whose "
+                         "prompts share full pages with live sequences map "
+                         "those physical pages instead of allocating "
+                         "(attention-only archs; auto-disabled elsewhere)")
+    ap.add_argument("--preempt", action="store_true",
+                    help="watermark admission + priority preemption instead "
+                         "of FIFO full reservation")
+    ap.add_argument("--preempt-mode", choices=("recompute", "swap"),
+                    default="recompute",
+                    help="evicted-request readmission: recompute the prefix "
+                         "or restore an NPZ swap of the slot slice")
+    ap.add_argument("--num-pages", type=int, default=None,
+                    help="physical pool size (default: 2x worst-case; set "
+                         "lower to exercise sharing/preemption under "
+                         "pool pressure)")
+    ap.add_argument("--swa-recycle", action="store_true",
+                    help="sliding-window archs: recycle pages that fall "
+                         "fully outside the attention window mid-request")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -200,27 +238,54 @@ def main(argv=None) -> dict:
           f"decode={args.decode_tokens} sample={args.sample}")
 
     params = registry.init_params(cfg, jax.random.PRNGKey(args.seed))
-    prompts = make_prompts(cfg, prompt_lens, args.seed)
+    prompts = make_prompts(cfg, prompt_lens, args.seed,
+                           prefix_len=args.prefix_len)
+    prompt_lens = [len(p) for p in prompts]
 
     if args.engine == "lockstep":
         out = run_lockstep(cfg, params, prompts, args.decode_tokens,
                            sample=args.sample, temperature=args.temperature,
                            batch=args.batch, seed=args.seed)
     else:
+        kinds = Scheduler._block_kinds(cfg)
+        if args.share_prefix and not kinds <= set(paging._ATTN_KINDS):
+            # recurrent state is not paged, so there is nothing to share —
+            # mirror the encoder-decoder fallback rather than erroring out
+            print(f"[serve] {cfg.name} has non-attention blocks "
+                  f"({sorted(kinds - set(paging._ATTN_KINDS))}): disabling "
+                  f"--share-prefix")
+            args.share_prefix = False
+        if args.swa_recycle and (
+                kinds != {"swa"}
+                or getattr(cfg, "sliding_window", None) is None):
+            print(f"[serve] {cfg.name} is not pure sliding-window "
+                  f"attention: disabling --swa-recycle")
+            args.swa_recycle = False
         max_ctx = max(prompt_lens) + args.decode_tokens
         pages_per_seq = paging.pages_needed(max_ctx, args.page_size)
         scfg = ServeConfig(
             max_seqs=args.batch, page_size=args.page_size,
-            num_pages=args.batch * pages_per_seq * 2,
+            num_pages=args.num_pages or args.batch * pages_per_seq * 2,
             pages_per_seq=pages_per_seq,
             prefill_chunk=args.prefill_chunk, sample=args.sample,
             temperature=args.temperature, seed=args.seed,
+            share_prefix=args.share_prefix, preempt=args.preempt,
+            preempt_mode=args.preempt_mode, swa_recycle=args.swa_recycle,
             **({} if args.kv_bits is None else {"kv_bits": args.kv_bits}))
         out = run_paged(cfg, params, prompts, args.decode_tokens,
                         serve_cfg=scfg)
     print(f"[serve] {len(prompt_lens)}x{args.decode_tokens} tokens in "
           f"{out['wall_s']:.2f}s ({out['tokens_per_s']:.1f} tok/s "
           f"aggregate, {out['decode_steps']} decode steps)")
+    if args.engine == "paged":
+        print(f"[serve] pages: alloc_events={out['pages_alloc_events']} "
+              f"shared_hits={out['shared_page_hits']} "
+              f"cow_forks={out['cow_forks']} "
+              f"preemptions={out['preemptions']} "
+              f"swa_recycled={out['swa_recycled_pages']} "
+              f"peak_in_use={out['peak_pages_in_use']}")
+        print(f"[serve] ttft p50={out['ttft_p50_s'] * 1e3:.1f}ms "
+              f"(queue {out['ttft_queue_p50_s'] * 1e3:.1f}ms)")
     print(f"[serve] sample continuation (req 0): "
           f"{out['outputs'][0].tolist()}")
     return out

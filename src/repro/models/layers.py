@@ -241,7 +241,20 @@ def init_paged_kv_cache(batch: int, num_pages: int, page_size: int,
     head_dim) plus per-(page, slot, KV-head) f32 ranges in
     ``k_scale``/``v_scale`` — entries are quantized at write time and
     dequantized at gather/kernel time (DESIGN.md §Serving, "KV page
-    quantization"). ``dtype`` then only shapes the kv_bits=32 pools."""
+    quantization"). ``dtype`` then only shapes the kv_bits=32 pools.
+
+    Copy-on-write contract: nothing at this layer knows whether a
+    physical page is referenced by one block-table row or many — sharing
+    is purely a block-table phenomenon, which is why prefix sharing
+    (serving/paging.PrefixIndex + fork_pages) needs ZERO kernel or
+    attention-path changes. The layer guarantees two properties the
+    sharing scheduler builds on: (1) a write is a deterministic function
+    of (k, v, position) — including quantized pools, where
+    ``kv_page_quantize`` rounds deterministically — so a fully written
+    page's bytes depend only on the tokens and positions it covers; and
+    (2) writes land strictly through ``block_tables``, so the scheduler
+    can guarantee exclusivity by forking BEFORE a write ever targets a
+    multiply-referenced page (DESIGN.md §Serving, "Prefix sharing")."""
     common = {
         "kv_pos": jnp.full((num_pages, page_size), -1, jnp.int32),
         "block_tables": jnp.full((batch, pages_per_seq), -1, jnp.int32),
@@ -282,6 +295,19 @@ def paged_kv_bits(cache, head_dim: int) -> int:
     if "k_scale" not in cache:
         return 32
     return 8 if cache["k_pages"].shape[-1] == head_dim else 4
+
+
+def paged_page_slabs(cache, pages):
+    """Everything physically stored for the given pool pages: a dict of
+    ``{leaf_name: (len(pages), page_size, ...)}`` slices over every pool
+    leaf (K/V payload, quantized scale side info, kv_pos). This is the
+    unit a copy-on-write fork must duplicate bit-exactly — the serving
+    tests compare donor and fork slabs for byte equality (and distinct
+    physical ids) to pin that a fork never aliases its donor."""
+    idx = jnp.asarray(pages, jnp.int32)
+    return {name: jnp.take(cache[name], idx, axis=0)
+            for name in ("k_pages", "v_pages", "k_scale", "v_scale",
+                         "kv_pos") if name in cache}
 
 
 def _paged_slots(cache, q_positions):

@@ -9,6 +9,16 @@ everything around it:
   FIFO-deterministic free bookkeeping, so a replayed run makes identical
   placement decisions; ``defrag()`` compacts live pages to the low indices
   and returns the remap the device applies with :func:`apply_page_remap`.
+  Pages are refcounted: ``alloc`` hands out pages at refcount 1,
+  ``retain`` lets a second sequence map the same physical page
+  (copy-on-write prefix sharing), and ``free`` only recycles a page once
+  its count reaches zero — ``free`` returns the recycled subset so the
+  caller knows which pages to invalidate on device.
+* ``PrefixIndex`` — full-page content hashes (chained on the parent
+  page's hash, so a page's identity encodes its whole prefix) mapping to
+  the physical page that first materialized that content. The scheduler
+  consults it at admission to map shared-prefix pages instead of
+  refilling them.
 * ``init_paged_cache`` — a paged decode cache with the exact pytree
   structure of ``registry.init_cache`` (stacked-unit axes and all), so the
   model stack scans it unchanged. Attention-family blocks get page pools;
@@ -27,8 +37,9 @@ serves through the contiguous path (DESIGN.md §Serving).
 from __future__ import annotations
 
 import functools
+import hashlib
 import heapq
-from typing import Dict, List, Sequence
+from typing import Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -55,13 +66,19 @@ class PagePool:
     Free pages live in a min-heap: every allocation takes the lowest ids
     available, so two runs over the same request stream produce identical
     block tables (the replayability contract the scheduler tests pin).
+
+    Pages carry refcounts for copy-on-write prefix sharing: ``alloc``
+    returns pages at count 1, ``retain`` bumps a live page when a second
+    block table maps it, and ``free`` decrements — a page only returns to
+    the free heap (and is reported back to the caller for device-side
+    kv_pos invalidation) when its count hits zero.
     """
 
     def __init__(self, num_pages: int):
         self.num_pages = int(num_pages)
         self._free: List[int] = list(range(self.num_pages))
         heapq.heapify(self._free)
-        self._allocated: set = set()
+        self._refs: Dict[int, int] = {}
 
     @property
     def free_count(self) -> int:
@@ -69,7 +86,9 @@ class PagePool:
 
     @property
     def in_use(self) -> int:
-        return len(self._allocated)
+        """Physical pages with refcount >= 1 (not the sum of refcounts —
+        a page shared by a thousand sequences still occupies one page)."""
+        return len(self._refs)
 
     def can_alloc(self, n: int) -> bool:
         return len(self._free) >= n
@@ -79,15 +98,38 @@ class PagePool:
             raise PageAllocError(
                 f"requested {n} pages, {len(self._free)} free")
         ids = [heapq.heappop(self._free) for _ in range(n)]
-        self._allocated.update(ids)
+        for i in ids:
+            self._refs[i] = 1
         return ids
 
-    def free(self, ids: Sequence[int]) -> None:
+    def retain(self, ids: Sequence[int]) -> None:
+        """Add a reference to live pages (a new block table maps them)."""
         for i in ids:
-            if i not in self._allocated:
+            i = int(i)
+            if i not in self._refs:
+                raise PageAllocError(f"retain of free page {i}")
+            self._refs[i] += 1
+
+    def refcount(self, page: int) -> int:
+        return self._refs.get(int(page), 0)
+
+    def free(self, ids: Sequence[int]) -> List[int]:
+        """Drop one reference per page; returns the subset whose count hit
+        zero and was recycled — only those may be kv_pos-invalidated on
+        device (other owners still attend through the rest)."""
+        recycled: List[int] = []
+        for i in ids:
+            i = int(i)
+            rc = self._refs.get(i)
+            if rc is None:
                 raise PageAllocError(f"double free of page {i}")
-            self._allocated.discard(i)
-            heapq.heappush(self._free, int(i))
+            if rc == 1:
+                del self._refs[i]
+                heapq.heappush(self._free, i)
+                recycled.append(i)
+            else:
+                self._refs[i] = rc - 1
+        return recycled
 
     def defrag(self) -> np.ndarray:
         """Compact live pages to the lowest physical ids.
@@ -96,9 +138,11 @@ class PagePool:
         every physical page id to its post-compaction id (live pages keep
         their relative order; free pages fill the tail). The caller must
         apply it to the device cache (:func:`apply_page_remap`) and to any
-        host-side page lists it holds. The pool's own free list is rebuilt
-        to the tail ids."""
-        live = sorted(self._allocated)
+        host-side page lists it holds (including a :class:`PrefixIndex`
+        via its ``remap``). Refcounts ride along with their page — a
+        multiply-referenced page stays multiply referenced at its new id.
+        The pool's own free list is rebuilt to the tail ids."""
+        live = sorted(self._refs)
         old_to_new = np.full((self.num_pages,), -1, np.int32)
         for new, old in enumerate(live):
             old_to_new[old] = new
@@ -107,10 +151,83 @@ class PagePool:
             if old_to_new[old] < 0:
                 old_to_new[old] = nxt
                 nxt += 1
-        self._allocated = set(range(len(live)))
+        self._refs = {int(old_to_new[p]): rc
+                      for p, rc in self._refs.items()}
         self._free = list(range(len(live), self.num_pages))
         heapq.heapify(self._free)
         return old_to_new
+
+
+# ---------------------------------------------------------- prefix index --
+class PrefixIndex:
+    """Content index over FULL pages for copy-on-write prefix sharing.
+
+    A page's identity is the chained hash ``h_i = sha256(h_{i-1} ||
+    tokens[i*ps:(i+1)*ps])`` with a fixed root — identical token windows
+    at different depths hash differently, so a hit means the ENTIRE
+    prefix up to and including that page matches. A hash maps to the SET
+    of physical pages holding that content (a same-tick cohort of
+    identical prompts materializes duplicates before any of them is
+    indexed), so the hash survives as long as ANY copy is live; lookup
+    returns the lowest live page id (deterministic placement). The
+    inverse map lets a recycled or defrag-remapped page be
+    dropped/followed. Only full, completely written pages are ever
+    registered: partial tails mutate, and the chain hash of a page is
+    only defined once all its tokens are known.
+    """
+
+    ROOT = b"paged-kv-prefix-root"
+
+    def __init__(self, page_size: int):
+        self.page_size = int(page_size)
+        self._by_hash: Dict[bytes, set] = {}
+        self._by_page: Dict[int, bytes] = {}
+
+    def __len__(self) -> int:
+        return len(self._by_hash)
+
+    @staticmethod
+    def chain(parent: bytes, tokens) -> bytes:
+        return hashlib.sha256(
+            parent + np.asarray(tokens, np.int32).tobytes()).digest()
+
+    def hash_chain(self, tokens) -> List[bytes]:
+        """Chained hash for every full page of ``tokens`` (len // ps)."""
+        toks = np.asarray(tokens, np.int32)
+        ps, h, out = self.page_size, self.ROOT, []
+        for i in range(len(toks) // ps):
+            h = self.chain(h, toks[i * ps:(i + 1) * ps])
+            out.append(h)
+        return out
+
+    def lookup(self, h: bytes) -> Optional[int]:
+        pages = self._by_hash.get(h)
+        return min(pages) if pages else None
+
+    def register(self, h: bytes, page: int) -> None:
+        """A physical page indexes at most one hash; one hash may be held
+        by several duplicate pages."""
+        page = int(page)
+        if page in self._by_page:
+            return
+        self._by_hash.setdefault(h, set()).add(page)
+        self._by_page[page] = h
+
+    def drop_page(self, page: int) -> None:
+        h = self._by_page.pop(int(page), None)
+        if h is not None:
+            pages = self._by_hash[h]
+            pages.discard(int(page))
+            if not pages:
+                del self._by_hash[h]
+
+    def remap(self, old_to_new) -> None:
+        """Follow a :meth:`PagePool.defrag` permutation."""
+        o2n = np.asarray(old_to_new)
+        self._by_page = {int(o2n[p]): h for p, h in self._by_page.items()}
+        self._by_hash = {}
+        for p, h in self._by_page.items():
+            self._by_hash.setdefault(h, set()).add(p)
 
 
 # ------------------------------------------------------- cache structure --
@@ -202,12 +319,17 @@ def _invalidate_kv_pos(x, stacked, name, row):
 
 
 @functools.partial(jax.jit, donate_argnums=(0,))
-def admit_slot(cache, slot, row):
+def admit_slot(cache, slot, row, fresh_row=None):
     """Bind sequence slot ``slot`` to the physical pages in ``row``
     ((pages_per_seq,) int32, -1 = unmapped tail): writes the block-table
-    row, invalidates kv_pos on every newly bound page (stale entries from
-    a previous owner must never be attendable), and zeroes the slot's
-    recurrent state."""
+    row, invalidates kv_pos on every newly bound FRESH page (stale
+    entries from a previous owner must never be attendable), and zeroes
+    the slot's recurrent state. ``fresh_row`` defaults to ``row``; a
+    prefix-sharing admission passes only the freshly allocated subset —
+    shared pages keep their kv_pos (that content is exactly what the new
+    sequence attends through)."""
+    inval = row if fresh_row is None else fresh_row
+
     def table(x, stacked):
         if stacked:
             return x.at[:, slot].set(row)
@@ -220,7 +342,7 @@ def admit_slot(cache, slot, row):
 
     return _map_cache(
         cache, lambda x, stacked, name: _invalidate_kv_pos(x, stacked,
-                                                           name, row),
+                                                           name, inval),
         table, seq)
 
 
@@ -228,7 +350,10 @@ def admit_slot(cache, slot, row):
 def release_slot(cache, slot, row):
     """Unbind slot ``slot``: clear its block-table row and invalidate the
     released pages' kv_pos so the recycled pages are inert until the next
-    ``admit_slot`` rebinds them."""
+    ``admit_slot`` rebinds them. With refcounted sharing the caller must
+    pass only the RECYCLED pages (refcount hit zero) in ``row`` — pages
+    still referenced by another sequence keep their content attendable;
+    without sharing the slot's own row is exactly that set."""
     def table(x, stacked):
         empty = jnp.full(row.shape, -1, jnp.int32)
         if stacked:
@@ -239,6 +364,148 @@ def release_slot(cache, slot, row):
         cache, lambda x, stacked, name: _invalidate_kv_pos(x, stacked,
                                                            name, row),
         table, lambda x, stacked: x)
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def map_pages(cache, slot, logicals, pages):
+    """Bind physical ``pages`` at logical indices ``logicals`` of slot
+    ``slot``'s block-table row (demand paging under watermark admission:
+    pages are mapped when the sequence actually reaches them, not
+    reserved up front). Freshly allocated pages get their kv_pos
+    invalidated."""
+    def table(x, stacked):
+        if stacked:
+            return x.at[:, slot, logicals].set(pages)
+        return x.at[slot, logicals].set(pages)
+
+    return _map_cache(
+        cache, lambda x, stacked, name: _invalidate_kv_pos(x, stacked,
+                                                           name, pages),
+        table, lambda x, stacked: x)
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def unmap_pages(cache, slot, logicals, recycled_row):
+    """Drop logical pages from slot ``slot``'s block-table row (SWA
+    window recycling: pages fully behind the attention window are dead
+    weight). Only ``recycled_row`` — the pages whose refcount hit zero —
+    is kv_pos-invalidated."""
+    def table(x, stacked):
+        neg = jnp.full(logicals.shape, -1, jnp.int32)
+        if stacked:
+            return x.at[:, slot, logicals].set(neg)
+        return x.at[slot, logicals].set(neg)
+
+    return _map_cache(
+        cache, lambda x, stacked, name: _invalidate_kv_pos(x, stacked,
+                                                           name,
+                                                           recycled_row),
+        table, lambda x, stacked: x)
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def fork_pages(cache, slot, logicals, srcs, dsts, write_pos):
+    """Copy-on-write fork: duplicate physical pages ``srcs`` into
+    ``dsts`` across EVERY pool leaf (f32 K/V slabs, or quantized codes
+    AND their scale side info — a forked page must be bit-identical to
+    its donor), rebind slot ``slot``'s block-table row at ``logicals`` to
+    the copies, and invalidate kv_pos entries at positions >=
+    ``write_pos`` in the copies: the donor may have written its own
+    divergent tokens past the shared point, and those must never be
+    attendable by the forker."""
+    def pool(x, stacked, name):
+        axis = 1 if stacked else 0
+        slab = jnp.take(x, srcs, axis=axis)
+        if name == "kv_pos":
+            slab = jnp.where(slab < write_pos, slab, -1)
+        if stacked:
+            return x.at[:, dsts].set(slab)
+        return x.at[dsts].set(slab)
+
+    def table(x, stacked):
+        if stacked:
+            return x.at[:, slot, logicals].set(dsts)
+        return x.at[slot, logicals].set(dsts)
+
+    return _map_cache(cache, pool, table, lambda x, stacked: x)
+
+
+# -------------------------------------------------- preemption swap I/O --
+def _npz_safe(arr: np.ndarray) -> np.ndarray:
+    """bfloat16 (an ml_dtypes extension type) does not survive an NPZ
+    round-trip — store its raw bits as uint16."""
+    if arr.dtype.name == "bfloat16":
+        return arr.view(np.uint16)
+    return arr
+
+
+def _npz_restore(slab: np.ndarray, target_dtype) -> np.ndarray:
+    if jnp.dtype(target_dtype).name == "bfloat16" \
+            and slab.dtype == np.uint16:
+        return slab.view(jnp.bfloat16.dtype)
+    return slab
+
+
+def extract_pages(cache, pages) -> Dict[str, np.ndarray]:
+    """Pull the pool slabs (K/V payload + scales + kv_pos) for physical
+    ``pages`` to host numpy, keyed by the leaf's tree path — the state a
+    swap-mode preemption saves so readmission can skip recompute."""
+    idx = jnp.asarray(pages, jnp.int32)
+    out: Dict[str, np.ndarray] = {}
+    for path, leaf in jax.tree_util.tree_leaves_with_path(cache):
+        name, stacked = _leaf_info(path)
+        if name in _POOL_LEAVES:
+            axis = 1 if stacked else 0
+            out[jax.tree_util.keystr(path)] = _npz_safe(
+                np.asarray(jnp.take(leaf, idx, axis=axis)))
+    return out
+
+
+def insert_pages(cache, slabs: Dict[str, np.ndarray], pages):
+    """Inverse of :func:`extract_pages` into freshly allocated ``pages``
+    (the physical ids need not match the ones extracted — block tables
+    are rebuilt by the caller)."""
+    idx = jnp.asarray(pages, jnp.int32)
+
+    def leaf(path, x):
+        key = jax.tree_util.keystr(path)
+        if key not in slabs:
+            return x
+        _, stacked = _leaf_info(path)
+        slab = jnp.asarray(_npz_restore(slabs[key], x.dtype), x.dtype)
+        if stacked:
+            return x.at[:, idx].set(slab)
+        return x.at[idx].set(slab)
+    return jax.tree_util.tree_map_with_path(leaf, cache)
+
+
+def extract_seq_state(cache, slot: int) -> Dict[str, np.ndarray]:
+    """Per-sequence (recurrent) leaves sliced at ``slot`` — the other
+    half of a swap-mode preemption for hybrid/recurrent architectures."""
+    out: Dict[str, np.ndarray] = {}
+    for path, leaf in jax.tree_util.tree_leaves_with_path(cache):
+        name, stacked = _leaf_info(path)
+        if name in _POOL_LEAVES or name == "block_tables":
+            continue
+        axis = 1 if stacked else 0
+        out[jax.tree_util.keystr(path)] = _npz_safe(np.asarray(
+            jax.lax.dynamic_slice_in_dim(leaf, slot, 1, axis=axis)))
+    return out
+
+
+def insert_seq_state(cache, state: Dict[str, np.ndarray], slot: int):
+    """Inverse of :func:`extract_seq_state` (possibly into a different
+    slot)."""
+    def leaf(path, x):
+        key = jax.tree_util.keystr(path)
+        if key not in state:
+            return x
+        _, stacked = _leaf_info(path)
+        axis = 1 if stacked else 0
+        slab = jnp.asarray(_npz_restore(state[key], x.dtype), x.dtype)
+        return jax.lax.dynamic_update_slice_in_dim(x, slab, slot,
+                                                   axis=axis)
+    return jax.tree_util.tree_map_with_path(leaf, cache)
 
 
 @functools.partial(jax.jit, donate_argnums=(0,))

@@ -11,29 +11,61 @@ and new requests are admitted the moment the pool can hold them.
 Scheduling policy (all ties broken deterministically, so a replayed run is
 bit-identical — pinned by ``tests/test_serving.py``):
 
-* **Admission** — strict FIFO over arrival order, head-of-line blocking:
-  the oldest waiting request is admitted iff a sequence slot is free AND
-  the pool can reserve its FULL worst-case footprint
-  (ceil((prompt + max_new_tokens) / page_size) pages). Full reservation
-  means an admitted request can always run to completion — no deadlock,
-  no preemption machinery. Slots and pages are allocated lowest-id-first.
+* **Admission** — two modes. The default (``preempt=False``) is strict
+  FIFO with head-of-line blocking: the oldest waiting request is admitted
+  iff a sequence slot is free AND the pool can reserve its FULL worst-case
+  footprint (ceil((prompt + max_new_tokens) / page_size) pages) — an
+  admitted request can always run to completion, no preemption machinery.
+  ``preempt=True`` switches to watermark admission: a request is admitted
+  on its *near-term* need only (unshared prompt pages now + a
+  ``decode_watermark`` of decode pages), decode pages are demand-mapped
+  as the sequence reaches them, and a low/high free-page watermark
+  (``wm_low``/``wm_high``) gates admission with hysteresis. When the pool
+  runs dry mid-flight, a victim is preempted — strictly lower priority
+  first, most-recently-admitted among equals — and re-queued, resuming
+  later either by recompute (teacher-forced replay of its own tokens; the
+  per-(request, position) PRNG keys make the continuation bit-identical)
+  or by NPZ swap of its page slabs + recurrent slot state
+  (``preempt_mode``). Waiting requests age (``aging_ticks``) so low
+  priority cannot starve, and a missed ``deadline`` escalates priority —
+  but aging only orders the QUEUE and (frozen into the slot at
+  admission) shields an aged-in runner; preemption itself triggers on
+  base + deadline priority only, so an aged waiter cannot evict a
+  runner (with both sides aging in lockstep that would churn forever).
+* **Prefix sharing** (``share_prefix=True``) — full prompt pages are
+  content-hashed (chained, so a hit implies the whole prefix matches)
+  into a :class:`repro.serving.paging.PrefixIndex`; admission maps
+  matched pages into the new block table with a refcount bump instead of
+  refilling them, and prefill simply starts after the shared region. The
+  first write into a shared page (only reachable for an exactly
+  page-aligned fully-matched prompt, where the re-fed last prompt token
+  lands in the final shared page) copy-on-write forks it. Sharing is a
+  pure block-table phenomenon: kernels and the decode step are unchanged
+  and the decoded tokens are bit-identical to an unshared run.
 * **Chunked prefill** — an admitted prompt is written in exact
   ``prefill_chunk``-token chunks (batch-1 steps against the shared pools
-  via ``paging.slice_slot``); the remainder — always at least the last
-  prompt token — rides the shared decode steps as teacher-forced tokens.
-  Chunks are never padded, so recurrent state (Mamba2/xLSTM) sees only
-  real tokens and the paged path stays bit-comparable to the contiguous
-  one.
+  via ``paging.slice_slot``) starting after any shared prefix; the
+  remainder — always at least the last known token — rides the shared
+  decode steps as teacher-forced tokens. Chunks are never padded, so
+  recurrent state (Mamba2/xLSTM) sees only real tokens and the paged path
+  stays bit-comparable to the contiguous one.
 * **Decode** — ONE jitted step for all slots per scheduler tick: inactive
   slots carry position -1 (their pool writes are dropped, their recurrent
   state is re-zeroed at the next admission). Sampling (greedy or
   temperature) happens INSIDE the jitted step — no per-token host
   ``argmax`` round-trip — with a per-(request, position) PRNG key, so a
   sequence's samples do not depend on which other requests share the
-  batch.
+  batch (and a preempted+recomputed sequence redraws identical tokens).
 * **Eviction** — a sequence finishing its ``max_new_tokens`` releases its
-  slot and pages in the same tick; ``defrag_every`` optionally compacts
-  live pages (content-preserving: decode after a defrag is bit-identical).
+  slot and drops one reference per page (pages recycle at refcount zero);
+  ``defrag_every`` optionally compacts live pages (content-preserving,
+  sharing- and refcount-preserving: decode after a defrag is
+  bit-identical).
+* **SWA window recycling** (``swa_recycle=True``, uniform sliding-window
+  architectures only) — a page whose last token can never again fall
+  inside the attention window (``(l+1)*page_size - 1 <= fed - window``)
+  is freed mid-flight instead of held to end-of-request, bounding a
+  sequence's live pages by the window.
 
 ``AsyncServer`` wraps the synchronous core for asyncio callers: awaiting
 ``generate()`` yields to a pump task that advances ``step()`` until the
@@ -44,9 +76,10 @@ from __future__ import annotations
 import asyncio
 import dataclasses
 import os
+import tempfile
 import time
 from collections import deque
-from typing import Dict, List, Optional, Sequence
+from typing import Dict, List, Optional, Sequence, Set
 
 import jax
 import jax.numpy as jnp
@@ -78,6 +111,17 @@ class ServeConfig:
     # 32 = full-precision pages; 8/4 = quantized code pools + scale side
     # info (DESIGN.md §Serving, "KV page quantization")
     kv_bits: int = dataclasses.field(default_factory=_env_kv_bits)
+    # --- production-load policies (DESIGN.md §Serving, "Prefix sharing"
+    # and "Admission & preemption"); all default OFF so the reservation
+    # FIFO contract above stays the out-of-the-box behavior -------------
+    share_prefix: bool = False        # CoW prefix page sharing
+    preempt: bool = False             # watermark admission + preemption
+    preempt_mode: str = "recompute"   # "recompute" | "swap"
+    decode_watermark: int = 2         # near-term decode pages at admission
+    wm_low: float = 0.0               # close admission below this free frac
+    wm_high: float = 0.0              # ... reopen at/above this free frac
+    aging_ticks: int = 64             # waiting ticks per +1 eff. priority
+    swa_recycle: bool = False         # free pages behind the SWA window
 
     @property
     def max_context(self) -> int:
@@ -89,6 +133,12 @@ class ServeConfig:
         if self.kv_bits not in (32, 8, 4):
             raise ValueError(f"kv_bits must be 32, 8 or 4, "
                              f"got {self.kv_bits}")
+        if self.preempt_mode not in ("recompute", "swap"):
+            raise ValueError(f"unknown preempt_mode {self.preempt_mode!r}")
+        if not (0.0 <= self.wm_low <= self.wm_high < 1.0):
+            raise ValueError("need 0 <= wm_low <= wm_high < 1")
+        if self.decode_watermark < 1 or self.aging_ticks < 1:
+            raise ValueError("decode_watermark and aging_ticks must be >=1")
 
 
 @dataclasses.dataclass
@@ -96,17 +146,50 @@ class Request:
     rid: int
     prompt: np.ndarray                # (plen,) int32
     max_new_tokens: int
+    priority: int = 0                 # higher wins (admission + victims)
+    deadline: Optional[int] = None    # scheduler tick; missing it escalates
+
+
+@dataclasses.dataclass
+class _WaitEntry:
+    """A queued (or preempted-and-requeued) request."""
+    req: Request
+    enq_step: int                                 # aging baseline
+    generated: List[int] = dataclasses.field(default_factory=list)
+    swap_path: Optional[str] = None               # NPZ from swap preemption
+    last_tok_t: Optional[float] = None            # ITL continuity
 
 
 @dataclasses.dataclass
 class _Slot:
     req: Request
-    pages: List[int]
-    fed: int = 0                      # tokens already written to the cache
-    generated: Optional[List[int]] = None
+    pages: Dict[int, int]             # logical page -> physical page
+    shared: Set[int]                  # logicals mapped copy-on-write
+    fed: int                          # tokens already written to the cache
+    bulk_end: int                     # prefill-chunk target (rest decodes)
+    admit_step: int
+    enq_step: int = 0                 # original enqueue tick (aging survives
+    #                                   preemption — else a preempted request
+    #                                   restarts its starvation clock)
+    prio: int = 0                     # effective priority AT admission: an
+    #                                   aged-in request keeps its boost, so
+    #                                   the next high-priority arrival cannot
+    #                                   immediately re-evict it
+    generated: List[int] = dataclasses.field(default_factory=list)
+    chain: bytes = paging.PrefixIndex.ROOT        # hash chain at next_reg
+    next_reg: int = 0                 # next logical page to content-index
+    last_tok_t: Optional[float] = None
+    stalled: bool = False             # no page could be found this tick
 
-    def __post_init__(self):
-        self.generated = [] if self.generated is None else self.generated
+    @property
+    def known(self) -> int:
+        """Tokens whose values are known (prompt + already-generated)."""
+        return len(self.req.prompt) + len(self.generated)
+
+    def token_at(self, f: int) -> int:
+        plen = len(self.req.prompt)
+        return int(self.req.prompt[f]) if f < plen \
+            else int(self.generated[f - plen])
 
 
 def sample_tokens(logits, keys, mode: str, temperature: float):
@@ -143,6 +226,20 @@ class Scheduler:
             model_cfg, cfg.max_seqs, cfg.num_pages, cfg.page_size,
             cfg.pages_per_seq, dtype, kv_bits=cfg.kv_bits)
         self.pool = paging.PagePool(cfg.num_pages)
+        kinds = self._block_kinds(model_cfg)
+        if cfg.share_prefix and not kinds <= set(paging._ATTN_KINDS):
+            raise ValueError(
+                "share_prefix requires a pure attention-family stack: "
+                "recurrent state summarizes the whole prefix, so a shared "
+                f"page cannot skip its prefill (got kinds {sorted(kinds)})")
+        if cfg.swa_recycle and (
+                kinds != {"swa"}
+                or getattr(model_cfg, "sliding_window", None) is None):
+            raise ValueError(
+                "swa_recycle requires every block to be sliding-window "
+                f"attention with a set window (got kinds {sorted(kinds)})")
+        self.index = paging.PrefixIndex(cfg.page_size) \
+            if cfg.share_prefix else None
         self.slots: List[Optional[_Slot]] = [None] * cfg.max_seqs
         self.waiting: deque = deque()
         self.finished: Dict[int, np.ndarray] = {}
@@ -152,15 +249,32 @@ class Scheduler:
         self.prefill_chunks = 0
         self.peak_pages_in_use = 0
         self._base_key = jax.random.PRNGKey(cfg.seed)
-        self._last_sampled = np.zeros((cfg.max_seqs,), np.int32)
+        self._gate_closed = False
+        self._swap_dir: Optional[str] = None
+        # --- counters the load bench reports -----------------------------
+        self.cow_forks = 0
+        self.preemptions = 0
+        self.forced_preemptions = 0
+        self.swa_recycled_pages = 0
+        self.shared_page_hits = 0           # logical pages mapped via index
+        self.pages_alloc_events = 0         # pages physically allocated
         # tail-latency bookkeeping (bench_serving reports p50/p99 + TTFT):
-        # per-decode-step device walls (bounded window — a long-running
-        # server must not grow without limit) and time-to-first-token per
-        # finished-or-flying request, measured from submit()
+        # per-decode-step device walls (bounded windows — a long-running
+        # server must not grow without limit), per-request time-to-first-
+        # token measured from submit() with its queueing component broken
+        # out (ttft_queue_s = submit -> first admission), and inter-token
+        # gaps (preemption stalls included — they are user-visible)
         self.decode_step_s: deque = deque(maxlen=4096)
+        self.itl_s: deque = deque(maxlen=8192)
         self.ttft_s: Dict[int, float] = {}
+        self.ttft_queue_s: Dict[int, float] = {}
         self._submit_t: Dict[int, float] = {}
         self._build_steps()
+
+    @staticmethod
+    def _block_kinds(model_cfg) -> Set[str]:
+        unit, n_full, rem = registry.segments(model_cfg)
+        return (set(unit) if n_full else set()) | set(rem)
 
     # ------------------------------------------------------- jitted steps --
     def _build_steps(self):
@@ -192,13 +306,15 @@ class Scheduler:
         self._decode = jax.jit(decode, donate_argnums=(1,))
 
     # ------------------------------------------------------------- intake --
-    def submit(self, prompt: Sequence[int], max_new_tokens: int) -> int:
+    def submit(self, prompt: Sequence[int], max_new_tokens: int,
+               priority: int = 0, deadline: Optional[int] = None) -> int:
         prompt = np.asarray(prompt, np.int32)
         total = len(prompt) + max_new_tokens
         need = paging.pages_needed(total, self.cfg.page_size)
         if len(prompt) < 1 or max_new_tokens < 1:
             raise ValueError("need a non-empty prompt and max_new_tokens>=1")
-        if total > self.cfg.max_context or need > self.cfg.num_pages:
+        headroom = (1 + self.cfg.decode_watermark) if self.cfg.preempt else 0
+        if total > self.cfg.max_context or need + headroom > self.cfg.num_pages:
             raise ValueError(
                 f"request of {total} tokens exceeds the serve capacity "
                 f"(max_context={self.cfg.max_context}, "
@@ -206,130 +322,483 @@ class Scheduler:
         rid = self._next_rid
         self._next_rid += 1
         self._submit_t[rid] = time.perf_counter()
-        self.waiting.append(Request(rid, prompt, int(max_new_tokens)))
+        self.waiting.append(_WaitEntry(
+            Request(rid, prompt, int(max_new_tokens), int(priority),
+                    deadline), self.steps))
         return rid
 
     @property
     def busy(self) -> bool:
         return bool(self.waiting) or any(s is not None for s in self.slots)
 
-    # -------------------------------------------------------------- steps --
-    def _admit(self):
-        while self.waiting:
-            req = self.waiting[0]
-            free_slots = [i for i, s in enumerate(self.slots) if s is None]
-            need = paging.pages_needed(len(req.prompt) + req.max_new_tokens,
-                                       self.cfg.page_size)
-            if not free_slots or not self.pool.can_alloc(need):
-                return                       # FIFO head-of-line blocking
-            self.waiting.popleft()
-            slot = free_slots[0]
-            pages = self.pool.alloc(need)
-            row = paging.build_block_table_row(pages, self.cfg.pages_per_seq)
-            self.cache = paging.admit_slot(self.cache, jnp.int32(slot),
-                                           jnp.asarray(row))
-            self.slots[slot] = _Slot(req, pages)
+    # --------------------------------------------------------- accounting --
+    def _alloc(self, n: int) -> List[int]:
+        self.pages_alloc_events += n
+        return self.pool.alloc(n)
 
-    def _bulk_prefill(self):
-        chunk = self.cfg.prefill_chunk
-        for slot, st in enumerate(self.slots):
-            if st is None or st.fed > 0:
+    def _free(self, phys: Sequence[int]) -> List[int]:
+        recycled = self.pool.free(phys)
+        if self.index is not None:
+            for p in recycled:
+                self.index.drop_page(p)
+        return recycled
+
+    def _preempt_priority(self, e: _WaitEntry) -> int:
+        """Priority that can TRIGGER a preemption: base + deadline
+        escalation, NO aging term. Aging decides queue order and (frozen
+        into the slot at admission) shields an aged-in runner, but a
+        merely-aged waiter must not evict a runner: with both sides aging
+        in lockstep that degenerates into perpetual preempt/readmit churn
+        where recompute replay consumes every residency (zero net new
+        tokens — a livelock, caught by test_aging_prevents_starvation)."""
+        p = e.req.priority
+        if e.req.deadline is not None and self.steps > e.req.deadline:
+            p += 1 + (self.steps - e.req.deadline) // self.cfg.aging_ticks
+        return p
+
+    def _eff_priority(self, e: _WaitEntry) -> int:
+        return self._preempt_priority(e) \
+            + (self.steps - e.enq_step) // self.cfg.aging_ticks
+
+    # ---------------------------------------------------- admission plans --
+    def _plan(self, e: _WaitEntry) -> Dict:
+        """Resolve what admitting ``e`` takes: shared-prefix hits, the
+        first token to (re)feed, and the fresh-page bill for each mode."""
+        ps = self.cfg.page_size
+        req = e.req
+        plen = len(req.prompt)
+        known = plen + len(e.generated)
+        seq = np.concatenate([req.prompt,
+                              np.asarray(e.generated, np.int32)]) \
+            if e.generated else req.prompt
+        total_pages = paging.pages_needed(plen + req.max_new_tokens, ps)
+        k, shared, chain = 0, {}, paging.PrefixIndex.ROOT
+        if self.index is not None:
+            hashes = self.index.hash_chain(seq)
+            for h in hashes:
+                page = self.index.lookup(h)
+                if page is None:
+                    break
+                shared[k] = page
+                chain = h
+                k += 1
+        s0 = min(k * ps, known - 1)
+        fork = k * ps > s0          # re-fed tail token hits a shared page
+        fresh_prompt = list(range(k, (known - 1) // ps + 1))
+        return dict(req=req, seq=seq, known=known, total_pages=total_pages,
+                    k=k, shared=shared, chain=chain, s0=s0, fork=fork,
+                    fresh_prompt=fresh_prompt)
+
+    def _near_need(self, e: _WaitEntry, plan: Optional[Dict] = None) -> int:
+        """Pages a watermark admission allocates now-or-imminently."""
+        if e.swap_path is not None:
+            with np.load(e.swap_path, allow_pickle=True) as meta:
+                return len(meta["logicals"]) + self.cfg.decode_watermark
+        plan = plan or self._plan(e)
+        return (len(plan["fresh_prompt"]) + (1 if plan["fork"] else 0)
+                + self.cfg.decode_watermark)
+
+    # -------------------------------------------------------------- admit --
+    def _admit(self) -> int:
+        if self.cfg.preempt:
+            return self._admit_watermark()
+        return self._admit_reserve()
+
+    def _admit_reserve(self) -> int:
+        admitted = 0
+        while self.waiting:
+            e = self.waiting[0]
+            free_slots = [i for i, s in enumerate(self.slots) if s is None]
+            if not free_slots:
+                return admitted
+            plan = self._plan(e)
+            need = (plan["total_pages"] - plan["k"]
+                    + (1 if plan["fork"] else 0))
+            if not self.pool.can_alloc(need):
+                return admitted          # FIFO head-of-line blocking
+            self.waiting.popleft()
+            self._admit_entry(e, free_slots[0], plan, reserve=True)
+            admitted += 1
+        return admitted
+
+    def _admit_watermark(self) -> int:
+        cfg = self.cfg
+        if self._gate_closed and \
+                self.pool.free_count >= cfg.wm_high * cfg.num_pages:
+            self._gate_closed = False
+        admitted = 0
+        while self.waiting:
+            e = min(self.waiting,
+                    key=lambda w: (-self._eff_priority(w), w.req.rid))
+            free_slots = [i for i, s in enumerate(self.slots) if s is None]
+            if not free_slots:
+                victim = self._pick_victim(set(), self._preempt_priority(e))
+                if victim is None:
+                    break
+                self._preempt(victim)
                 continue
-            # exact chunks over the first plen-1 tokens; the rest (at least
-            # the last prompt token) rides the shared decode steps
-            n_bulk = (len(st.req.prompt) - 1) // chunk
-            for c in range(n_bulk):
-                toks = st.req.prompt[c * chunk:(c + 1) * chunk][None, :]
-                pos = np.arange(c * chunk, (c + 1) * chunk,
-                                dtype=np.int32)[None, :]
+            if self._gate_closed:
+                break
+            plan = None if e.swap_path else self._plan(e)
+            near = self._near_need(e, plan)
+            if not self.pool.can_alloc(near):
+                victim = self._pick_victim(set(), self._preempt_priority(e))
+                if victim is None:
+                    break
+                self._preempt(victim)
+                continue
+            if self.pool.free_count - near < cfg.wm_low * cfg.num_pages:
+                self._gate_closed = True
+                if any(s is not None for s in self.slots):
+                    break               # drain below the low watermark
+            self.waiting.remove(e)
+            # a preempted entry's plan may be stale after the victim free
+            self._admit_entry(e, free_slots[0],
+                              plan if e.swap_path is None else None,
+                              reserve=False)
+            admitted += 1
+        return admitted
+
+    def _admit_entry(self, e: _WaitEntry, slot: int,
+                     plan: Optional[Dict], reserve: bool):
+        rid = e.req.rid
+        now = time.perf_counter()
+        if rid not in self.ttft_queue_s and rid in self._submit_t:
+            self.ttft_queue_s[rid] = now - self._submit_t[rid]
+            while len(self.ttft_queue_s) > 4096:
+                self.ttft_queue_s.pop(next(iter(self.ttft_queue_s)))
+        if e.swap_path is not None:
+            self._admit_swapped(e, slot)
+            return
+        plan = plan or self._plan(e)
+        ps, pps = self.cfg.page_size, self.cfg.pages_per_seq
+        k, shared, s0 = plan["k"], plan["shared"], plan["s0"]
+        if reserve:
+            fresh_logicals = list(range(k, plan["total_pages"]))
+        else:
+            fresh_logicals = plan["fresh_prompt"]
+        n_fresh = len(fresh_logicals) + (1 if plan["fork"] else 0)
+        self.pool.retain(shared.values())
+        fresh = self._alloc(n_fresh)
+        fork_dst = fresh.pop() if plan["fork"] else None
+        pages = dict(shared)
+        pages.update(zip(fresh_logicals, fresh))
+        row = np.full((pps,), -1, np.int32)
+        for l, p in pages.items():
+            row[l] = p
+        fresh_row = paging.build_block_table_row(
+            fresh + ([fork_dst] if plan["fork"] else []), pps)
+        self.cache = paging.admit_slot(self.cache, jnp.int32(slot),
+                                       jnp.asarray(row),
+                                       jnp.asarray(fresh_row))
+        shared_set = set(shared)
+        if plan["fork"]:
+            # the re-fed last token writes into the final shared page:
+            # fork it up front so the reservation stays complete and no
+            # slot ever writes a multiply-referenced page
+            src = pages[k - 1]
+            self.cache = paging.fork_pages(
+                self.cache, jnp.int32(slot),
+                jnp.asarray([k - 1], jnp.int32),
+                jnp.asarray([src], jnp.int32),
+                jnp.asarray([fork_dst], jnp.int32), jnp.int32(s0))
+            pages[k - 1] = fork_dst
+            shared_set.discard(k - 1)
+            recycled = self._free([src])
+            assert not recycled, "forked a page nobody else referenced"
+            self.cow_forks += 1
+        chunk = self.cfg.prefill_chunk
+        bulk_end = s0 + ((plan["known"] - 1 - s0) // chunk) * chunk
+        st = _Slot(e.req, pages, shared_set, fed=s0, bulk_end=bulk_end,
+                   admit_step=self.steps, enq_step=e.enq_step,
+                   prio=self._eff_priority(e), generated=list(e.generated),
+                   chain=plan["chain"], next_reg=k,
+                   last_tok_t=e.last_tok_t)
+        self.slots[slot] = st
+        self.shared_page_hits += k
+
+    def _admit_swapped(self, e: _WaitEntry, slot: int):
+        """Rebind a swap-preempted sequence: fresh physical pages, slabs
+        restored byte-for-byte, recurrent slot state re-inserted."""
+        pps = self.cfg.pages_per_seq
+        with np.load(e.swap_path, allow_pickle=True) as data:
+            loaded = {key: data[key] for key in data.files}
+        data = loaded
+        logicals = [int(l) for l in data["logicals"]]
+        fresh = self._alloc(len(logicals))
+        row = np.full((pps,), -1, np.int32)
+        for l, p in zip(logicals, fresh):
+            row[l] = p
+        fresh_row = paging.build_block_table_row(fresh, pps)
+        self.cache = paging.admit_slot(self.cache, jnp.int32(slot),
+                                       jnp.asarray(row),
+                                       jnp.asarray(fresh_row))
+        slabs = {key[5:]: val for key, val in data.items()
+                 if key.startswith("pool|")}
+        seq_state = {key[4:]: val for key, val in data.items()
+                     if key.startswith("seq|")}
+        self.cache = paging.insert_pages(self.cache, slabs, fresh)
+        self.cache = paging.insert_seq_state(self.cache, seq_state, slot)
+        st = _Slot(e.req, dict(zip(logicals, fresh)), set(),
+                   fed=int(data["fed"]), bulk_end=int(data["fed"]),
+                   admit_step=self.steps, enq_step=e.enq_step,
+                   prio=self._eff_priority(e), generated=list(e.generated),
+                   chain=bytes(data["chain"].tobytes()),
+                   next_reg=int(data["next_reg"]),
+                   last_tok_t=e.last_tok_t)
+        self.slots[slot] = st
+        os.remove(e.swap_path)
+        e.swap_path = None
+
+    # --------------------------------------------------------- preemption --
+    def _pick_victim(self, exclude: Set[int],
+                     below_priority: Optional[int] = None) -> Optional[int]:
+        """Victim slot: lowest ADMISSION-effective priority first (an aged
+        request keeps its boost while running), most-recently-admitted
+        among equals. ``below_priority`` restricts to strictly lower
+        priority (None = unconditional — the liveness breaker)."""
+        cands = [(st.prio, -st.admit_step, i)
+                 for i, st in enumerate(self.slots)
+                 if st is not None and i not in exclude]
+        if below_priority is not None:
+            cands = [c for c in cands if c[0] < below_priority]
+        return min(cands)[2] if cands else None
+
+    def _preempt(self, slot: int):
+        st = self.slots[slot]
+        entry = _WaitEntry(st.req, st.enq_step,
+                           generated=list(st.generated),
+                           last_tok_t=st.last_tok_t)
+        if self.cfg.preempt_mode == "swap":
+            entry.swap_path = self._swap_out(slot, st)
+        ordered = sorted(st.pages)
+        recycled = self._free([st.pages[l] for l in ordered])
+        self.cache = paging.release_slot(
+            self.cache, jnp.int32(slot), jnp.asarray(
+                paging.build_block_table_row(recycled,
+                                             self.cfg.pages_per_seq)))
+        self.slots[slot] = None
+        self.waiting.append(entry)
+        self.preemptions += 1
+
+    def _swap_out(self, slot: int, st: _Slot) -> str:
+        if self._swap_dir is None:
+            self._swap_dir = tempfile.mkdtemp(prefix="repro-serve-swap-")
+        logicals = sorted(st.pages)
+        phys = [st.pages[l] for l in logicals]
+        slabs = paging.extract_pages(self.cache, phys)
+        seq_state = paging.extract_seq_state(self.cache, slot)
+        path = os.path.join(self._swap_dir, f"rid{st.req.rid}.npz")
+        np.savez(path, logicals=np.asarray(logicals, np.int32),
+                 fed=np.int64(st.fed), next_reg=np.int64(st.next_reg),
+                 chain=np.frombuffer(st.chain, np.uint8),
+                 **{f"pool|{k}": v for k, v in slabs.items()},
+                 **{f"seq|{k}": v for k, v in seq_state.items()})
+        return path
+
+    # ------------------------------------------------------------ prefill --
+    def _bulk_prefill(self) -> int:
+        chunk = self.cfg.prefill_chunk
+        ran = 0
+        for slot, st in enumerate(self.slots):
+            if st is None:
+                continue
+            # exact chunks from the post-shared-prefix point up to
+            # bulk_end; the rest (at least the last known token) rides the
+            # shared decode steps
+            while st.fed < st.bulk_end:
+                f0 = st.fed
+                toks = np.array([st.token_at(i)
+                                 for i in range(f0, f0 + chunk)],
+                                np.int32)[None, :]
+                pos = np.arange(f0, f0 + chunk, dtype=np.int32)[None, :]
                 self.cache = self._prefill_chunk(
                     self.params, self.cache, jnp.asarray(toks),
                     jnp.asarray(pos), jnp.int32(slot))
                 self.prefill_chunks += 1
-            st.fed = n_bulk * chunk
+                ran += 1
+                st.fed += chunk
+                self._after_progress(slot, st)
+        return ran
 
-    def _decode_tick(self):
+    # ------------------------------------------------------------- decode --
+    def _ensure_writable(self, slot: int, st: _Slot) -> bool:
+        """Guarantee position ``st.fed`` has an exclusively owned page
+        under it before the decode write: demand-map a fresh page
+        (watermark mode), or CoW-fork a shared one. May preempt. Returns
+        False if no page could be produced (slot stalls this tick)."""
+        l = st.fed // self.cfg.page_size
+        if l in st.pages and l not in st.shared:
+            return True
+        while not self.pool.can_alloc(1):
+            if not self.cfg.preempt:
+                return False
+            victim = self._pick_victim({slot}, st.req.priority)
+            if victim is None:
+                return False
+            self._preempt(victim)
+        if l in st.shared:
+            src = st.pages[l]
+            dst = self._alloc(1)[0]
+            self.cache = paging.fork_pages(
+                self.cache, jnp.int32(slot),
+                jnp.asarray([l], jnp.int32), jnp.asarray([src], jnp.int32),
+                jnp.asarray([dst], jnp.int32), jnp.int32(st.fed))
+            st.pages[l] = dst
+            st.shared.discard(l)
+            recycled = self._free([src])
+            assert not recycled, "forked a page nobody else referenced"
+            self.cow_forks += 1
+        else:
+            page = self._alloc(1)[0]
+            self.cache = paging.map_pages(
+                self.cache, jnp.int32(slot),
+                jnp.asarray([l], jnp.int32),
+                jnp.asarray([page], jnp.int32))
+            st.pages[l] = page
+        return True
+
+    def _decode_tick(self) -> int:
         B = self.cfg.max_seqs
+        # phase 1: page resolution — may preempt slots, so it must finish
+        # before any batch arrays are built from the surviving slots
+        for slot in range(B):
+            st = self.slots[slot]
+            if st is not None:
+                st.stalled = not self._ensure_writable(slot, st)
         tokens = np.zeros((B,), np.int32)
         pos = np.zeros((B,), np.int32)
         active = np.zeros((B,), bool)
         rids = np.zeros((B,), np.int32)
         counts = np.zeros((B,), np.int32)
         for slot, st in enumerate(self.slots):
-            if st is None:
+            if st is None or st.stalled:
                 continue
-            plen = len(st.req.prompt)
-            tokens[slot] = (st.req.prompt[st.fed] if st.fed < plen
-                            else self._last_sampled[slot])
+            tokens[slot] = st.token_at(st.fed)
             pos[slot] = st.fed
             active[slot] = True
             rids[slot] = st.req.rid
             counts[slot] = st.fed
         if not active.any():
-            return
+            return 0
         t0 = time.perf_counter()
         nxt, self.cache = self._decode(
             self.params, self.cache, jnp.asarray(tokens), jnp.asarray(pos),
             jnp.asarray(active), jnp.asarray(rids), jnp.asarray(counts))
         nxt = np.asarray(nxt)                    # blocks until device-done
-        self.decode_step_s.append(time.perf_counter() - t0)
+        now = time.perf_counter()
+        self.decode_step_s.append(now - t0)
         self.decode_steps += 1
         for slot, st in enumerate(self.slots):
-            if st is None:
+            if st is None or st.stalled:
                 continue
+            f = st.fed
             st.fed += 1
-            if st.fed >= len(st.req.prompt):     # this step sampled a token
-                st.generated.append(int(nxt[slot]))
-                self._last_sampled[slot] = nxt[slot]
+            if f == st.known - 1:                # sampled a genuinely new
+                st.generated.append(int(nxt[slot]))   # token (not replay)
+                if st.last_tok_t is not None:
+                    self.itl_s.append(now - st.last_tok_t)
+                st.last_tok_t = now
                 if len(st.generated) == 1:       # first token: record TTFT
                     t_sub = self._submit_t.pop(st.req.rid, None)
                     if t_sub is not None:
-                        self.ttft_s[st.req.rid] = time.perf_counter() - t_sub
+                        self.ttft_s[st.req.rid] = now - t_sub
                         while len(self.ttft_s) > 4096:   # bounded window
                             self.ttft_s.pop(next(iter(self.ttft_s)))
+            self._after_progress(slot, st)
             if len(st.generated) >= st.req.max_new_tokens:
                 self._evict(slot)
+        return 1
 
+    # --------------------------------------------------- per-fed upkeep --
+    def _after_progress(self, slot: int, st: _Slot):
+        """Run after ``st.fed`` advances: content-index completed pages,
+        then drop pages that fell fully behind the SWA window."""
+        ps = self.cfg.page_size
+        if self.index is not None:
+            while (st.next_reg + 1) * ps <= st.fed:
+                l = st.next_reg
+                toks = np.array([st.token_at(i)
+                                 for i in range(l * ps, (l + 1) * ps)],
+                                np.int32)
+                st.chain = paging.PrefixIndex.chain(st.chain, toks)
+                if l in st.pages and l not in st.shared:
+                    self.index.register(st.chain, st.pages[l])
+                st.next_reg += 1
+        if self.cfg.swa_recycle:
+            window = self.model_cfg.sliding_window
+            dead = [l for l in sorted(st.pages)
+                    if (l + 1) * ps - 1 <= st.fed - window]
+            if dead:
+                phys = [st.pages.pop(l) for l in dead]
+                st.shared.difference_update(dead)
+                recycled = self._free(phys)
+                self.cache = paging.unmap_pages(
+                    self.cache, jnp.int32(slot),
+                    jnp.asarray(dead, jnp.int32),
+                    jnp.asarray(paging.build_block_table_row(
+                        recycled, self.cfg.pages_per_seq)))
+                self.swa_recycled_pages += len(dead)
+
+    # ----------------------------------------------------------- eviction --
     def _evict(self, slot: int):
         st = self.slots[slot]
         self.finished[st.req.rid] = np.asarray(st.generated, np.int32)
-        row = paging.build_block_table_row(st.pages, self.cfg.pages_per_seq)
-        self.cache = paging.release_slot(self.cache, jnp.int32(slot),
-                                         jnp.asarray(row))
-        self.pool.free(st.pages)
+        ordered = sorted(st.pages)
+        recycled = self._free([st.pages[l] for l in ordered])
+        self.cache = paging.release_slot(
+            self.cache, jnp.int32(slot), jnp.asarray(
+                paging.build_block_table_row(recycled,
+                                             self.cfg.pages_per_seq)))
         self.slots[slot] = None
 
     def defrag(self):
         """Compact live pages to the low pool indices (host allocator +
-        device pools + block tables + per-slot page lists, atomically)."""
+        device pools + block tables + per-slot page maps + prefix index,
+        atomically). Refcounts and sharing survive: a multiply-referenced
+        page moves once and every table row follows it."""
         old_to_new = self.pool.defrag()
         new_to_old = np.argsort(old_to_new).astype(np.int32)
         self.cache = paging.apply_page_remap(
             self.cache, jnp.asarray(old_to_new), jnp.asarray(new_to_old))
         for st in self.slots:
             if st is not None:
-                st.pages = [int(old_to_new[p]) for p in st.pages]
+                st.pages = {l: int(old_to_new[p])
+                            for l, p in st.pages.items()}
+        if self.index is not None:
+            self.index.remap(old_to_new)
 
     def step(self) -> List[int]:
         """One scheduler tick: admit -> bulk prefill -> one decode step
         (+ optional defrag). Returns the rids finished in this tick."""
         before = set(self.finished)
-        self._admit()
+        admitted = self._admit()
         # sample the high-water mark before this tick's evictions can
         # release pages (an admit+finish within one tick must still count)
         self.peak_pages_in_use = max(self.peak_pages_in_use,
                                      self.pool.in_use)
-        self._bulk_prefill()
-        self._decode_tick()
+        prefilled = self._bulk_prefill()
+        decoded = self._decode_tick()
         self.steps += 1
         if self.cfg.defrag_every and self.steps % self.cfg.defrag_every == 0:
             self.defrag()
+        if not (admitted or prefilled or decoded) and self.busy \
+                and self.cfg.preempt \
+                and any(s is not None for s in self.slots):
+            # liveness breaker: every slot stalled on a dry pool with no
+            # strictly-lower-priority victim (e.g. equal priorities
+            # mutually wedged) — force out one victim so the rest run
+            victim = self._pick_victim(set())
+            if victim is not None:
+                self._preempt(victim)
+                self.forced_preemptions += 1
         return sorted(set(self.finished) - before)
 
     def run(self, max_steps: int = 100_000) -> Dict[int, np.ndarray]:
         """Drain the queue. Raises if the stream does not finish within
         ``max_steps`` ticks (a liveness bug, not a workload property:
-        admission reserves full footprints, so progress is guaranteed)."""
+        reservation admission guarantees progress outright, and watermark
+        mode backstops stalls with the forced-preemption breaker)."""
         for _ in range(max_steps):
             if not self.busy:
                 return self.finished
@@ -348,9 +817,11 @@ class AsyncServer:
         self._abandoned: set = set()
         self._pump_task: Optional[asyncio.Task] = None
 
-    async def generate(self, prompt: Sequence[int],
-                       max_new_tokens: int) -> np.ndarray:
-        rid = self.scheduler.submit(prompt, max_new_tokens)
+    async def generate(self, prompt: Sequence[int], max_new_tokens: int,
+                       priority: int = 0,
+                       deadline: Optional[int] = None) -> np.ndarray:
+        rid = self.scheduler.submit(prompt, max_new_tokens,
+                                    priority=priority, deadline=deadline)
         ev = asyncio.Event()
         self._events[rid] = ev
         if self._pump_task is None or self._pump_task.done():

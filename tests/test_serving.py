@@ -442,6 +442,230 @@ def test_build_positions_centralizes_mrope():
     np.testing.assert_array_equal(np.asarray(out[0, 0]), [5, 5, 5])
 
 
+# ----------------------------------------- prefix sharing + preemption ----
+def _shared_prefix_stream(cfg, n=5, prefix_tokens=8, seed=11):
+    """n prompts opening with the same full-page prefix, staggered suffix
+    and decode lengths so early requests are still live (donors) when the
+    later ones are admitted."""
+    rng = np.random.RandomState(seed)
+    prefix = rng.randint(0, cfg.vocab_size, prefix_tokens).astype(np.int32)
+    prompts, news = [], []
+    for i in range(n):
+        suffix = rng.randint(0, cfg.vocab_size, 1 + 2 * i).astype(np.int32)
+        prompts.append(np.concatenate([prefix, suffix]))
+        news.append(9 - i if i % 2 == 0 else 3 + i)
+    return prompts, news
+
+
+def _run_stream(cfg, params, prompts, news, **kw):
+    sched = Scheduler(cfg, params, _serve_cfg(**kw))
+    rids = [sched.submit(p, m) for p, m in zip(prompts, news)]
+    out = sched.run()
+    assert sched.pool.in_use == 0
+    if sched.index is not None:
+        assert len(sched.index) == 0           # index drains with the pool
+    return [out[r].tolist() for r in rids], sched
+
+
+@pytest.mark.parametrize("kv_bits", [32, 8])
+def test_shared_prefix_bit_identical_and_saves_pages(smoke, kv_bits,
+                                                     monkeypatch):
+    """Tentpole pin: copy-on-write prefix sharing is purely a block-table
+    phenomenon — greedy tokens are identical to the unshared cache (f32
+    and int8 pools) while physical page allocations drop."""
+    monkeypatch.setenv("REPRO_PAGED_ATTN_KERNEL", "0")
+    cfg, params = smoke("tinyllama-1.1b")
+    prompts, news = _shared_prefix_stream(cfg)
+    base_out, base_sched = _run_stream(cfg, params, prompts, news,
+                                       kv_bits=kv_bits)
+    shared_out, sched = _run_stream(cfg, params, prompts, news,
+                                    kv_bits=kv_bits, share_prefix=True)
+    assert shared_out == base_out
+    assert sched.shared_page_hits > 0
+    assert sched.pages_alloc_events < base_sched.pages_alloc_events
+
+
+def test_shared_prefix_forks_page_aligned_prompt(smoke):
+    """A prompt that is an exact full-page prefix of a live sequence must
+    fork its last shared page (the re-fed final token writes into it) —
+    and still decode the same tokens as the unshared run. The donor runs
+    a few ticks first so its prompt pages are content-indexed."""
+    cfg, params = smoke("tinyllama-1.1b")
+    rng = np.random.RandomState(5)
+    donor = rng.randint(0, cfg.vocab_size, 3 * PAGE).astype(np.int32)
+    extended = np.concatenate(
+        [donor, rng.randint(0, cfg.vocab_size, 3).astype(np.int32)])
+
+    def run(share):
+        sched = Scheduler(cfg, params, _serve_cfg(
+            max_seqs=3, share_prefix=share))
+        r0 = sched.submit(donor, 12)
+        for _ in range(4):
+            sched.step()                     # donor live + indexed
+        r1 = sched.submit(np.copy(donor), 4)
+        r2 = sched.submit(extended, 5)
+        out = sched.run()
+        assert sched.pool.in_use == 0
+        return [out[r].tolist() for r in (r0, r1, r2)], sched
+
+    base_out, _ = run(False)
+    shared_out, sched = run(True)
+    assert shared_out == base_out
+    assert sched.cow_forks >= 1              # the exact clone forks
+    assert sched.shared_page_hits >= 5       # 3 (clone) + >= 2 (extended)
+
+
+def test_watermark_admission_overcommits_reservation(smoke):
+    """A pool too small for two full reservations but big enough for two
+    near-term footprints: reserve mode serializes, watermark mode runs
+    both — with identical tokens and no leak."""
+    cfg, params = smoke("tinyllama-1.1b")
+    prompts, news = _prompts(cfg, (9, 9)), (4, 4)
+
+    def peak_concurrency(**kw):
+        sched = Scheduler(cfg, params, _serve_cfg(
+            num_pages=7, max_seqs=2, **kw))
+        rids = [sched.submit(p, m) for p, m in zip(prompts, news)]
+        peak = 0
+        while sched.busy:
+            sched.step()
+            peak = max(peak, sum(s is not None for s in sched.slots))
+        assert sched.pool.in_use == 0
+        return peak, [sched.finished[r].tolist() for r in rids]
+
+    reserve_peak, reserve_out = peak_concurrency()
+    wm_peak, wm_out = peak_concurrency(preempt=True, decode_watermark=1)
+    assert reserve_peak == 1
+    assert wm_peak == 2
+    assert wm_out == reserve_out
+
+
+@pytest.mark.parametrize("mode", ["recompute", "swap"])
+def test_preempt_readmit_tokens_identical(smoke, mode, monkeypatch):
+    """Evict -> requeue -> readmit (both recompute and NPZ swap) must
+    reproduce the uninterrupted run token-for-token."""
+    monkeypatch.setenv("REPRO_PAGED_ATTN_KERNEL", "0")
+    cfg, params = smoke("tinyllama-1.1b")
+    prompts, news = _prompts(cfg, (9, 13), seed=2), (14, 10)
+    plain_out, _ = _run_stream(cfg, params, prompts, news, max_seqs=2)
+    tight_out, sched = _run_stream(
+        cfg, params, prompts, news, max_seqs=2, num_pages=8,
+        preempt=True, preempt_mode=mode, decode_watermark=1)
+    assert tight_out == plain_out
+    assert sched.preemptions + sched.forced_preemptions >= 1
+
+
+def test_priority_preemption_evicts_lowest_priority(smoke):
+    """A high-priority arrival with every slot held by lower priority
+    work: the lowest-priority slot is evicted, the arrival runs first,
+    and the victim is requeued and completes with unchanged tokens."""
+    cfg, params = smoke("tinyllama-1.1b")
+    prompts = _prompts(cfg, (9, 9), seed=3)
+    plain_out, _ = _run_stream(cfg, params, prompts, (12, 6), max_seqs=2)
+    sched = Scheduler(cfg, params, _serve_cfg(
+        num_pages=8, max_seqs=1, preempt=True, decode_watermark=1))
+    lo = sched.submit(prompts[0], 12, priority=0)
+    for _ in range(3):                          # lo is mid-flight...
+        sched.step()
+    hi = sched.submit(prompts[1], 6, priority=5)  # ...when hi arrives
+    out = sched.run()
+    assert sched.preemptions + sched.forced_preemptions >= 1
+    assert [out[lo].tolist(), out[hi].tolist()] == plain_out
+    assert sched.pool.in_use == 0
+
+
+def test_aging_prevents_starvation(smoke):
+    """A priority-0 request against a continuous priority-3 stream on a
+    one-request pool: aging must push it through before the stream ends."""
+    cfg, params = smoke("tinyllama-1.1b")
+    prompt = _prompts(cfg, (5,))[0]
+    sched = Scheduler(cfg, params, _serve_cfg(
+        num_pages=4, max_seqs=1,
+        preempt=True, decode_watermark=1, aging_ticks=2))
+    lo = sched.submit(prompt, 3, priority=0)
+    served_before_lo = 0
+    for _ in range(40):
+        if lo in sched.finished:
+            break
+        if not any(e.req.priority == 3 for e in sched.waiting):
+            sched.submit(prompt, 3, priority=3)
+        done = sched.step()
+        served_before_lo += sum(1 for r in done if r != lo)
+    assert lo in sched.finished
+    assert served_before_lo >= 1      # hi stream actually contended
+
+
+def test_replay_deterministic_with_sharing_preemption_defrag(smoke):
+    """The replay guarantee survives the whole PR: temperature sampling +
+    prefix sharing + watermark preemption + periodic defrag."""
+    cfg, params = smoke("tinyllama-1.1b")
+    prompts, news = _shared_prefix_stream(cfg)
+
+    def one_run():
+        out, _ = _run_stream(
+            cfg, params, prompts, news, sample="temp", temperature=0.8,
+            seed=7, share_prefix=True, preempt=True, num_pages=24,
+            decode_watermark=1, defrag_every=3)
+        return out
+
+    assert one_run() == one_run()
+
+
+def test_defrag_preserves_sharing(smoke):
+    """Mid-flight defrag with multiply-referenced pages: shared tokens
+    stay identical and the prefix index follows the remap."""
+    cfg, params = smoke("tinyllama-1.1b")
+    prompts, news = _shared_prefix_stream(cfg)
+    plain, _ = _run_stream(cfg, params, prompts, news)
+    shared, sched = _run_stream(cfg, params, prompts, news,
+                                share_prefix=True, defrag_every=4)
+    assert shared == plain
+    assert sched.shared_page_hits > 0
+
+
+def test_ttft_clocks_from_submit_with_queue_component(smoke):
+    """TTFT is measured from submit() and splits out its queueing
+    component (submit -> first admission)."""
+    cfg, params = smoke("tinyllama-1.1b")
+    sched = Scheduler(cfg, params, _serve_cfg(max_seqs=1))
+    rids = [sched.submit(p, 3) for p in _prompts(cfg, (9, 9, 9))]
+    sched.run()
+    assert set(sched.ttft_s) == set(rids)
+    assert set(sched.ttft_queue_s) == set(rids)
+    for r in rids:
+        assert 0.0 < sched.ttft_queue_s[r] <= sched.ttft_s[r]
+    # one-at-a-time service: the last request queues behind two full
+    # generations, so its queue share dominates the first request's
+    assert sched.ttft_queue_s[rids[2]] > sched.ttft_queue_s[rids[0]]
+
+
+def test_swa_window_recycling_zero_leak_and_identical():
+    """Pure sliding-window arch: pages fully outside the attention window
+    are recycled mid-request — same tokens, pages returned early, no
+    leak (satellite carried from ROADMAP)."""
+    cfg = base.get_smoke_config("h2o-danube-1.8b").with_overrides(
+        sliding_window=8)
+    params = registry.init_params(cfg, jax.random.PRNGKey(0))
+    prompts = _prompts(cfg, (9, 14, 6), seed=4)
+    news = (20, 12, 16)
+    plain, _ = _run_stream(cfg, params, prompts, news)
+    recycled, sched = _run_stream(cfg, params, prompts, news,
+                                  swa_recycle=True)
+    assert recycled == plain
+    assert sched.swa_recycled_pages > 0
+
+
+def test_sharing_and_recycling_reject_unsupported_archs(smoke):
+    """share_prefix needs every block paged (attention-family); SWA
+    recycling needs a pure sliding-window stack with a set window."""
+    zamba, _ = smoke("zamba2-7b")
+    with pytest.raises(ValueError, match="share_prefix"):
+        Scheduler(zamba, None, _serve_cfg(share_prefix=True))
+    gemma = base.get_smoke_config("gemma3-4b")
+    with pytest.raises(ValueError, match="swa_recycle"):
+        Scheduler(gemma, None, _serve_cfg(swa_recycle=True))
+
+
 # ------------------------------------------------------------- long case --
 @pytest.mark.slow
 def test_long_decode_paged_matches_contiguous(smoke, monkeypatch):

@@ -1,0 +1,274 @@
+"""Property suite for the production-load serving layer (ISSUE 8): the
+PagePool refcount/CoW invariants, the PrefixIndex content index, and the
+scheduler's preemption contract.
+
+Hypothesis drives the randomized walks where it is installed (CI); the
+seeded deterministic twins below each property keep the invariants
+exercised in offline containers where it is not.
+
+Invariants pinned here:
+  * refcount >= 1 while a page is mapped; pages recycle at zero and ONLY
+    at zero; double free and retain-of-free raise;
+  * ``in_use`` counts physical pages, not references;
+  * defrag is a permutation that preserves refcounts and sharing;
+  * a CoW fork never aliases its donor: distinct physical id, bit-equal
+    slabs across every pool leaf (codes + scales together), kv_pos masked
+    at the write point;
+  * the prefix index maps a hash to its lowest LIVE duplicate, survives
+    drops of individual duplicates, and follows defrag remaps;
+  * preemption (recompute and swap) is invisible in the tokens: the
+    evict -> readmit run equals the uninterrupted run, twice (replay).
+"""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:        # offline: property tests skip, rest runs
+    from _hypothesis_stub import given, settings, st
+
+from repro.configs import base
+from repro.models import registry
+from repro.models.layers import paged_page_slabs
+from repro.serving import paging
+from repro.serving.scheduler import Scheduler, ServeConfig
+
+PAGE, PPS = 4, 16
+
+
+# ----------------------------------------------------- pool random walks --
+class _PoolMirror:
+    """Pure-python reference model of the refcounted allocator."""
+
+    def __init__(self, n):
+        self.n = n
+        self.refs = {}
+
+    def live(self):
+        return sorted(self.refs)
+
+    def check(self, pool):
+        assert pool.in_use == len(self.refs)
+        assert pool.free_count == self.n - len(self.refs)
+        for p in range(self.n):
+            assert pool.refcount(p) == self.refs.get(p, 0)
+
+
+def _pool_walk(pool, mirror, ops):
+    """Replay (op, arg) pairs against pool + mirror, checking after each."""
+    for op, arg in ops:
+        live = mirror.live()
+        if op == 0:                                   # alloc
+            n = 1 + arg % 3
+            if pool.can_alloc(n):
+                got = pool.alloc(n)
+                assert len(set(got)) == n
+                for p in got:
+                    assert p not in mirror.refs       # was free
+                    mirror.refs[p] = 1
+            else:
+                with pytest.raises(paging.PageAllocError):
+                    pool.alloc(n)
+        elif op == 1 and live:                        # retain
+            p = live[arg % len(live)]
+            pool.retain([p])
+            mirror.refs[p] += 1
+        elif op == 2 and live:                        # free one ref
+            p = live[arg % len(live)]
+            recycled = pool.free([p])
+            if mirror.refs[p] == 1:
+                assert recycled == [p]                # recycled AT zero
+                del mirror.refs[p]
+            else:
+                assert recycled == []                 # shared: kept
+                mirror.refs[p] -= 1
+        elif op == 3:                                 # defrag
+            old_to_new = pool.defrag()
+            assert sorted(old_to_new.tolist()) == list(range(mirror.n))
+            mirror.refs = {int(old_to_new[p]): rc
+                           for p, rc in mirror.refs.items()}
+            # live pages are compacted to the bottom ids
+            assert mirror.live() == list(range(len(mirror.refs)))
+        mirror.check(pool)
+    # every page freed down to zero refs recycles: full drain leaks nothing
+    for p in mirror.live():
+        for _ in range(mirror.refs[p]):
+            pool.free([p])
+    assert pool.in_use == 0 and pool.free_count == mirror.n
+    with pytest.raises(paging.PageAllocError):
+        pool.free([mirror.n - 1])                     # double free raises
+
+
+@settings(max_examples=60, deadline=None)
+@given(num_pages=st.integers(1, 12),
+       ops=st.lists(st.tuples(st.integers(0, 3), st.integers(0, 1 << 16)),
+                    max_size=80))
+def test_page_pool_refcount_invariants_property(num_pages, ops):
+    _pool_walk(paging.PagePool(num_pages), _PoolMirror(num_pages), ops)
+
+
+@pytest.mark.parametrize("seed", range(5))
+def test_page_pool_refcount_invariants_seeded(seed):
+    """Deterministic twin of the hypothesis walk (offline containers)."""
+    rng = np.random.RandomState(seed)
+    num_pages = int(rng.randint(1, 12))
+    ops = [(int(rng.randint(4)), int(rng.randint(1 << 16)))
+           for _ in range(120)]
+    _pool_walk(paging.PagePool(num_pages), _PoolMirror(num_pages), ops)
+
+
+def test_page_pool_retain_free_page_raises():
+    pool = paging.PagePool(4)
+    with pytest.raises(paging.PageAllocError):
+        pool.retain([0])
+    page = pool.alloc(1)[0]
+    pool.retain([page])
+    assert pool.free([page]) == []                    # rc 2 -> 1
+    assert pool.free([page]) == [page]                # rc 1 -> recycled
+
+
+# ------------------------------------------------------- prefix index ----
+def _index_walk(ops):
+    index = paging.PrefixIndex(PAGE)
+    hashes = [bytes([h]) * 32 for h in range(4)]
+    mirror = {}                                       # page -> hash
+    for op, arg in ops:
+        if op == 0:                                   # register
+            page, h = arg % 32, hashes[arg % 4]
+            index.register(h, page)
+            mirror.setdefault(page, h)                # first hash sticks
+        elif op == 1:                                 # drop
+            index.drop_page(arg % 32)
+            mirror.pop(arg % 32, None)
+        else:                                         # defrag remap
+            perm = np.random.RandomState(arg % 97).permutation(32)
+            index.remap(perm)
+            mirror = {int(perm[p]): h for p, h in mirror.items()}
+        for h in hashes:                              # lookup = min live
+            live = [p for p, ph in mirror.items() if ph == h]
+            assert index.lookup(h) == (min(live) if live else None)
+        assert len(index) == len({h for h in mirror.values()})
+
+
+@settings(max_examples=60, deadline=None)
+@given(ops=st.lists(st.tuples(st.integers(0, 2), st.integers(0, 1 << 16)),
+                    max_size=60))
+def test_prefix_index_multimap_property(ops):
+    _index_walk(ops)
+
+
+@pytest.mark.parametrize("seed", range(3))
+def test_prefix_index_multimap_seeded(seed):
+    rng = np.random.RandomState(seed)
+    _index_walk([(int(rng.randint(3)), int(rng.randint(1 << 16)))
+                 for _ in range(80)])
+
+
+def test_prefix_index_hash_chain_is_prefix_sensitive():
+    """Identical token windows at different depths hash differently — a
+    hit certifies the ENTIRE prefix, not one page's content."""
+    index = paging.PrefixIndex(PAGE)
+    window = np.arange(PAGE, dtype=np.int32)
+    twice = np.concatenate([window, window])
+    h = index.hash_chain(twice)
+    assert len(h) == 2 and h[0] != h[1]
+    assert index.hash_chain(window)[0] == h[0]        # same depth matches
+
+
+# ------------------------------------------------------------ CoW fork ----
+@pytest.mark.parametrize("kv_bits", [32, 8])
+def test_fork_pages_copies_all_leaves_and_masks_kv_pos(kv_bits):
+    """A fork duplicates EVERY pool leaf of the donor page bit-exactly
+    (codes and scale side info together for quantized pools) into a
+    DISTINCT physical page, masks kv_pos at the write point, and rebinds
+    only the forker's block-table row."""
+    cfg = base.get_smoke_config("tinyllama-1.1b")
+    cache = paging.make_paged_block_cache(
+        "attn", cfg, max_seqs=2, num_pages=4, page_size=PAGE,
+        pages_per_seq=2, dtype=jnp.float32, kv_bits=kv_bits)
+    rng = np.random.RandomState(0)
+    src, dst = 1, 3
+    for name in ("k_pages", "v_pages", "k_scale", "v_scale"):
+        if name in cache:
+            cache[name] = jnp.asarray(
+                (rng.randint(1, 200, cache[name].shape)
+                 if cache[name].dtype == jnp.uint8
+                 else rng.standard_normal(cache[name].shape)),
+                cache[name].dtype)
+    cache["kv_pos"] = cache["kv_pos"].at[src].set(jnp.arange(PAGE))
+    orig_row1 = int(cache["block_tables"][1, 0])    # fork donates `cache`
+    write_pos = PAGE // 2
+    forked = paging.fork_pages(
+        cache, jnp.int32(0), jnp.asarray([0], jnp.int32),
+        jnp.asarray([src], jnp.int32), jnp.asarray([dst], jnp.int32),
+        jnp.int32(write_pos))
+    s = jax.tree_util.tree_map(np.asarray, paged_page_slabs(forked, [src]))
+    d = jax.tree_util.tree_map(np.asarray, paged_page_slabs(forked, [dst]))
+    for name in s:
+        if name == "kv_pos":
+            continue
+        np.testing.assert_array_equal(s[name], d[name])  # bit-equal copy
+    # donor kv_pos untouched; fork attends only below the write point
+    np.testing.assert_array_equal(s["kv_pos"][0], np.arange(PAGE))
+    np.testing.assert_array_equal(
+        d["kv_pos"][0], np.where(np.arange(PAGE) < write_pos,
+                                 np.arange(PAGE), -1))
+    assert int(forked["block_tables"][0, 0]) == dst   # forker rebound
+    assert int(forked["block_tables"][1, 0]) == orig_row1  # others untouched
+
+
+# ------------------------------------------- scheduler preemption property
+@functools.lru_cache(maxsize=1)
+def _model():
+    cfg = base.get_smoke_config("tinyllama-1.1b")
+    return cfg, registry.init_params(cfg, jax.random.PRNGKey(0))
+
+
+def _preemption_workload(seed):
+    cfg, _ = _model()
+    rng = np.random.RandomState(seed)
+    lens = [int(rng.randint(5, 14)) for _ in range(3)]
+    news = [int(rng.randint(3, 12)) for _ in range(3)]
+    prompts = [rng.randint(0, cfg.vocab_size, n).astype(np.int32)
+               for n in lens]
+    return prompts, news
+
+
+def _run(prompts, news, num_pages=48, **kw):
+    cfg, params = _model()
+    scfg = ServeConfig(max_seqs=2, page_size=PAGE, num_pages=num_pages,
+                       pages_per_seq=PPS, prefill_chunk=8, **kw)
+    sched = Scheduler(cfg, params, scfg)
+    rids = [sched.submit(p, m, priority=i % 2)
+            for i, (p, m) in enumerate(zip(prompts, news))]
+    out = sched.run()
+    assert sched.pool.in_use == 0
+    return [out[r].tolist() for r in rids]
+
+
+@settings(max_examples=4, deadline=None)
+@given(seed=st.integers(0, 10_000),
+       mode=st.sampled_from(["recompute", "swap"]))
+def test_preempted_run_matches_uninterrupted_property(seed, mode):
+    """Evict -> readmit under pool pressure (both modes) reproduces the
+    uninterrupted tokens, and replays deterministically."""
+    prompts, news = _preemption_workload(seed)
+    plain = _run(prompts, news)
+    tight = dict(num_pages=8, preempt=True, preempt_mode=mode,
+                 decode_watermark=1)
+    assert _run(prompts, news, **tight) == plain
+    assert _run(prompts, news, **tight) == plain      # replay
+
+
+@pytest.mark.parametrize("mode", ["recompute", "swap"])
+def test_preempted_run_matches_uninterrupted_seeded(mode):
+    prompts, news = _preemption_workload(1234)
+    plain = _run(prompts, news)
+    tight = dict(num_pages=8, preempt=True, preempt_mode=mode,
+                 decode_watermark=1)
+    assert _run(prompts, news, **tight) == plain
+    assert _run(prompts, news, **tight) == plain
