@@ -12,6 +12,9 @@ One place declares what the benchmark layer runs (DESIGN.md §Campaign):
 * ``lm-sweep``      — the quantized-vs-unquantized LM baseline pair plus
   the layer-wise bits-to-loss grid (groups x censor_mode x mix_backend),
   each run a resumable training via ``repro.launch.train:campaign_lm_run``;
+* ``fleet-sweep``   — FleetSim bits-to-loss grid (participation x
+  staleness x iid/dirichlet), gated on fault-free bit-identity to the
+  synchronous engine and zero-bit censored accounting;
 * ``all``           — everything above plus the kernel-parity shape sweep
   and the roofline table.
 
@@ -108,6 +111,14 @@ LM_GRID_STAGE = stage(
 lm_sweep = register_campaign(
     Campaign(name="lm-sweep", stages=(LM_BASELINE_STAGE, LM_GRID_STAGE)))
 
+# ----------------------------------------------------------------- fleet --
+FLEET_STAGE = stage(
+    "fleet", "benchmarks.bench_fleet:stage_fleet_sweep",
+    configs=[{"n_workers": 8, "rounds": 80, "dim": 20}], names=["sweep"])
+
+fleet_sweep = register_campaign(
+    Campaign(name="fleet-sweep", stages=(FLEET_STAGE,)))
+
 # ------------------------------------------------------ kernels/roofline --
 KERNELS_STAGE = stage(
     "kernels", "benchmarks.bench_kernels:stage_shape",
@@ -123,7 +134,7 @@ ROOFLINE_STAGE = stage(
 everything = register_campaign(
     Campaign(name="all",
              stages=(ENGINE_STAGE,) + SERVING_STAGES
-             + (FIGURES_STAGE, KERNELS_STAGE, ROOFLINE_STAGE,
+             + (FIGURES_STAGE, FLEET_STAGE, KERNELS_STAGE, ROOFLINE_STAGE,
                 LM_BASELINE_STAGE, LM_GRID_STAGE)))
 
 

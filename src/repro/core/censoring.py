@@ -85,3 +85,28 @@ def apply_censoring(last_sent: jax.Array, candidate: jax.Array,
                     mask: jax.Array) -> jax.Array:
     """Select candidate where transmitted, keep stale value otherwise."""
     return jnp.where(mask[:, None] > 0, candidate, last_sent)
+
+
+def compose_tx_mask(timeout_mask: jax.Array, censor_mask: jax.Array,
+                    group_censor_mask: jax.Array,
+                    ) -> Tuple[jax.Array, jax.Array]:
+    """Fold a fleet timeout into the censoring decision (DESIGN.md §Fleet).
+
+    A timed-out worker is a censored worker: the composed transmit decision
+    is ``timeout_mask & censor_mask`` per worker, applied column-wise to
+    the per-group mask too (a straggler ships *none* of its groups, in both
+    censor modes). Masks are float 0/1, so ``&`` is a product — and a
+    multiply by an all-ones ``timeout_mask`` is bitwise identity, which is
+    what keeps the fault-free fleet path bit-golden vs the synchronous
+    engine.
+
+    Args:
+      timeout_mask: (N,) 1 => the worker's transmission arrives on time.
+      censor_mask: (N,) censor-only per-worker decision.
+      group_censor_mask: (N, G) censor-only per-group decision.
+
+    Returns:
+      ``(tx_mask (N,), group_tx_mask (N, G))`` composed decisions.
+    """
+    tm = timeout_mask.astype(censor_mask.dtype)
+    return censor_mask * tm, group_censor_mask * tm[:, None]

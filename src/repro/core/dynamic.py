@@ -39,6 +39,56 @@ class DynamicTopology:
                                       seed=self.seed + phase)
 
 
+# ---------------------------------------------- dual column-space helpers --
+def project_duals(alpha: E.Tree, graph: WorkerGraph) -> E.Tree:
+    """Orthogonal projection of the duals onto ``col(M_-)`` of ``graph``.
+
+    For any *connected* graph the signed incidence matrix M_- (heads +1,
+    tails -1; ``WorkerGraph.signed_incidence``) has
+    ``col(M_-) = col(L) = 1^⊥`` — the vectors whose per-coordinate sum over
+    workers vanishes (rank(M_-) = N - 1, and every column of M_- sums to
+    zero; connectivity gives equality). So the projection is just
+    per-coordinate mean subtraction over the worker axis — no matrix
+    factorization, and it works leaf-wise on pytrees. Preserved exactly by
+    the Eq. (23) dual update (the Laplacian maps into 1^⊥), so projecting
+    once after a topology/membership change keeps the Thm-3 condition for
+    the rest of the run.
+    """
+    def proj(a):
+        a32 = a.astype(jnp.float32)
+        return (a32 - jnp.mean(a32, axis=0, keepdims=True)).astype(a.dtype)
+    return jax.tree_util.tree_map(proj, alpha)
+
+
+def reinit_duals(alpha: E.Tree, graph: WorkerGraph,
+                 mode: str = "zero") -> E.Tree:
+    """Re-initialize duals after a topology refresh or membership change so
+    they satisfy the Thm-3 condition ``alpha^0 ∈ col(M_-)`` of the *new*
+    graph. ``mode="zero"`` is the paper's own choice (0 is in any column
+    space); ``mode="project"`` keeps the surviving workers' dual momentum
+    by projecting onto the new column space instead of discarding it."""
+    if mode == "zero":
+        return jax.tree_util.tree_map(jnp.zeros_like, alpha)
+    if mode == "project":
+        return project_duals(alpha, graph)
+    raise ValueError(f"unknown dual reinit mode {mode!r}")
+
+
+def dual_in_col_space(alpha: E.Tree, graph: WorkerGraph,
+                      atol: float = 1e-4) -> bool:
+    """Host-side check of the Thm-3 init condition: every coordinate of the
+    stacked dual tree lies in ``col(M_-)`` of ``graph`` (least-squares
+    residual against the signed incidence matrix below ``atol``, relative
+    to the dual's own norm). Used by the regression tests — the runtime
+    paths rely on the closed-form projection above."""
+    m = np.asarray(graph.signed_incidence, np.float64)       # (N, E)
+    flat = np.asarray(E._flatten_worker(alpha), np.float64)  # (N, d)
+    sol, *_ = np.linalg.lstsq(m, flat, rcond=None)
+    resid = m @ sol - flat
+    scale = max(float(np.linalg.norm(flat)), 1.0)
+    return float(np.linalg.norm(resid)) <= atol * scale
+
+
 def run_dynamic(topology: DynamicTopology, solver, cfg: E.EngineConfig,
                 dim: int, iters: int, seed: int = 0,
                 theta_star: Optional[jax.Array] = None,
@@ -59,7 +109,7 @@ def run_dynamic(topology: DynamicTopology, solver, cfg: E.EngineConfig,
                            topology=topo)
         # dual re-initialization: alpha = 0 lies in col(M_-) of ANY graph
         state = dataclasses.replace(
-            state, alpha=jnp.zeros_like(state.alpha))
+            state, alpha=reinit_duals(state.alpha, graph, mode="zero"))
         span = min(topology.refresh_every,
                    iters - phase * topology.refresh_every)
         keys = jax.random.split(jax.random.fold_in(key, phase), span)

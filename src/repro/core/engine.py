@@ -804,21 +804,38 @@ def _censor_masks(state: EngineState, candidate: Tree, cfg: EngineConfig,
 def _phase(state: EngineState, phase_mask: jax.Array, solver: LocalSolver,
            topo: topo_lib.Topology, rho_d: jax.Array, cfg: EngineConfig,
            key: jax.Array, batch: Any,
+           participation: Optional[jax.Array] = None,
            ) -> Tuple[EngineState, jax.Array, jax.Array, jax.Array,
-                      jax.Array, jax.Array]:
+                      jax.Array, jax.Array, jax.Array, jax.Array]:
     """One group's primal update + (grouped quantize) + (censor) + commit.
 
     The neighbor aggregation goes through the pluggable ``topo`` backend
     (dense matmul / sparse edge gather / sharded SPMD — DESIGN.md
     §Topology).
 
-    Returns the 6-tuple ``(new_state, tx_mask (N,), payload_bits (N,),
-    candidate_payload_bits (N,), bits (N, G), group_tx (N, G))`` restricted
-    to ``phase_mask`` (zeros elsewhere). ``payload_bits`` counts only bits
+    Returns the 8-tuple ``(new_state, tx_mask (N,), payload_bits (N,),
+    candidate_payload_bits (N,), bits (N, G), group_tx (N, G),
+    censor_mask (N,), offered_payload_bits (N,))`` restricted to
+    ``phase_mask`` (zeros elsewhere). ``payload_bits`` counts only bits
     actually put on the wire — a censored worker contributes exactly zero;
     ``candidate_payload_bits`` is what the transmission would have cost had
     censoring not suppressed it (the pre-fix metric, kept for
     energy-what-if accounting).
+
+    ``participation`` is the fleet-fault hook (DESIGN.md §Fleet): an
+    optional (N,) 0/1 mask of workers whose transmission arrives on time
+    this round. A timed-out worker is treated exactly like a censored
+    worker (the paper's machinery already prices "sent nothing this
+    round"): its local primal/quantizer chain still advances, but its
+    ``theta_hat`` commit is suppressed, its tx decision is forced to 0,
+    and it contributes exactly ZERO payload bits. The composed transmit
+    decision is always ``timeout_mask & censor_mask``
+    (``censoring.compose_tx_mask``). ``censor_mask``/``offered_payload``
+    report the censor-only decision and the bits the worker *offered* to
+    ship before the timeout composition — the staleness buffer charges
+    these at delivery time. With ``participation=None`` (the synchronous
+    golden path) ``censor_mask == tx_mask`` and
+    ``offered_payload == payload_bits``, bit-for-bit.
     """
     group_ids = resolve_groups(state.theta, cfg.groups)
     n_groups = max(group_ids) + 1
@@ -857,8 +874,18 @@ def _phase(state: EngineState, phase_mask: jax.Array, solver: LocalSolver,
             state.quant, theta)
 
     k_next = (state.k + 1).astype(jnp.float32)
-    cmask, group_cmask = _censor_masks(state, candidate, cfg, group_ids,
-                                       n_groups, k_next)
+    cmask_cens, gmask_cens = _censor_masks(state, candidate, cfg, group_ids,
+                                           n_groups, k_next)
+    if participation is not None:
+        # timeout composes AFTER the censor test: tx = timeout & censor.
+        # The censor decision itself (and the quantizer chain below) is
+        # timeout-agnostic — the worker computed its update on time, the
+        # network just didn't deliver it.
+        cmask, group_cmask = censor_lib.compose_tx_mask(
+            participation, cmask_cens, gmask_cens)
+    else:
+        cmask, group_cmask = cmask_cens, gmask_cens
+    censor_mask = cmask_cens * phase_mask          # censor-only decision
     tx_mask = cmask * phase_mask                   # only this phase acts
     group_tx = group_cmask * phase_mask[:, None]
     candidate_payload = payload * phase_mask       # cost had nothing censored
@@ -869,10 +896,14 @@ def _phase(state: EngineState, phase_mask: jax.Array, solver: LocalSolver,
             if cfg.quantize is not None else 0.0
         per_group = bits * dims[None, :] + overhead
         payload_tx = jnp.sum(per_group * group_tx, axis=-1)
+        offered_payload = payload_tx if participation is None else jnp.sum(
+            per_group * gmask_cens * phase_mask[:, None], axis=-1)
     else:
         # global mode: a censored link costs zero bits (censoring's whole
         # value proposition) — mask by the transmit decision, not the phase
         payload_tx = payload * tx_mask
+        offered_payload = payload_tx if participation is None \
+            else payload * censor_mask
 
     # theta_hat: each leaf commits where its group transmitted
     hat_leaves, treedef = jax.tree_util.tree_flatten(state.theta_hat)
@@ -902,7 +933,7 @@ def _phase(state: EngineState, phase_mask: jax.Array, solver: LocalSolver,
     new_state = dataclasses.replace(state, theta=theta, theta_hat=theta_hat,
                                     quant=quant, opt_mu=mu, opt_nu=nu)
     return (new_state, tx_mask, payload_tx, candidate_payload,
-            bits * pm_col, group_tx)
+            bits * pm_col, group_tx, censor_mask, offered_payload)
 
 
 MetricsFn = Callable[[EngineState, Any], Dict[str, jax.Array]]
@@ -914,15 +945,23 @@ def make_step(graph: WorkerGraph, cfg: EngineConfig, solver: LocalSolver,
               topology: Optional[topo_lib.Topology] = None):
     """Build the jittable per-iteration engine step.
 
-    ``step(state, batch, key) -> (state, metrics)``; ``batch`` is forwarded
-    to the local solver (None for data-free exact solvers). Metrics always
-    carry per-worker ``tx_mask``, ``payload_bits`` (bits actually
-    transmitted — zero for censored workers) and ``candidate_payload_bits``
-    (what the round would have cost uncensored), plus the layer-aware
-    ``group_tx``/``bits_per_group`` diagnostics and the ``dual_residual``
-    convergence term ``||rho (D - A) theta_hat||²`` (free — it reuses the
-    dual update's Laplacian); ``extra_metrics(state, batch)`` appends
-    problem-specific entries (residuals, losses).
+    ``step(state, batch, key[, participation]) -> (state, metrics)``;
+    ``batch`` is forwarded to the local solver (None for data-free exact
+    solvers). ``participation`` is the optional (N,) on-time mask of the
+    fleet harness (``fleet/sim.py``): a timed-out worker is composed into
+    the censoring decision (tx = timeout & censor, zero payload bits) —
+    ``None`` (default) is the synchronous golden path, traced without any
+    fault machinery. Metrics always carry per-worker ``tx_mask``,
+    ``payload_bits`` (bits actually transmitted — zero for censored OR
+    timed-out workers), ``candidate_payload_bits`` (what the round would
+    have cost uncensored), ``censor_mask``/``offered_payload_bits`` (the
+    censor-only decision and its cost before the timeout composition —
+    equal to ``tx_mask``/``payload_bits`` on the golden path), plus the
+    layer-aware ``group_tx``/``bits_per_group`` diagnostics and the
+    ``dual_residual`` convergence term ``||rho (D - A) theta_hat||²``
+    (free — it reuses the dual update's Laplacian);
+    ``extra_metrics(state, batch)`` appends problem-specific entries
+    (residuals, losses).
 
     Every graph operation rides the ``cfg.mix_backend`` topology backend;
     ``mesh``/``worker_axis`` are forwarded to the sharded backend (the
@@ -937,23 +976,29 @@ def make_step(graph: WorkerGraph, cfg: EngineConfig, solver: LocalSolver,
     tail = 1.0 - head
     rho_d = cfg.rho * topo.degrees
 
-    def step(state: EngineState, batch, key: jax.Array):
+    def step(state: EngineState, batch, key: jax.Array,
+             participation: Optional[jax.Array] = None):
         k1, k2 = jax.random.split(key)
         if cfg.alternating:
-            state, tx_h, pay_h, cand_h, bits_h, gtx_h = _phase(
-                state, head, solver, topo, rho_d, cfg, k1, batch)
-            state, tx_t, pay_t, cand_t, bits_t, gtx_t = _phase(
-                state, tail, solver, topo, rho_d, cfg, k2, batch)
+            state, tx_h, pay_h, cand_h, bits_h, gtx_h, cm_h, off_h = _phase(
+                state, head, solver, topo, rho_d, cfg, k1, batch,
+                participation=participation)
+            state, tx_t, pay_t, cand_t, bits_t, gtx_t, cm_t, off_t = _phase(
+                state, tail, solver, topo, rho_d, cfg, k2, batch,
+                participation=participation)
             tx_mask = tx_h + tx_t
             payload = pay_h + pay_t
             candidate_payload = cand_h + cand_t
             bits_g = bits_h + bits_t
             group_tx = gtx_h + gtx_t
+            censor_mask = cm_h + cm_t
+            offered_payload = off_h + off_t
         else:
             all_mask = jnp.ones_like(head)
-            state, tx_mask, payload, candidate_payload, bits_g, group_tx = \
+            (state, tx_mask, payload, candidate_payload, bits_g, group_tx,
+             censor_mask, offered_payload) = \
                 _phase(state, all_mask, solver, topo, rho_d, cfg, k1,
-                       batch)
+                       batch, participation=participation)
 
         # Dual update, Eq. (23): alpha += rho * (D - A) theta_hat. The
         # Laplacian goes through the same topology backend (and therefore
@@ -973,6 +1018,8 @@ def make_step(graph: WorkerGraph, cfg: EngineConfig, solver: LocalSolver,
             "candidate_payload_bits": candidate_payload,
             "bits_per_group": bits_g,
             "group_tx": group_tx,
+            "censor_mask": censor_mask,
+            "offered_payload_bits": offered_payload,
             # squared norm of the dual step rho (D - A) theta_hat, from
             # the Laplacian already computed for alpha (no extra mix);
             # -> 0 exactly at consensus of the transmitted models

@@ -297,3 +297,26 @@ def random_bipartite_graph(n: int, p: float, seed: int = 0,
 def pod_pair_graph() -> WorkerGraph:
     """The 2-worker graph used for pod-granular consensus: one edge H-T."""
     return complete_bipartite_graph(1, 1)
+
+
+def membership_graph(n: int, p: float, seed: int = 0,
+                     epoch: int = 0) -> WorkerGraph:
+    """Redraw the fleet's communication graph for its current membership.
+
+    One membership *epoch* = one (join/leave) event; each epoch gets an
+    independent connected bipartite graph over the surviving + joined
+    workers, with the head/tail split rebalanced to ``n // 2`` heads (the
+    random generator's default) — so a fleet that churns down to N=2 still
+    gets the single-edge H-T pair and ``validate()`` keeps holding. The
+    draw is a pure function of ``(seed, epoch, n)`` (hashed through
+    ``SeedSequence`` so consecutive epochs are decorrelated), which is what
+    makes churn traces replayable from one fleet seed.
+
+    All CSR/edge-list metadata (``edge_src``/``edge_dst``,
+    ``csr_offsets``/``csr_indices``, ``neighbor_table``,
+    ``signed_incidence``) re-derives lazily on the fresh instance — there
+    is no stale-cache hazard across membership changes by construction.
+    """
+    assert n >= 2, f"fleet membership must keep >= 2 workers, got {n}"
+    derived = int(np.random.SeedSequence([seed, epoch, n]).generate_state(1)[0])
+    return random_bipartite_graph(n, p, seed=derived)

@@ -116,6 +116,23 @@ class Topology:
         (Eq. 28) over a flat ``(N, d)`` view."""
         raise NotImplementedError
 
+    def rebuild(self, graph: WorkerGraph) -> "Topology":
+        """Re-derive this backend's graph metadata for a *new* graph —
+        membership changed (fleet join/leave) or the topology was redrawn —
+        preserving the backend selection and kernel routing. The dense
+        adjacency, the sparse CSR/edge arrays, and the sharded mesh
+        bindings are all rebuilt from the new :class:`WorkerGraph`'s cached
+        metadata; everything the engine compiled against (the Topology
+        interface) is unchanged, so callers just re-jit their step against
+        the returned instance."""
+        kwargs = {}
+        if self.backend == "sharded":
+            # the mesh axis must still divide the new worker count;
+            # build() re-validates and re-binds the same mesh axes
+            kwargs = {"mesh": self.mesh, "worker_axis": self.axis}
+        return build(graph, self.backend, use_pallas_mix=self.use_pallas,
+                     **kwargs)
+
     def dual_residual(self, lap: Tree) -> jax.Array:
         """Squared norm of a Laplacian image, summed over the tree. With
         ``lap = laplacian(theta_hat)`` (already in hand from the dual

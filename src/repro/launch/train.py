@@ -41,6 +41,80 @@ from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update
 from repro.runtime import steps as ST
 
 
+def parse_churn(spec):
+    """Parse ``--fleet-churn`` "round:leave:join[,round:leave:join...]"
+    into a tuple of :class:`repro.fleet.ChurnEvent`."""
+    from repro.fleet import ChurnEvent
+    if not spec:
+        return ()
+    events = []
+    for item in spec.split(","):
+        parts = item.split(":")
+        if len(parts) != 3:
+            raise SystemExit(
+                f"[train] bad --fleet-churn item {item!r} — expected "
+                f"round:leave:join (e.g. '10:2:1,20:1:0')")
+        try:
+            events.append(ChurnEvent(round=int(parts[0]),
+                                     leave=int(parts[1]),
+                                     join=int(parts[2])))
+        except (ValueError, AssertionError) as e:
+            raise SystemExit(
+                f"[train] bad --fleet-churn item {item!r}: {e}") from e
+    return tuple(events)
+
+
+def run_fleet(cfg, args, graph, ecfg, solver, loss_fn, params, data) -> dict:
+    """Drive the consensus-LM run through FleetSim (DESIGN.md §Fleet):
+    straggler timeouts fold into the censor mask, late updates land through
+    the bounded-staleness buffer, churn redraws the graph and remaps state.
+    With all fault knobs at their defaults every round dispatches to the
+    plain synchronous engine step (the bit-identity contract pinned in
+    tests/test_fleet.py; per-round keys are fold_in-derived, so the
+    trajectory differs from run_admm's own loop only through its key
+    schedule)."""
+    from repro.fleet import FaultConfig, FleetConfig, FleetSim
+    fcfg = FleetConfig(
+        rounds=args.steps,
+        faults=FaultConfig(participation=args.fleet_participation,
+                           staleness=args.fleet_staleness,
+                           stale_frac=args.fleet_stale_frac,
+                           churn=parse_churn(args.fleet_churn),
+                           seed=args.fleet_seed),
+        graph_seed=args.seed, seed=args.seed)
+    per = args.batch // args.workers
+
+    def batch_fn(r, members):
+        raw = data.worker_batch(r, len(members), per)
+        return model_batch(cfg, raw, key=jax.random.PRNGKey(r))
+
+    sim = FleetSim(args.workers, ecfg, fcfg, params, solver=solver,
+                   extra_metrics=E.consensus_metrics(loss_fn),
+                   batch_fn=batch_fn, graph0=graph)
+    t0 = time.time()
+    fs, m = sim.run()
+    history = [float(x) for x in np.asarray(m["loss"])]
+    total_bits = float(np.sum(m["payload_bits_total"]))
+    for i in range(args.steps):
+        if i % args.log_every == 0 or i == args.steps - 1:
+            print(f"round {i:4d}  loss={history[i]:.4f}  "
+                  f"tx={int(m['tx_count'][i])}/{int(m['n_members'][i])}  "
+                  f"bits={float(m['payload_bits_total'][i]):.3e}")
+    for ev in m["churn_log"]:
+        print(f"[fleet] round {ev['round']}: left={ev['left']} "
+              f"joined={ev['joined']} -> {ev['n_members']} members")
+    print(f"[fleet] {args.steps} rounds, participation="
+          f"{args.fleet_participation} staleness={args.fleet_staleness}: "
+          f"final_loss={history[-1]:.4f} cum_bits={total_bits:.3e} "
+          f"({(time.time() - t0) / args.steps:.2f}s/round)")
+    if args.ckpt_dir:
+        ckpt.save(args.ckpt_dir, args.steps, fs.engine.theta)
+    return {"final_loss": history[-1], "history": history,
+            "total_bits": total_bits,
+            "n_groups": fs.engine.quant.n_groups,
+            "churn_log": m["churn_log"]}
+
+
 def run_admm(cfg, args) -> dict:
     graph = ST.worker_graph(args.workers, args.topology)
     try:
@@ -94,9 +168,17 @@ def run_admm(cfg, args) -> dict:
                                    extra_metrics=E.consensus_metrics(
                                        loss_fn)))
 
-    step = build_step(ecfg)
     data = SyntheticLM(SyntheticLMConfig(cfg.vocab_size, args.seq,
                                          seed=args.seed))
+    if args.fleet:
+        if args.regroup_every:
+            raise SystemExit(
+                "[train] --fleet is incompatible with --regroup-every: "
+                "auto regrouping re-jits the step on a schedule the fleet "
+                "driver owns (churn already rebuilds it)")
+        return run_fleet(cfg, args, graph, ecfg, solver, loss_fn, params,
+                         data)
+    step = build_step(ecfg)
     total_bits = 0.0
     t0 = time.time()
     history = []
@@ -320,6 +402,23 @@ def main(argv=None) -> dict:
     ap.add_argument("--bits", type=int, default=4)
     ap.add_argument("--omega", type=float, default=0.999)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--fleet", action="store_true",
+                    help="drive the admm run through FleetSim (DESIGN.md "
+                         "§Fleet): straggler timeouts, bounded-staleness "
+                         "delivery, churn. All knobs at defaults is "
+                         "bit-identical to the plain synchronous run")
+    ap.add_argument("--fleet-participation", type=float, default=1.0,
+                    help="per-round P(a worker's update arrives on time)")
+    ap.add_argument("--fleet-staleness", type=int, default=0,
+                    help="max delivery lag (rounds) for late updates; "
+                         "0 means late updates are dropped outright")
+    ap.add_argument("--fleet-stale-frac", type=float, default=1.0,
+                    help="P(a late update is delayed rather than dropped)")
+    ap.add_argument("--fleet-churn", default="",
+                    help="membership changes as round:leave:join[,...] — "
+                         "e.g. '10:2:1,20:1:0'")
+    ap.add_argument("--fleet-seed", type=int, default=0,
+                    help="fault-schedule seed (replays the same trace)")
     ap.add_argument("--log-every", type=int, default=5)
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=100)
@@ -356,6 +455,10 @@ def main(argv=None) -> dict:
     if args.mode == "admm":
         assert args.batch % args.workers == 0
         return run_admm(cfg, args)
+    if args.fleet:
+        raise SystemExit("[train] --fleet only applies to --mode admm "
+                         "(the fleet simulator drives the consensus "
+                         "engine, not the FSDP baseline)")
     return run_fsdp(cfg, args)
 
 

@@ -1,10 +1,16 @@
-"""D-GGADMM (time-varying topology) extension."""
+"""D-GGADMM (time-varying topology) extension + the Thm-3 dual
+column-space regression: after every topology refresh (and after fleet
+join/leave remaps) the duals must lie in col(M_-) of the *new* signed
+incidence matrix."""
+import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
 from repro.core import admm_baselines as ab
-from repro.core.dynamic import DynamicTopology, run_dynamic
+from repro.core.dynamic import (DynamicTopology, dual_in_col_space,
+                                project_duals, reinit_duals, run_dynamic)
+from repro.core.graph import membership_graph, random_bipartite_graph
 from repro.core.solvers import LinearRegressionProblem
 from repro.data import regression as R
 
@@ -49,3 +55,55 @@ def test_graph_actually_changes():
     topo = DynamicTopology(n_workers=10, p=0.35, refresh_every=10, seed=0)
     g0, g1 = topo.graph_at(0), topo.graph_at(1)
     assert not np.array_equal(g0.adjacency, g1.adjacency)
+
+
+# --------------------------------------- Thm-3 dual column-space checks --
+def _random_alpha(n, key=0):
+    k = jax.random.PRNGKey(key)
+    return {"w": jax.random.normal(k, (n, 9)),
+            "b": jax.random.normal(jax.random.fold_in(k, 1), (n, 3))}
+
+
+def test_reinit_duals_zero_in_col_space():
+    """alpha = 0 lies in col(M_-) of any graph (the paper's own init)."""
+    alpha = _random_alpha(8)
+    for epoch in range(3):
+        g = membership_graph(8, 0.4, seed=0, epoch=epoch)
+        z = reinit_duals(alpha, g, mode="zero")
+        assert all(float(jnp.abs(x).max()) == 0.0
+                   for x in jax.tree_util.tree_leaves(z))
+        assert dual_in_col_space(z, g)
+
+
+def test_reinit_duals_project_in_col_space():
+    """The 'project' mode keeps dual momentum while restoring the Thm-3
+    condition: for connected graphs col(M_-) = 1^⊥, so the projection is
+    mean subtraction over workers — idempotent, and in col space of every
+    connected graph of the same size."""
+    alpha = _random_alpha(10, key=3)
+    g = random_bipartite_graph(10, 0.4, seed=2)
+    assert not dual_in_col_space(alpha, g)     # random tree: not in 1^⊥
+    proj = reinit_duals(alpha, g, mode="project")
+    assert dual_in_col_space(proj, g)
+    # idempotent, and valid for a *different* connected graph too
+    again = project_duals(proj, g)
+    for a, b in zip(jax.tree_util.tree_leaves(proj),
+                    jax.tree_util.tree_leaves(again)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6)
+    assert dual_in_col_space(proj, membership_graph(10, 0.5, seed=7))
+    with pytest.raises(ValueError):
+        reinit_duals(alpha, g, mode="nope")
+
+
+def test_dynamic_duals_in_col_space_after_refresh():
+    """Regression: through run_dynamic's topology refreshes the duals stay
+    in col(M_-) of the final phase's graph — the refresh re-init plus the
+    Laplacian dual update (which maps into 1^⊥) preserve the condition."""
+    prob = _problem(n_workers=8)
+    topo = DynamicTopology(n_workers=8, p=0.4, refresh_every=5, seed=2)
+    state, _ = run_dynamic(topo, prob, ab.ggadmm(rho=1.0), dim=prob.dim,
+                           iters=20)
+    last_graph = topo.graph_at(3)             # 20 iters / 5 = 4 phases
+    assert dual_in_col_space(state.alpha, last_graph, atol=1e-3)
+    # and a nonzero dual actually accumulated (the check is not vacuous)
+    assert float(jnp.abs(state.alpha).max()) > 0.0

@@ -1,0 +1,357 @@
+"""FleetSim (fleet/sim.py + fleet/faults.py): straggler / staleness /
+churn-tolerant rounds, golden-tested against the synchronous engine.
+
+* Golden equivalence: participation=1.0, staleness=0, no churn is
+  **bit-identical** to the plain synchronous engine — metrics AND final
+  state — across groups x censor_mode x mix_backend. The fleet layer must
+  cost exactly nothing when the fleet is healthy.
+* Payload accounting: a timed-out / dark worker contributes exactly zero
+  bits; the round total is the sum over transmitting workers only.
+* Properties (hypothesis; offline-skipped via _hypothesis_stub, with
+  plain seeded-determinism tests that always run): fault traces are a
+  pure function of the config, the pure-python staleness mirror replays
+  the jitted buffer automaton, and the composed transmit mask is exactly
+  ``timeout_mask & censor_mask``.
+* Churn: membership changes keep the graph bipartite + connected with
+  rebalanced head/tail split down to N=2, CSR/edge views round-trip, and
+  the re-initialized duals satisfy the Thm-3 column-space condition.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    from _hypothesis_stub import given, settings, st
+
+from repro.core import dynamic as dyn
+from repro.core import engine as E
+from repro.core.censoring import CensorConfig, compose_tx_mask
+from repro.core.graph import membership_graph, random_bipartite_graph
+from repro.core.quantization import QuantConfig
+from repro.core.solvers import LinearRegressionProblem
+from repro.data import regression as R
+from repro.fleet import (ChurnEvent, FaultConfig, FaultSchedule,
+                         FleetConfig, FleetSim, run_synchronous,
+                         staleness_trace)
+
+N, DIM, ROUNDS = 6, 12, 10
+
+
+@pytest.fixture(scope="module")
+def linreg():
+    data = R.synth_linear(n=N * 30, d=DIM, seed=0)
+    g = random_bipartite_graph(N, 0.4, seed=0)
+    x, y = R.partition_uniform(data, N)
+    return g, LinearRegressionProblem(jnp.asarray(x), jnp.asarray(y))
+
+
+def _cfg(groups="model", censor_mode="global", mix_backend="dense",
+         censor=True):
+    return E.EngineConfig(
+        rho=1.0,
+        censor=CensorConfig(tau0=0.5, xi=0.97) if censor else CensorConfig(),
+        quantize=QuantConfig(b0=2, omega=0.99),
+        groups=groups, censor_mode=censor_mode, mix_backend=mix_backend)
+
+
+def _theta0(n=N):
+    # two leaves so groups="leaf" actually exercises G > 1
+    return {"w": jnp.zeros((n, DIM - 4), jnp.float32),
+            "b": jnp.zeros((n, 4), jnp.float32)}
+
+
+def _run_pair(graph, prob, cfg, fault_cfg, rounds=ROUNDS, seed=0):
+    """(synchronous golden arm, fleet arm) on identical graph/solver."""
+    solver = E.ExactSolver(prob)
+    sync_state, sync_m = run_synchronous(graph, cfg, solver, _theta0(),
+                                         rounds, seed=seed)
+    fcfg = FleetConfig(rounds=rounds, faults=fault_cfg, seed=seed)
+    sim = FleetSim(N, cfg, fcfg, _theta0(), solver=solver, graph0=graph)
+    fs, fleet_m = sim.run()
+    return (sync_state, sync_m), (fs, fleet_m), sim
+
+
+# ---------------------------------------------------------------- golden --
+@pytest.mark.parametrize("groups", ["model", "leaf"])
+@pytest.mark.parametrize("censor_mode", ["global", "group"])
+@pytest.mark.parametrize("mix_backend", ["dense", "sparse"])
+def test_faultfree_fleet_bit_identical(linreg, groups, censor_mode,
+                                       mix_backend):
+    """The healthy fleet IS the synchronous engine: every per-round metric
+    and the final theta / theta_hat / alpha match bit for bit."""
+    g, prob = linreg
+    cfg = _cfg(groups, censor_mode, mix_backend)
+    (sync_state, sync_m), (fs, fleet_m), _ = _run_pair(
+        g, prob, cfg, FaultConfig())
+    for k in ("tx_mask", "payload_bits", "candidate_payload_bits",
+              "bits_per_group", "group_tx", "censor_mask",
+              "offered_payload_bits"):
+        np.testing.assert_array_equal(
+            np.asarray(fleet_m[k]), np.asarray(sync_m[k]),
+            err_msg=f"metric {k} diverged "
+                    f"({groups}/{censor_mode}/{mix_backend})")
+    for name in ("theta", "theta_hat", "alpha"):
+        fa = jax.tree_util.tree_leaves(getattr(fs.engine, name))
+        sa = jax.tree_util.tree_leaves(getattr(sync_state, name))
+        for f_leaf, s_leaf in zip(fa, sa):
+            np.testing.assert_array_equal(np.asarray(f_leaf),
+                                          np.asarray(s_leaf),
+                                          err_msg=f"state {name} diverged")
+    # no fault machinery fired
+    assert np.all(np.asarray(fleet_m["fleet_participation"]) == 1.0)
+    assert np.all(np.asarray(fleet_m["fleet_deliver"]) == 0.0)
+
+
+# ---------------------------------------------------- payload accounting --
+@pytest.mark.parametrize("censor_mode", ["global", "group"])
+def test_timed_out_worker_charges_zero_bits(linreg, censor_mode):
+    """tx_mask == 0 (censored, dropped, or in flight) => exactly 0 payload
+    bits that round; the round total is the sum over transmitters only."""
+    g, prob = linreg
+    cfg = _cfg("leaf", censor_mode)
+    faults = FaultConfig(participation=0.5, staleness=2, seed=1)
+    _, (fs, m), _ = _run_pair(g, prob, cfg, faults, rounds=16)
+    payload = np.asarray(m["payload_bits"])        # (rounds, N)
+    tx = np.asarray(m["tx_mask"])
+    assert np.any(tx == 0.0), "fault schedule produced no dark rounds"
+    assert np.all(payload[tx == 0.0] == 0.0)
+    np.testing.assert_allclose(
+        np.asarray(m["payload_bits_total"]),
+        np.sum(payload * (tx > 0), axis=1), rtol=0, atol=0)
+    # a worker dark for the engine (timed out / in flight) offers bits but
+    # transmits none — unless a held packet lands that same round
+    dark = np.asarray(m["fleet_participation"]) == 0.0
+    deliver = np.asarray(m["fleet_deliver"]) > 0.0
+    assert np.all(payload[dark & ~deliver] == 0.0)
+
+
+def test_group_payload_total_matches_group_tx(linreg):
+    """Group-mode accounting identity under faults: per-worker payload ==
+    sum over its transmitting groups of that group's bit cost."""
+    g, prob = linreg
+    cfg = _cfg("leaf", "group")
+    faults = FaultConfig(participation=0.6, seed=2)
+    _, (fs, m), _ = _run_pair(g, prob, cfg, faults, rounds=12)
+    deliver = np.asarray(m["fleet_deliver"])
+    for r in range(12):
+        if np.any(deliver[r] > 0):
+            continue              # arrival rounds re-charge held bits
+        group_tx = np.asarray(m["group_tx"][r])    # (N, G)
+        bits_g = np.asarray(m["bits_per_group"][r])  # (N, G)
+        payload = np.asarray(m["payload_bits"][r])
+        gids = E.resolve_groups(_theta0(), cfg.groups)
+        dims = np.asarray(E.group_dims(_theta0(), gids), np.float64)
+        per_group = bits_g * dims[None, :] + cfg.quantize.b_overhead
+        expect = np.sum(per_group * group_tx, axis=1)
+        np.testing.assert_allclose(payload, expect, rtol=1e-6)
+
+
+# ------------------------------------------------------------ properties --
+@given(seed=st.integers(0, 2 ** 16), participation=st.floats(0.2, 0.9),
+       staleness=st.integers(0, 4))
+@settings(max_examples=20, deadline=None)
+def test_fault_trace_deterministic_property(seed, participation, staleness):
+    cfg = FaultConfig(participation=participation, staleness=staleness,
+                      seed=seed)
+    a, b = FaultSchedule(cfg), FaultSchedule(cfg)
+    gids = list(range(7))
+    for r in (0, 3, 5):
+        fa, fb = a.round_faults(r, gids), b.round_faults(r, gids)
+        np.testing.assert_array_equal(fa.drop, fb.drop)
+        np.testing.assert_array_equal(fa.lag, fb.lag)
+
+
+def test_fault_trace_deterministic():
+    """Always-on (non-hypothesis) determinism check: the trace is a pure
+    function of (seed, round, gid) — query order and membership history
+    cannot change a worker's draw."""
+    cfg = FaultConfig(participation=0.5, staleness=3, stale_frac=0.7,
+                      skew=0.2, seed=7)
+    a, b = FaultSchedule(cfg), FaultSchedule(cfg)
+    # query b in reverse round order and with a permuted/short member list
+    rev = {r: b.round_faults(r, [3, 1, 5]) for r in reversed(range(8))}
+    for r in range(8):
+        fa = a.round_faults(r, [0, 1, 2, 3, 4, 5])
+        fb = rev[r]
+        np.testing.assert_array_equal(fa.drop[[3, 1, 5]], fb.drop)
+        np.testing.assert_array_equal(fa.lag[[3, 1, 5]], fb.lag)
+    assert any(np.any(a.round_faults(r, range(6)).drop)
+               or np.any(a.round_faults(r, range(6)).lag)
+               for r in range(8))
+
+
+def test_staleness_mirror_matches_jitted(linreg):
+    """The pure-python staleness automaton replays the jitted one round for
+    round (censoring disabled so every started buffer is offered)."""
+    g, prob = linreg
+    cfg = _cfg(censor=False)
+    faults = FaultConfig(participation=0.5, staleness=3, seed=3)
+    _, (fs, m), sim = _run_pair(g, prob, cfg, faults, rounds=14)
+    sched = FaultSchedule(faults)
+    rfs = [sched.round_faults(r, list(range(N))) for r in range(14)]
+    drops = np.stack([rf.drop for rf in rfs])
+    lags = np.stack([rf.lag for rf in rfs])
+    part, deliver, timers = staleness_trace(drops, lags)
+    np.testing.assert_array_equal(part,
+                                  np.asarray(m["fleet_participation"]))
+    np.testing.assert_array_equal(deliver, np.asarray(m["fleet_deliver"]))
+    np.testing.assert_array_equal(timers, np.asarray(m["fleet_timer"]))
+
+
+@given(seed=st.integers(0, 2 ** 16))
+@settings(max_examples=20, deadline=None)
+def test_staleness_mirror_invariants_property(seed):
+    rng = np.random.default_rng(seed)
+    drops = (rng.uniform(size=(20, 5)) < 0.3).astype(np.float32)
+    lags = np.where(rng.uniform(size=(20, 5)) < 0.3,
+                    rng.integers(1, 4, size=(20, 5)), 0).astype(np.int32)
+    lags = np.where(drops > 0, 0, lags)
+    part, deliver, timers = staleness_trace(drops, lags)
+    assert np.all((part == 0) | (part == 1))
+    # one in-flight packet per worker: delivery only from a live timer
+    assert np.all(deliver[0] == 0)
+    assert np.all((deliver[1:] == 0) | (timers[:-1] > 0))
+
+
+def test_composed_tx_mask_is_timeout_and_censor(linreg):
+    """Inside the engine the transmit decision is exactly
+    ``timeout_mask & censor_mask`` — recoverable from the fleet metrics as
+    tx (minus stale arrivals) == censor decision x participation."""
+    g, prob = linreg
+    cfg = _cfg("model", "global")
+    faults = FaultConfig(participation=0.5, staleness=2, seed=5)
+    _, (fs, m), _ = _run_pair(g, prob, cfg, faults, rounds=16)
+    tx = np.asarray(m["tx_mask"])
+    deliver = np.asarray(m["fleet_deliver"])
+    censor = np.asarray(m["censor_mask"])
+    part = np.asarray(m["fleet_participation"])
+    np.testing.assert_array_equal(tx - deliver, censor * part)
+    # and the pure helper agrees leaf-wise
+    cm = jnp.asarray([1.0, 0.0, 1.0, 1.0])
+    gm = jnp.ones((4, 3))
+    tm = jnp.asarray([1.0, 1.0, 0.0, 1.0])
+    out, gout = compose_tx_mask(tm, cm, gm)
+    np.testing.assert_array_equal(np.asarray(out), [1.0, 0.0, 0.0, 1.0])
+    np.testing.assert_array_equal(np.asarray(gout),
+                                  np.asarray(gm * tm[:, None]))
+
+
+# ----------------------------------------------------------------- churn --
+def test_membership_graph_down_to_two():
+    """Churning down to the N=2 floor keeps every invariant: bipartite,
+    connected, head/tail rebalanced, CSR/edge views round-tripping
+    (``validate()`` checks all of it)."""
+    for n in range(6, 1, -1):
+        g = membership_graph(n, 0.4, seed=0, epoch=6 - n)
+        g.validate()
+        assert g.n == n
+        assert int(g.head_mask.sum()) == n // 2
+    g2 = membership_graph(2, 0.4, seed=0, epoch=9)
+    assert g2.num_edges == 1 and int(g2.head_mask.sum()) == 1
+
+
+def test_membership_graph_deterministic_and_decorrelated():
+    a = membership_graph(8, 0.4, seed=1, epoch=3)
+    b = membership_graph(8, 0.4, seed=1, epoch=3)
+    np.testing.assert_array_equal(a.adjacency, b.adjacency)
+    c = membership_graph(8, 0.4, seed=1, epoch=4)
+    assert not np.array_equal(a.adjacency, c.adjacency)
+
+
+def test_churn_remap_and_dual_col_space(linreg):
+    """Join/leave events mid-run: survivors keep state rows, duals land in
+    col(M_-) of every new graph (Thm-3), graphs validate, and the run
+    keeps stepping with the new membership."""
+    g, prob = linreg
+    cfg = _cfg("leaf", "group")
+    checks = []
+
+    def on_churn(r, graph, fs):
+        graph.validate()
+        checks.append((r, graph.n,
+                       dyn.dual_in_col_space(fs.engine.alpha, graph)))
+
+    faults = FaultConfig(participation=0.8, staleness=1, seed=4,
+                         churn=(ChurnEvent(round=4, leave=2, join=1),
+                                ChurnEvent(round=8, leave=1, join=0)))
+    fcfg = FleetConfig(rounds=12, faults=faults, seed=0)
+
+    def solver_factory(members, graph):
+        # per-member data shard: slice the base problem by gid modulo N
+        rows = [int(gid) % N for gid in members]
+        return E.ExactSolver(LinearRegressionProblem(
+            prob.x[np.asarray(rows)], prob.y[np.asarray(rows)]))
+
+    sim = FleetSim(N, cfg, fcfg, _theta0(), solver_factory=solver_factory,
+                   graph0=g, on_churn=on_churn)
+    fs, m = sim.run()
+    assert [c[:2] for c in checks] == [(4, 5), (8, 4)]
+    assert all(ok for *_, ok in checks)
+    assert m["churn_log"][0]["n_members"] == 5
+    assert m["churn_log"][1]["n_members"] == 4
+    # engine state rides the new membership
+    assert E._flatten_worker(fs.engine.theta).shape[0] == 4
+    assert np.asarray(m["n_members"]).tolist() == [6] * 4 + [5] * 4 + [4] * 4
+    # survivors' quantizer chains stayed initialized across the remap
+    assert float(np.asarray(fs.engine.quant.initialized).sum()) > 0
+
+
+def test_churn_repeated_leaves_to_floor(linreg):
+    """Leave events all the way down to the 2-worker floor — pick_leavers
+    clamps so the fleet never drops below N=2."""
+    g, prob = linreg
+    cfg = _cfg()
+    faults = FaultConfig(seed=0, churn=tuple(
+        ChurnEvent(round=2 * i + 1, leave=2) for i in range(4)))
+    fcfg = FleetConfig(rounds=10, faults=faults, seed=0)
+
+    def solver_factory(members, graph):
+        rows = [int(gid) % N for gid in members]
+        return E.ExactSolver(LinearRegressionProblem(
+            prob.x[np.asarray(rows)], prob.y[np.asarray(rows)]))
+
+    sim = FleetSim(N, cfg, fcfg, _theta0(), solver_factory=solver_factory,
+                   graph0=g)
+    fs, m = sim.run()
+    sizes = [ev["n_members"] for ev in m["churn_log"]]
+    assert sizes == [4, 2, 2, 2]          # clamped at the floor
+    assert E._flatten_worker(fs.engine.theta).shape[0] == 2
+    sim.graph.validate()
+
+
+# ------------------------------------------------------------ convergence --
+@pytest.mark.slow
+def test_degraded_fleet_still_converges(linreg):
+    """participation=0.6 stays within 2x of the synchronous objective gap
+    order of magnitude at equal rounds (graceful degradation)."""
+    g, prob = linreg
+    cfg = _cfg()
+    solver = E.ExactSolver(prob)
+    f_star = float(prob.global_loss(prob.optimum()))
+
+    def metrics_fn(state, batch):
+        del batch
+        flat = E._flatten_worker(state.theta)
+        return {"objective": prob.global_loss(jnp.mean(flat, axis=0))}
+
+    rounds = 120
+    _, sync_m = run_synchronous(g, cfg, solver, _theta0(), rounds, seed=0,
+                                extra_metrics=metrics_fn)
+    fcfg = FleetConfig(rounds=rounds,
+                       faults=FaultConfig(participation=0.6, seed=0),
+                       seed=0)
+    sim = FleetSim(N, cfg, fcfg, _theta0(), solver=solver,
+                   extra_metrics=metrics_fn, graph0=g)
+    _, m = sim.run()
+    sync_gap = abs(float(np.asarray(sync_m["objective"])[-1]) - f_star)
+    fleet_gap = abs(float(np.asarray(m["objective"])[-1]) - f_star)
+    gap0 = abs(float(np.asarray(m["objective"])[0]) - f_star)
+    assert fleet_gap <= 2.0 * max(sync_gap, 1e-3 * gap0)
+    # and it transmitted fewer bits doing so
+    assert np.sum(m["payload_bits_total"]) <= \
+        1.5 * np.sum(sync_m["payload_bits_total"])
