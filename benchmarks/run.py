@@ -36,6 +36,11 @@ def main(argv=None) -> int:
                     help="results store path (default: BENCH_engine.json)")
     ap.add_argument("--state-root", default="campaigns",
                     help="per-run state directory root (default: campaigns)")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="write a Chrome-trace/Perfetto JSON of the "
+                         "campaign (one span per run on "
+                         "'<stage>/<display>' tracks; same as "
+                         "REPRO_TRACE=PATH)")
     # legacy aliases, kept so existing invocations keep working
     ap.add_argument("--engine-smoke", action="store_true",
                     help=argparse.SUPPRESS)
@@ -79,11 +84,16 @@ def main(argv=None) -> int:
         campaign = campaign.subset(
             [s.name for s in campaign.stages if s.name not in drop])
 
+    if args.trace:
+        from repro.obs import trace as obs_trace
+        obs_trace.enable(args.trace)
     t0 = time.time()
     summary = Runner(campaign, store=ResultStore(args.out),
                      state_root=args.state_root, resume=args.resume,
                      only=args.only).run()
     print(f"# benchmarks done in {time.time() - t0:.0f}s")
+    if args.trace:
+        obs_trace.save()
     return summary.exit_code
 
 

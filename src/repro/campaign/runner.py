@@ -21,6 +21,7 @@ from __future__ import annotations
 
 import dataclasses
 import inspect
+import json
 import time
 import traceback
 from pathlib import Path
@@ -29,6 +30,7 @@ from typing import Any, Callable, Dict, List, Optional, Tuple
 from repro.campaign.spec import Campaign, RunSpec, Stage
 from repro.campaign.store import Record, ResultStore, atomic_write_json
 from repro.checkpoint import npz as _npz
+from repro.obs import trace as obs_trace
 
 DEFAULT_STATE_ROOT = "campaigns"
 
@@ -150,6 +152,21 @@ class Runner:
                            "key": spec.key, "status": status,
                            "attempts": attempts, "error": error})
 
+    def _event(self, **fields: Any) -> None:
+        """Append one structured event to ``<campaign>/events.jsonl`` — the
+        machine-readable mirror of the ``run,...``/``claim,...`` stdout
+        lines (whose format CI parses and which stays byte-identical).
+        A single write() of a complete line keeps appends atomic."""
+        path = self.state_root / self.campaign.name / "events.jsonl"
+        path.parent.mkdir(parents=True, exist_ok=True)
+        fields.setdefault("ts", time.time())
+        with open(path, "a") as f:
+            f.write(json.dumps(fields, sort_keys=True) + "\n")
+
+    def _meta(self, spec: RunSpec) -> Dict[str, Any]:
+        return {"campaign": self.campaign.name, "stage": spec.stage,
+                "key": spec.key, "name": spec.display}
+
     # --------------------------------------------------------- execution --
     def _stage_plan(self) -> List[Tuple[Stage, bool]]:
         """Topologically-ordered ``(stage, resume_for_stage)`` pairs.
@@ -174,6 +191,8 @@ class Runner:
             if blocked:
                 for spec in st.runs:
                     print(f"run,{st.name},{spec.key},{spec.display},blocked")
+                    self._event(event="run", status="blocked",
+                                **self._meta(spec))
                     results.append(RunResult(spec, "blocked",
                                              error=f"dependency failed: "
                                                    f"{blocked}"))
@@ -191,6 +210,10 @@ class Runner:
               f"executed={summary.executed} skipped={summary.skipped} "
               f"failed={summary.failed} "
               f"claim_failures={summary.claims_failed}")
+        self._event(event="summary", campaign=self.campaign.name,
+                    executed=summary.executed, skipped=summary.skipped,
+                    failed=summary.failed,
+                    claim_failures=summary.claims_failed)
         return summary
 
     def _run_one(self, spec: RunSpec, resume: bool) -> RunResult:
@@ -200,11 +223,26 @@ class Runner:
             # complete (and byte-identical) even if the previous process
             # died between the record write and the store merge
             record = self._load_record(spec)
-            self.store.merge(record)
+            self.store.merge(record, meta=self._meta(spec))
             print(f"run,{spec.stage},{spec.key},{spec.display},skipped")
+            self._event(event="run", status="skipped", **self._meta(spec))
             return RunResult(spec, "skipped")
 
         rdir.mkdir(parents=True, exist_ok=True)
+        tr = obs_trace.tracer()
+        tid = tr.track("campaign", f"{spec.stage}/{spec.display}") \
+            if tr is not None else 0
+        if tr is not None:
+            tr.begin("run", "campaign", tid,
+                     args={"stage": spec.stage, "key": spec.key,
+                           "name": spec.display})
+        try:
+            return self._execute(spec, rdir, tr, tid)
+        finally:
+            if tr is not None:
+                tr.end("campaign", tid)
+
+    def _execute(self, spec: RunSpec, rdir: Path, tr, tid) -> RunResult:
         fn = spec.resolve()
         kwargs = dict(spec.config)
         if "ctx" in inspect.signature(fn).parameters:
@@ -225,6 +263,11 @@ class Runner:
                 print(f"# run {spec.stage}/{spec.display}: transient "
                       f"failure (attempt {attempts}), retrying in "
                       f"{delay:.1f}s: {e}")
+                self._event(event="retry", attempt=attempts, error=str(e),
+                            **self._meta(spec))
+                if tr is not None:
+                    tr.instant("retry", "campaign", tid,
+                               args={"attempt": attempts})
                 self.sleep(delay)
             except (KeyboardInterrupt, SystemExit):
                 raise                         # a kill stops the campaign
@@ -241,17 +284,23 @@ class Runner:
         # killed-and-resumed campaign reproduces the same document bytes
         atomic_write_json(rdir / "record.json", record.to_json())
         record = self._load_record(spec)
-        self.store.merge(record)
+        self.store.merge(record, meta=self._meta(spec))
         self._set_status(spec, "done", attempts)
         n_bad = sum(not c.ok for c in record.claims)
         for c in record.claims:
             print(f"claim,{spec.stage},{c.name},{'PASS' if c.ok else 'FAIL'}")
+            self._event(event="claim", claim=c.name, ok=bool(c.ok),
+                        **self._meta(spec))
         print(f"run,{spec.stage},{spec.key},{spec.display},done")
+        self._event(event="run", status="done", attempts=attempts,
+                    **self._meta(spec))
         return RunResult(spec, "done", attempts, claims_failed=n_bad)
 
     def _fail(self, spec: RunSpec, attempts: int, error: str) -> RunResult:
         self._set_status(spec, "failed", attempts, error)
         print(f"run,{spec.stage},{spec.key},{spec.display},failed  # {error}")
+        self._event(event="run", status="failed", attempts=attempts,
+                    error=error, **self._meta(spec))
         return RunResult(spec, "failed", attempts, error)
 
     # ------------------------------------------------------------ listing --

@@ -9,6 +9,14 @@ mid-write can never corrupt the file and concurrent mergers can never
 interleave partial dumps. Sections merge key-stably: re-merging an existing
 section updates it in place, so a resumed campaign reproduces the same
 document bytes as an uninterrupted one.
+
+Because ``BENCH_engine.json`` is overwritten in place, it only ever holds
+the *latest* measurement — the perf trajectory across campaign runs used
+to be unrecoverable. Every merge therefore also appends the record (with a
+wall-clock timestamp and the merging campaign/run identity) to an
+append-only sibling ``BENCH_history.jsonl``: one JSON object per line,
+written as a single ``write()`` of a fully-built line so concurrent
+appenders cannot interleave partial records.
 """
 from __future__ import annotations
 
@@ -22,6 +30,7 @@ from typing import Any, Dict, Mapping, Optional, Tuple
 import numpy as np
 
 DEFAULT_PATH = "BENCH_engine.json"
+HISTORY_NAME = "BENCH_history.jsonl"
 
 
 @dataclasses.dataclass(frozen=True)
@@ -104,8 +113,11 @@ def atomic_write_json(path: Path, obj: Any) -> None:
 class ResultStore:
     """Atomic section merges into one JSON results document."""
 
-    def __init__(self, path: str | Path = DEFAULT_PATH):
+    def __init__(self, path: str | Path = DEFAULT_PATH,
+                 history_path: Optional[str | Path] = None):
         self.path = Path(path)
+        self.history_path = Path(history_path) if history_path is not None \
+            else self.path.parent / HISTORY_NAME
 
     def load(self) -> Dict[str, Any]:
         if not self.path.exists():
@@ -113,9 +125,14 @@ class ResultStore:
         with open(self.path) as f:
             return json.load(f)
 
-    def merge(self, record: Record) -> None:
+    def merge(self, record: Record,
+              meta: Optional[Mapping[str, Any]] = None) -> None:
         """Place ``record.data`` at its section path and its claims (as
-        ``{name: bool}``) under ``claims_path``, then rewrite atomically."""
+        ``{name: bool}``) under ``claims_path``, then rewrite atomically.
+        The record is also appended to ``BENCH_history.jsonl`` with a
+        timestamp plus ``meta`` (the campaign/stage/run identity the
+        runner passes), preserving the trajectory the in-place document
+        overwrites."""
         if not record.section:
             raise ValueError("record.section must name at least one key")
         doc = self.load()
@@ -126,6 +143,26 @@ class ResultStore:
             for c in record.claims:
                 cnode[c.name] = bool(c.ok)
         atomic_write_json(self.path, doc)
+        self._append_history(record, meta)
+
+    def _append_history(self, record: Record,
+                        meta: Optional[Mapping[str, Any]]) -> None:
+        import time
+        entry = {"ts": time.time(), "meta": sanitize(dict(meta or {})),
+                 **record.to_json()}
+        line = json.dumps(entry, sort_keys=True) + "\n"
+        self.history_path.parent.mkdir(parents=True, exist_ok=True)
+        # one write() of a complete line on an O_APPEND handle: atomic
+        # with respect to concurrent appenders
+        with open(self.history_path, "a") as f:
+            f.write(line)
+
+    def history(self) -> list:
+        """All BENCH_history.jsonl entries, oldest first (empty if none)."""
+        if not self.history_path.exists():
+            return []
+        with open(self.history_path) as f:
+            return [json.loads(ln) for ln in f if ln.strip()]
 
     @staticmethod
     def _descend(doc: Dict[str, Any], path: Tuple[str, ...]) -> Dict[str, Any]:

@@ -56,6 +56,8 @@ from repro.core import topology as topo_lib
 from repro.core.graph import WorkerGraph, membership_graph
 from repro.core.quantization import QuantConfig
 from repro.fleet.faults import FaultConfig, FaultSchedule
+from repro.obs import trace as obs_trace
+from repro.obs.ledger import CommLedger
 
 Tree = Any
 
@@ -370,6 +372,27 @@ class FleetSim:
             self.on_churn(r, self.graph, fs)
         return fs
 
+    def _trace_worker_events(self, tr, r: int, rf, host) -> None:
+        """Per-worker fault instants on ``fleet/worker <gid>`` tracks:
+        drop (straggler timeout), lag_start (packet parked), deliver
+        (stale packet landed). Pure host-side read of the round's fault
+        draw + returned metrics."""
+        start = np.asarray(host["fleet_start"])
+        deliver = np.asarray(host["fleet_deliver"])
+        for i, gid in enumerate(self.members):
+            if rf.drop[i]:
+                tr.instant("drop", "fleet",
+                           tr.track("fleet", f"worker {gid}"),
+                           args={"round": r})
+            if start[i] > 0:
+                tr.instant("lag_start", "fleet",
+                           tr.track("fleet", f"worker {gid}"),
+                           args={"round": r, "lag": int(rf.lag[i])})
+            if deliver[i] > 0:
+                tr.instant("deliver", "fleet",
+                           tr.track("fleet", f"worker {gid}"),
+                           args={"round": r})
+
     # ------------------------------------------------------------- run --
     def run(self) -> Tuple[FleetState, Dict[str, Any]]:
         """Drive ``fleet_cfg.rounds`` rounds; returns the final state and
@@ -382,15 +405,34 @@ class FleetSim:
         fs = init_fleet_state(state)
         base = jax.random.PRNGKey(fcfg.seed)
         records: List[Dict[str, Any]] = []
+        # host-side observers only: events/ledger read the fault schedule
+        # and the metric arrays each round ALREADY returned, so a traced
+        # run dispatches the identical compiled programs (pinned by the
+        # tracing-ON golden row in tests/test_fleet.py)
+        tr = obs_trace.tracer()
+        ledger = CommLedger(self.graph, subsystem="fleet") \
+            if tr is not None else None
         for r in range(fcfg.rounds):
             event = self.schedule.churn_at(r)
             if event is not None and (event.leave or event.join):
                 fs = self._apply_churn(r, fs, event)
+                if ledger is not None:
+                    ledger.rebuild(self.graph)
+                if tr is not None:
+                    log = self.churn_log[-1]
+                    tr.instant("churn", "fleet",
+                               tr.track("fleet", "rounds"),
+                               args={"round": r, "left": len(log["left"]),
+                                     "joined": len(log["joined"]),
+                                     "n_members": log["n_members"]})
             rf = self.schedule.round_faults(r, self.members)
             batch = self.batch_fn(r, tuple(self.members)) \
                 if self.batch_fn is not None else None
             key = jax.random.fold_in(base, r)
             n = len(self.members)
+            if tr is not None:
+                tr.begin("round", "fleet", tr.track("fleet", "rounds"),
+                         args={"round": r, "n_members": n})
             if (not rf.drop.any() and not rf.lag.any()
                     and not self._host_timer.any()):
                 # fault-free round, nothing in flight: the exact program
@@ -408,6 +450,10 @@ class FleetSim:
                 host = jax.device_get(m)
                 self._host_timer = np.asarray(host["fleet_timer"],
                                               np.int32)
+            if tr is not None:
+                tr.end("fleet", tr.track("fleet", "rounds"))
+                self._trace_worker_events(tr, r, rf, host)
+                ledger.update(host)
             host["n_members"] = np.asarray(n, np.int32)
             records.append(host)
         metrics = stack_records(records)

@@ -4,6 +4,13 @@ Backend dispatch: on TPU the kernels run compiled; elsewhere (this CPU
 container) they run with ``interpret=True``, which executes the kernel body
 in Python/XLA-CPU — semantics identical, so the oracle tests in
 ``tests/test_kernels.py`` validate the TPU program logic.
+
+Every wrapper bumps the obs-layer ``kernel_dispatch`` counter with the
+variant it selected. The bump happens in the Python wrapper — i.e. at
+trace time, once per compilation-triggering call shape, never inside the
+compiled program — so tests can assert which kernel actually ran without
+parsing jaxprs, and the counter provably adds zero ops to any program
+(jaxpr pin in ``tests/test_obs.py``).
 """
 from __future__ import annotations
 
@@ -11,15 +18,21 @@ import jax
 
 from repro.kernels import bipartite_mix as _mix
 from repro.kernels import stoch_quant as _quant
+from repro.obs.metrics import kernel_dispatch_counter
 
 
 def _interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
+def _count(kernel: str, variant: str) -> None:
+    kernel_dispatch_counter().inc(kernel=kernel, variant=variant)
+
+
 def stoch_quantize(theta: jax.Array, q_hat_prev: jax.Array,
                    uniforms: jax.Array, delta: jax.Array,
                    qrange: jax.Array) -> jax.Array:
+    _count("stoch_quantize", "flat")
     return _quant.stoch_quantize(theta, q_hat_prev, uniforms, delta, qrange,
                                  interpret=_interpret())
 
@@ -28,6 +41,7 @@ def stoch_quantize_grouped(theta: jax.Array, q_hat_prev: jax.Array,
                            uniforms: jax.Array, delta: jax.Array,
                            qrange: jax.Array,
                            group_ids: jax.Array) -> jax.Array:
+    _count("stoch_quantize", "grouped")
     return _quant.stoch_quantize_grouped(theta, q_hat_prev, uniforms, delta,
                                          qrange, group_ids,
                                          interpret=_interpret())
@@ -48,10 +62,12 @@ def stoch_quantize_grouped_fused(theta: jax.Array, q_hat_prev: jax.Array,
     import os
     tile_d = int(os.environ.get("REPRO_QUANT_TILE_D", "0"))
     if tile_d > 0:
+        _count("stoch_quantize_fused", "tiled")
         return _quant.stoch_quantize_grouped_fused_tiled(
             theta, q_hat_prev, uniforms, bits_prev, range_prev, initialized,
             group_ids, omega=omega, b0=b0, b_max=b_max, block_d=tile_d,
             interpret=_interpret())
+    _count("stoch_quantize_fused", "slab")
     return _quant.stoch_quantize_grouped_fused(
         theta, q_hat_prev, uniforms, bits_prev, range_prev, initialized,
         group_ids, group_runs=group_runs, omega=omega, b0=b0, b_max=b_max,
@@ -63,6 +79,7 @@ def stoch_quantize_grouped_fused_tiled(theta, q_hat_prev, uniforms,
                                        group_ids, *, omega: float, b0: int,
                                        b_max: int, block_d: int = 512):
     """Explicit entry to the D-tiled two-phase fused round."""
+    _count("stoch_quantize_fused", "tiled")
     return _quant.stoch_quantize_grouped_fused_tiled(
         theta, q_hat_prev, uniforms, bits_prev, range_prev, initialized,
         group_ids, omega=omega, b0=b0, b_max=b_max, block_d=block_d,
@@ -70,12 +87,14 @@ def stoch_quantize_grouped_fused_tiled(theta, q_hat_prev, uniforms,
 
 
 def bipartite_mix(adjacency: jax.Array, values: jax.Array) -> jax.Array:
+    _count("bipartite_mix", "dense")
     return _mix.bipartite_mix(adjacency, values, interpret=_interpret())
 
 
 def edge_gather_mix(values: jax.Array, nbr_table: jax.Array,
                     nbr_valid: jax.Array) -> jax.Array:
     from repro.kernels import edge_gather_mix as _edge
+    _count("edge_gather_mix", "sparse")
     return _edge.edge_gather_mix(values, nbr_table, nbr_valid,
                                  interpret=_interpret())
 
@@ -121,6 +140,7 @@ def paged_attention_decode(q, k_pages, v_pages, block_tables, ctx_lens, *,
     else:
         slab_bytes = h * block_tables.shape[1] * page_size * 4
         online = slab_bytes > ONESHOT_SLAB_BYTES
+    _count("paged_attention_decode", "online" if online else "oneshot")
     fn = (_paged.paged_attention_decode_online if online
           else _paged.paged_attention_decode)
     return fn(q, k_pages, v_pages, bt, ctx_lens, k_scale=k_scale,
@@ -129,5 +149,6 @@ def paged_attention_decode(q, k_pages, v_pages, block_tables, ctx_lens, *,
 
 def slstm_cell(wx, r_w, fbias, c0, n0, m0, h0):
     from repro.kernels import slstm_cell as _cell
+    _count("slstm_cell", "fused")
     return _cell.slstm_cell(wx, r_w, fbias, c0, n0, m0, h0,
                             interpret=_interpret())

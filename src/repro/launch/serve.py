@@ -25,6 +25,7 @@ import numpy as np
 from repro.configs import base
 from repro.data.lm import SyntheticLM, SyntheticLMConfig
 from repro.models import registry
+from repro.obs import trace as obs_trace
 from repro.serving import paging
 from repro.serving.scheduler import (Scheduler, ServeConfig, per_slot_keys,
                                      sample_tokens)
@@ -219,9 +220,21 @@ def main(argv=None) -> dict:
     ap.add_argument("--swa-recycle", action="store_true",
                     help="sliding-window archs: recycle pages that fall "
                          "fully outside the attention window mid-request")
+    ap.add_argument("--repeat", type=int, default=1,
+                    help="duplicate the prompt list this many times — "
+                         "repeated identical prompts make the stream "
+                         "prefix-heavy (with --share-prefix the duplicates "
+                         "admit as full-prompt page hits and fork on write)")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="write a Chrome-trace/Perfetto JSON of this run "
+                         "to PATH (same as REPRO_TRACE=PATH; strictly "
+                         "host-side — compiled programs and token streams "
+                         "are unchanged, see DESIGN.md §Observability)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
+    if args.trace:
+        obs_trace.enable(args.trace)
     cfg = (base.get_smoke_config(args.arch) if args.smoke
            else base.get_config(args.arch))
     if cfg.is_encoder_decoder and args.engine == "paged":
@@ -240,6 +253,10 @@ def main(argv=None) -> dict:
     params = registry.init_params(cfg, jax.random.PRNGKey(args.seed))
     prompts = make_prompts(cfg, prompt_lens, args.seed,
                            prefix_len=args.prefix_len)
+    # identical copies, not same-length fresh prompts: the duplicates are
+    # byte-equal token streams, so with --share-prefix they admit as
+    # full-prompt prefix hits and copy-on-write fork at first decode
+    prompts = prompts * max(1, args.repeat)
     prompt_lens = [len(p) for p in prompts]
 
     if args.engine == "lockstep":
@@ -288,6 +305,8 @@ def main(argv=None) -> dict:
               f"(queue {out['ttft_queue_p50_s'] * 1e3:.1f}ms)")
     print(f"[serve] sample continuation (req 0): "
           f"{out['outputs'][0].tolist()}")
+    if args.trace:
+        obs_trace.save()
     return out
 
 

@@ -37,6 +37,8 @@ from repro.core.censoring import CensorConfig
 from repro.core.quantization import QuantConfig
 from repro.data.lm import SyntheticLM, SyntheticLMConfig, model_batch
 from repro.models import registry
+from repro.obs import trace as obs_trace
+from repro.obs.ledger import CommLedger
 from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update
 from repro.runtime import steps as ST
 
@@ -179,6 +181,13 @@ def run_admm(cfg, args) -> dict:
         return run_fleet(cfg, args, graph, ecfg, solver, loss_fn, params,
                          data)
     step = build_step(ecfg)
+    # host-side observers only: the ledger reads device_get copies of the
+    # metrics the step already returns, the span brackets the Python-level
+    # round — neither adds an op to the jitted program (tests/test_obs.py
+    # pins the jaxpr)
+    tr = obs_trace.tracer()
+    ledger = CommLedger(graph) if tr is not None else None
+    rounds_tid = tr.track("engine", "rounds") if tr is not None else 0
     total_bits = 0.0
     t0 = time.time()
     history = []
@@ -202,7 +211,13 @@ def run_admm(cfg, args) -> dict:
                       f"({new_ids})")
         raw = data.worker_batch(i, args.workers, args.batch // args.workers)
         batch = model_batch(cfg, raw, key=jax.random.PRNGKey(i))
+        if tr is not None:
+            tr.begin("round", "engine", rounds_tid, args={"round": i})
         state, m = step(state, batch, jax.random.PRNGKey(1000 + i))
+        if ledger is not None:
+            ledger.update(jax.device_get(m))
+        if tr is not None:
+            tr.end("engine", rounds_tid)
         bits = float(m["payload_bits"].sum())   # already tx-masked
         total_bits += bits
         mean_bits = float(np.asarray(m["bits_per_group"]).mean())
@@ -420,6 +435,11 @@ def main(argv=None) -> dict:
     ap.add_argument("--fleet-seed", type=int, default=0,
                     help="fault-schedule seed (replays the same trace)")
     ap.add_argument("--log-every", type=int, default=5)
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="write a Chrome-trace/Perfetto JSON of this run "
+                         "to PATH (same as REPRO_TRACE=PATH; strictly "
+                         "host-side — compiled programs and trajectories "
+                         "are unchanged, see DESIGN.md §Observability)")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=100)
     ap.add_argument("--campaign", default=None, metavar="NAME",
@@ -433,6 +453,8 @@ def main(argv=None) -> dict:
                          "incomplete dependencies)")
     args = ap.parse_args(argv)
 
+    if args.trace:
+        obs_trace.enable(args.trace)
     if args.campaign:
         try:
             from benchmarks import campaigns
@@ -444,6 +466,8 @@ def main(argv=None) -> dict:
         from repro.campaign.runner import Runner
         summary = Runner(campaigns.get(args.campaign), resume=args.resume,
                          only=args.campaign_only).run()
+        if args.trace:
+            obs_trace.save()
         return {"campaign": args.campaign, "executed": summary.executed,
                 "skipped": summary.skipped, "failed": summary.failed,
                 "claim_failures": summary.claims_failed}
@@ -454,12 +478,16 @@ def main(argv=None) -> dict:
           f"batch={args.batch} seq={args.seq} steps={args.steps}")
     if args.mode == "admm":
         assert args.batch % args.workers == 0
-        return run_admm(cfg, args)
-    if args.fleet:
+        out = run_admm(cfg, args)
+    elif args.fleet:
         raise SystemExit("[train] --fleet only applies to --mode admm "
                          "(the fleet simulator drives the consensus "
                          "engine, not the FSDP baseline)")
-    return run_fsdp(cfg, args)
+    else:
+        out = run_fsdp(cfg, args)
+    if args.trace:
+        obs_trace.save()
+    return out
 
 
 if __name__ == "__main__":

@@ -1,0 +1,21 @@
+"""Observability layer: structured tracing, typed metrics, and the live
+communication ledger (DESIGN.md §Observability).
+
+Three host-side-only modules:
+
+* :mod:`repro.obs.trace`   — span/instant/counter event tracer writing
+  Chrome-trace / Perfetto-loadable JSON, enabled via ``REPRO_TRACE=<path>``
+  or the ``--trace`` flags on the launch/bench drivers;
+* :mod:`repro.obs.metrics` — typed registry of labeled counters, gauges
+  and fixed-bucket histograms with atomic snapshot/delta export (the
+  scheduler's latency windows and the kernel-dispatch counters live here);
+* :mod:`repro.obs.ledger`  — cumulative rounds / bits / transmit-energy /
+  censoring-rate accounting over the engine's per-round metric arrays,
+  streamed as trace counters.
+
+Zero-overhead contract: nothing in this package ever adds an op to a
+jitted/Pallas program — every observer consumes values the traced programs
+already return on host (pinned by ``tests/test_obs.py``'s jaxpr test and
+the tracing-ON golden rows in the engine/fleet/serving suites).
+"""
+from repro.obs import ledger, metrics, trace  # noqa: F401

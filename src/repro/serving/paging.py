@@ -39,7 +39,7 @@ from __future__ import annotations
 import functools
 import hashlib
 import heapq
-from typing import Dict, List, Optional, Sequence
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -112,6 +112,16 @@ class PagePool:
 
     def refcount(self, page: int) -> int:
         return self._refs.get(int(page), 0)
+
+    def ref_stats(self) -> Tuple[int, int]:
+        """(sum of refcounts, pages with refcount > 1) — the obs-layer
+        PagePool gauges; O(live pages), host-only."""
+        total = 0
+        shared = 0
+        for v in self._refs.values():
+            total += v
+            shared += v > 1
+        return total, shared
 
     def free(self, ids: Sequence[int]) -> List[int]:
         """Drop one reference per page; returns the subset whose count hit

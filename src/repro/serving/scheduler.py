@@ -86,6 +86,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models import registry
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
 from repro.serving import paging
 
 
@@ -259,15 +261,18 @@ class Scheduler:
         self.shared_page_hits = 0           # logical pages mapped via index
         self.pages_alloc_events = 0         # pages physically allocated
         # tail-latency bookkeeping (bench_serving reports p50/p99 + TTFT):
-        # per-decode-step device walls (bounded windows — a long-running
-        # server must not grow without limit), per-request time-to-first-
-        # token measured from submit() with its queueing component broken
-        # out (ttft_queue_s = submit -> first admission), and inter-token
-        # gaps (preemption stalls included — they are user-visible)
-        self.decode_step_s: deque = deque(maxlen=4096)
-        self.itl_s: deque = deque(maxlen=8192)
-        self.ttft_s: Dict[int, float] = {}
-        self.ttft_queue_s: Dict[int, float] = {}
+        # per-decode-step device walls, per-request time-to-first-token
+        # measured from submit() with its queueing component broken out
+        # (ttft_queue_s = submit -> first admission), and inter-token gaps
+        # (preemption stalls included — they are user-visible). All windows
+        # are bounded — a long-running server must not grow without limit —
+        # via the obs-layer histograms/bounded maps, which preserve the raw
+        # samples the bench percentiles are computed from.
+        self.decode_step_s = obs_metrics.Histogram(
+            "serve_decode_step_s", window=4096)
+        self.itl_s = obs_metrics.Histogram("serve_itl_s", window=8192)
+        self.ttft_s = obs_metrics.BoundedDict(4096)
+        self.ttft_queue_s = obs_metrics.BoundedDict(4096)
         self._submit_t: Dict[int, float] = {}
         self._build_steps()
 
@@ -325,6 +330,14 @@ class Scheduler:
         self.waiting.append(_WaitEntry(
             Request(rid, prompt, int(max_new_tokens), int(priority),
                     deadline), self.steps))
+        tr = obs_trace.tracer()
+        if tr is not None:
+            tid = tr.track("serving", f"req {rid}")
+            tr.begin("request", "serving", tid,
+                     args={"rid": rid, "prompt": int(len(prompt)),
+                           "max_new": int(max_new_tokens),
+                           "priority": int(priority)})
+            tr.begin("queue", "serving", tid)
         return rid
 
     @property
@@ -465,8 +478,13 @@ class Scheduler:
         now = time.perf_counter()
         if rid not in self.ttft_queue_s and rid in self._submit_t:
             self.ttft_queue_s[rid] = now - self._submit_t[rid]
-            while len(self.ttft_queue_s) > 4096:
-                self.ttft_queue_s.pop(next(iter(self.ttft_queue_s)))
+        tr = obs_trace.tracer()
+        if tr is not None:
+            tid = tr.track("serving", f"req {rid}")
+            tr.end("serving", tid)      # close the queue span
+            tr.instant("admit", "serving", tid,
+                       args={"slot": slot,
+                             "swapped": e.swap_path is not None})
         if e.swap_path is not None:
             self._admit_swapped(e, slot)
             return
@@ -507,6 +525,9 @@ class Scheduler:
             recycled = self._free([src])
             assert not recycled, "forked a page nobody else referenced"
             self.cow_forks += 1
+            if tr is not None:
+                tr.instant("cow_fork", "serving", tid,
+                           args={"logical": k - 1, "at": "admit"})
         chunk = self.cfg.prefill_chunk
         bulk_end = s0 + ((plan["known"] - 1 - s0) // chunk) * chunk
         st = _Slot(e.req, pages, shared_set, fed=s0, bulk_end=bulk_end,
@@ -580,6 +601,15 @@ class Scheduler:
         self.slots[slot] = None
         self.waiting.append(entry)
         self.preemptions += 1
+        tr = obs_trace.tracer()
+        if tr is not None:
+            tid = tr.track("serving", f"req {st.req.rid}")
+            tr.instant("preempt", "serving", tid,
+                       args={"slot": slot, "mode": self.cfg.preempt_mode,
+                             "generated": len(st.generated)})
+            if entry.swap_path is not None:
+                tr.instant("swap_out", "serving", tid)
+            tr.begin("queue", "serving", tid)   # re-queued until re-admit
 
     def _swap_out(self, slot: int, st: _Slot) -> str:
         if self._swap_dir is None:
@@ -600,6 +630,7 @@ class Scheduler:
     def _bulk_prefill(self) -> int:
         chunk = self.cfg.prefill_chunk
         ran = 0
+        tr = obs_trace.tracer()
         for slot, st in enumerate(self.slots):
             if st is None:
                 continue
@@ -608,6 +639,11 @@ class Scheduler:
             # shared decode steps
             while st.fed < st.bulk_end:
                 f0 = st.fed
+                tid = None
+                if tr is not None:
+                    tid = tr.track("serving", f"req {st.req.rid}")
+                    tr.begin("prefill_chunk", "serving", tid,
+                             args={"from": f0, "chunk": chunk})
                 toks = np.array([st.token_at(i)
                                  for i in range(f0, f0 + chunk)],
                                 np.int32)[None, :]
@@ -619,6 +655,8 @@ class Scheduler:
                 ran += 1
                 st.fed += chunk
                 self._after_progress(slot, st)
+                if tid is not None:
+                    tr.end("serving", tid)
         return ran
 
     # ------------------------------------------------------------- decode --
@@ -649,6 +687,11 @@ class Scheduler:
             recycled = self._free([src])
             assert not recycled, "forked a page nobody else referenced"
             self.cow_forks += 1
+            tr = obs_trace.tracer()
+            if tr is not None:
+                tr.instant("cow_fork", "serving",
+                           tr.track("serving", f"req {st.req.rid}"),
+                           args={"logical": l, "at": "decode"})
         else:
             page = self._alloc(1)[0]
             self.cache = paging.map_pages(
@@ -681,13 +724,20 @@ class Scheduler:
             counts[slot] = st.fed
         if not active.any():
             return 0
+        tr = obs_trace.tracer()
+        sched_tid = tr.track("serving", "scheduler") if tr is not None else 0
+        if tr is not None:
+            tr.begin("decode_step", "serving", sched_tid,
+                     args={"active": int(active.sum())})
         t0 = time.perf_counter()
         nxt, self.cache = self._decode(
             self.params, self.cache, jnp.asarray(tokens), jnp.asarray(pos),
             jnp.asarray(active), jnp.asarray(rids), jnp.asarray(counts))
         nxt = np.asarray(nxt)                    # blocks until device-done
         now = time.perf_counter()
-        self.decode_step_s.append(now - t0)
+        if tr is not None:
+            tr.end("serving", sched_tid)
+        self.decode_step_s.observe(now - t0)
         self.decode_steps += 1
         for slot, st in enumerate(self.slots):
             if st is None or st.stalled:
@@ -697,14 +747,16 @@ class Scheduler:
             if f == st.known - 1:                # sampled a genuinely new
                 st.generated.append(int(nxt[slot]))   # token (not replay)
                 if st.last_tok_t is not None:
-                    self.itl_s.append(now - st.last_tok_t)
+                    self.itl_s.observe(now - st.last_tok_t)
                 st.last_tok_t = now
                 if len(st.generated) == 1:       # first token: record TTFT
                     t_sub = self._submit_t.pop(st.req.rid, None)
                     if t_sub is not None:
                         self.ttft_s[st.req.rid] = now - t_sub
-                        while len(self.ttft_s) > 4096:   # bounded window
-                            self.ttft_s.pop(next(iter(self.ttft_s)))
+                    if tr is not None:
+                        tr.instant(
+                            "first_token", "serving",
+                            tr.track("serving", f"req {st.req.rid}"))
             self._after_progress(slot, st)
             if len(st.generated) >= st.req.max_new_tokens:
                 self._evict(slot)
@@ -739,11 +791,20 @@ class Scheduler:
                     jnp.asarray(paging.build_block_table_row(
                         recycled, self.cfg.pages_per_seq)))
                 self.swa_recycled_pages += len(dead)
+                tr = obs_trace.tracer()
+                if tr is not None:
+                    tr.instant("swa_recycle", "serving",
+                               tr.track("serving", f"req {st.req.rid}"),
+                               args={"pages": len(dead)})
 
     # ----------------------------------------------------------- eviction --
     def _evict(self, slot: int):
         st = self.slots[slot]
         self.finished[st.req.rid] = np.asarray(st.generated, np.int32)
+        tr = obs_trace.tracer()
+        if tr is not None:
+            tr.end("serving", tr.track("serving", f"req {st.req.rid}"),
+                   args={"tokens": len(st.generated)})   # close "request"
         ordered = sorted(st.pages)
         recycled = self._free([st.pages[l] for l in ordered])
         self.cache = paging.release_slot(
@@ -757,6 +818,10 @@ class Scheduler:
         device pools + block tables + per-slot page maps + prefix index,
         atomically). Refcounts and sharing survive: a multiply-referenced
         page moves once and every table row follows it."""
+        tr = obs_trace.tracer()
+        if tr is not None:
+            tr.instant("defrag", "serving", tr.track("serving", "scheduler"),
+                       args={"in_use": self.pool.in_use})
         old_to_new = self.pool.defrag()
         new_to_old = np.argsort(old_to_new).astype(np.int32)
         self.cache = paging.apply_page_remap(
@@ -792,6 +857,19 @@ class Scheduler:
             if victim is not None:
                 self._preempt(victim)
                 self.forced_preemptions += 1
+                tr = obs_trace.tracer()
+                if tr is not None:
+                    tr.instant("forced_preempt", "serving",
+                               tr.track("serving", "scheduler"))
+        tr = obs_trace.tracer()
+        if tr is not None:
+            refs, shared = self.pool.ref_stats()
+            tr.counter("page_pool", "serving", {
+                "free": self.pool.free_count,
+                "in_use": self.pool.in_use,
+                "refs": refs,
+                "shared": shared,
+            }, tid=tr.track("serving", "scheduler"))
         return sorted(set(self.finished) - before)
 
     def run(self, max_steps: int = 100_000) -> Dict[int, np.ndarray]:

@@ -85,6 +85,30 @@ def test_golden_flat_matches_seed(linreg, scheme):
         np.asarray(state_r.quant.bits_prev))
 
 
+def test_golden_flat_matches_seed_with_tracing(linreg, tmp_path):
+    """Tracing-ON row of the golden grid: a live REPRO_TRACE tracer during
+    the engine run changes nothing — the seed equivalence still holds bit
+    for bit (the obs layer is strictly host-side, DESIGN.md
+    §Observability)."""
+    from repro.obs import trace as obs_trace
+    g, prob = linreg
+    cfg = ab.ALL_SCHEMES["cq-ggadmm"](rho=1.0)
+    obs_trace.enable(str(tmp_path / "trace.json"))
+    try:
+        state_e, out_e = cq.run(g, prob, cfg, dim=DIM, iters=ITERS, seed=3)
+    finally:
+        obs_trace.disable(save=False)
+    state_r, out_r = ref.run(g, prob, cfg, dim=DIM, iters=ITERS, seed=3)
+    for key in ("tx_mask", "primal_residual"):
+        np.testing.assert_array_equal(out_e[key], out_r[key], err_msg=key)
+    np.testing.assert_array_equal(out_e["payload_bits"],
+                                  out_r["payload_bits"] * out_r["tx_mask"])
+    np.testing.assert_array_equal(np.asarray(state_e.theta),
+                                  np.asarray(state_r.theta))
+    np.testing.assert_array_equal(np.asarray(state_e.quant.q_hat),
+                                  np.asarray(state_r.quant.q_hat))
+
+
 def test_golden_with_pallas_kernels(linreg):
     """Kernel routing flags preserve the seed kernel path bit-for-bit."""
     g, prob = linreg

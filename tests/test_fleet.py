@@ -107,6 +107,75 @@ def test_faultfree_fleet_bit_identical(linreg, groups, censor_mode,
     assert np.all(np.asarray(fleet_m["fleet_deliver"]) == 0.0)
 
 
+def test_faultfree_fleet_bit_identical_with_tracing(linreg, tmp_path):
+    """Tracing-ON row: running the fleet arm under a live tracer (round
+    spans, worker-event instants, a CommLedger fed by every round) leaves
+    the sync bit-identity intact, and the emitted trace validates."""
+    import json
+
+    from repro.obs import trace as obs_trace
+    from repro.obs.trace import validate_events
+    g, prob = linreg
+    cfg = _cfg("leaf", "group")
+    sync_state, sync_m = run_synchronous(g, cfg, E.ExactSolver(prob),
+                                         _theta0(), ROUNDS)
+    obs_trace.enable(str(tmp_path / "trace.json"))
+    try:
+        fcfg = FleetConfig(rounds=ROUNDS, faults=FaultConfig(), seed=0)
+        sim = FleetSim(N, cfg, fcfg, _theta0(), solver=E.ExactSolver(prob),
+                       graph0=g)
+        fs, fleet_m = sim.run()
+        path = obs_trace.save()
+    finally:
+        obs_trace.disable(save=False)
+    for k in ("tx_mask", "payload_bits", "candidate_payload_bits",
+              "censor_mask"):
+        np.testing.assert_array_equal(
+            np.asarray(fleet_m[k]), np.asarray(sync_m[k]),
+            err_msg=f"metric {k} diverged under tracing")
+    for name in ("theta", "theta_hat", "alpha"):
+        for f_leaf, s_leaf in zip(
+                jax.tree_util.tree_leaves(getattr(fs.engine, name)),
+                jax.tree_util.tree_leaves(getattr(sync_state, name))):
+            np.testing.assert_array_equal(
+                np.asarray(f_leaf), np.asarray(s_leaf),
+                err_msg=f"state {name} diverged under tracing")
+    with open(path) as f:
+        doc = json.load(f)
+    assert validate_events(doc) == []
+    rounds = [e for e in doc["traceEvents"]
+              if e["ph"] == "B" and e["name"] == "round"]
+    assert len(rounds) == ROUNDS
+    ledgers = [e for e in doc["traceEvents"]
+               if e["ph"] == "C" and e["name"] == "ledger"]
+    assert len(ledgers) == ROUNDS
+
+
+def test_faulted_fleet_emits_worker_events(linreg, tmp_path):
+    """Under faults the per-worker tracks carry the fault story: drop
+    instants for lost updates and deliver instants for late landings."""
+    import json
+
+    from repro.obs import trace as obs_trace
+    from repro.obs.trace import validate_events
+    g, prob = linreg
+    obs_trace.enable(str(tmp_path / "trace.json"))
+    try:
+        faults = FaultConfig(participation=0.4, staleness=2,
+                             stale_frac=0.5, seed=1)
+        _, (fs, m), _ = _run_pair(g, prob, _cfg("leaf"), faults, rounds=16)
+        path = obs_trace.save()
+    finally:
+        obs_trace.disable(save=False)
+    with open(path) as f:
+        doc = json.load(f)
+    assert validate_events(doc) == []
+    instants = {e["name"] for e in doc["traceEvents"] if e["ph"] == "i"}
+    assert "drop" in instants, "no drop events despite participation<1"
+    if np.any(np.asarray(m["fleet_deliver"]) > 0):
+        assert "deliver" in instants
+
+
 # ---------------------------------------------------- payload accounting --
 @pytest.mark.parametrize("censor_mode", ["global", "group"])
 def test_timed_out_worker_charges_zero_bits(linreg, censor_mode):

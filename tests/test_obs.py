@@ -1,0 +1,424 @@
+"""Observability layer (obs/trace, obs/metrics, obs/ledger + wiring).
+
+The load-bearing contract (DESIGN.md §Observability): observers are
+strictly host-side and cost nothing when disabled —
+
+* Tracer: round-trips valid Chrome-trace JSON (balanced, properly nested
+  spans per (pid, tid) track, validated by the shared ``validate_events``),
+  synthesizes ``E`` events for still-open spans at save time without
+  corrupting live state, and the validator catches malformed documents.
+* Zero ops: the engine step's jaxpr is byte-identical with the tracer
+  enabled vs disabled, and an engine run with a live tracer + CommLedger
+  is bit-identical to the plain run (metrics and final state).
+* Metrics: registries are deterministic (same op sequence => identical
+  snapshots), delta() subtracts monotone series, and every collection is
+  bounded (histogram sample window, BoundedDict, per-metric series cap).
+* Histogram keeps deque semantics: ``len``/``iter``/percentiles over the
+  same bounded raw-sample window the scheduler's deques used to hold.
+* CommLedger: online totals match the post-hoc ``comm.build_comm_log``
+  pass round-for-round.
+* Kernel dispatch counters: bumped at trace time in the ops wrappers, so
+  tests can assert which variant ran without parsing jaxprs.
+* Campaign: ``run,``/``claim,`` stdout stays byte-identical while being
+  mirrored into ``events.jsonl``; every store merge appends to
+  ``BENCH_history.jsonl`` (the trajectory the in-place doc overwrites).
+"""
+import json
+import re
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.campaign.spec import Campaign, stage
+from repro.campaign.store import ResultStore
+from repro.core import comm
+from repro.core import engine as E
+from repro.core.censoring import CensorConfig
+from repro.core.graph import random_bipartite_graph
+from repro.core.quantization import QuantConfig
+from repro.core.solvers import LinearRegressionProblem
+from repro.data import regression as R
+from repro.fleet import run_synchronous
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
+from repro.obs.ledger import CommLedger
+from repro.obs.trace import Tracer, validate_events
+
+N, DIM, ROUNDS = 6, 12, 10
+EMIT = "repro.campaign._selftest:emit"
+
+
+@pytest.fixture(scope="module")
+def linreg():
+    data = R.synth_linear(n=N * 30, d=DIM, seed=0)
+    g = random_bipartite_graph(N, 0.4, seed=0)
+    x, y = R.partition_uniform(data, N)
+    return g, LinearRegressionProblem(jnp.asarray(x), jnp.asarray(y))
+
+
+def _cfg():
+    return E.EngineConfig(rho=1.0, censor=CensorConfig(tau0=0.5, xi=0.97),
+                          quantize=QuantConfig(b0=2, omega=0.99),
+                          groups="leaf", censor_mode="group")
+
+
+def _theta0(n=N):
+    return {"w": jnp.zeros((n, DIM - 4), jnp.float32),
+            "b": jnp.zeros((n, 4), jnp.float32)}
+
+
+@pytest.fixture
+def traced(tmp_path):
+    """A live global tracer for the duration of one test (never saved
+    implicitly; tests that need the file call save() themselves)."""
+    tr = obs_trace.enable(str(tmp_path / "trace.json"))
+    yield tr
+    obs_trace.disable(save=False)
+
+
+# ------------------------------------------------------------- tracer ----
+def test_tracer_roundtrip_is_valid_chrome_trace(tmp_path):
+    tr = Tracer(str(tmp_path / "t.json"))
+    tid = tr.track("serving", "req 0")
+    tr.begin("request", "serving", tid, args={"rid": 0})
+    tr.begin("queue", "serving", tid)
+    tr.end("serving", tid)
+    tr.instant("admit", "serving", tid, args={"slot": 1})
+    tr.counter("page_pool", "serving", {"free": 3, "in_use": 5})
+    tr.end("serving", tid, args={"tokens": 4})
+    path = tr.save()
+    with open(path) as f:
+        doc = json.load(f)
+    assert validate_events(doc) == []
+    phases = [e["ph"] for e in doc["traceEvents"]]
+    assert phases.count("B") == phases.count("E") == 2
+    assert "i" in phases and "C" in phases and "M" in phases
+    # process/thread metadata names the subsystem and the track
+    names = {(e["ph"], e["args"]["name"]) for e in doc["traceEvents"]
+             if e["ph"] == "M"}
+    assert ("M", "serving") in names and ("M", "req 0") in names
+
+
+def test_save_truncates_open_spans_without_corrupting_live_state(tmp_path):
+    tr = Tracer(str(tmp_path / "t.json"))
+    tid = tr.track("fleet", "rounds")
+    tr.begin("round", "fleet", tid)
+    with open(tr.save()) as f:
+        mid = json.load(f)
+    assert validate_events(mid) == []           # synthesized E balances it
+    assert any(e["ph"] == "E" and e.get("args", {}).get("truncated")
+               for e in mid["traceEvents"])
+    tr.end("fleet", tid)                        # live stack was untouched
+    with open(tr.save()) as f:
+        final = json.load(f)
+    assert validate_events(final) == []
+    assert not any(e.get("args", {}).get("truncated")
+                   for e in final["traceEvents"])
+
+
+def test_validate_events_catches_corruption():
+    assert validate_events({"nope": 1})
+    bad_unbalanced = {"traceEvents": [
+        {"name": "a", "ph": "B", "ts": 0, "pid": 1, "tid": 1}]}
+    assert any("unclosed" in e for e in validate_events(bad_unbalanced))
+    bad_cross = {"traceEvents": [
+        {"name": "a", "ph": "B", "ts": 0, "pid": 1, "tid": 1},
+        {"name": "b", "ph": "E", "ts": 1, "pid": 1, "tid": 1}]}
+    assert any("'b'" in e for e in validate_events(bad_cross))
+    assert any("missing keys" in e for e in validate_events(
+        {"traceEvents": [{"name": "x", "ph": "B"}]}))
+    assert any("unknown phase" in e for e in validate_events(
+        {"traceEvents": [{"name": "x", "ph": "Z", "ts": 0, "pid": 1,
+                          "tid": 1}]}))
+    assert any("numeric" in e for e in validate_events(
+        {"traceEvents": [{"name": "c", "ph": "C", "ts": 0, "pid": 1,
+                          "tid": 1, "args": {"v": "high"}}]}))
+
+
+def test_unmatched_end_is_dropped(tmp_path):
+    tr = Tracer(str(tmp_path / "t.json"))
+    tr.end("serving", 1)                        # no open span: no event
+    with open(tr.save()) as f:
+        doc = json.load(f)
+    assert validate_events(doc) == []
+    assert [e for e in doc["traceEvents"] if e["ph"] == "E"] == []
+
+
+def test_disabled_tracer_is_none():
+    assert obs_trace.tracer() is None or obs_trace.enabled()
+    # the guard every instrumentation site uses
+    tr = obs_trace.tracer()
+    if tr is not None:                          # REPRO_TRACE set externally
+        pytest.skip("tracer enabled in environment")
+
+
+# ------------------------------------------------------------ metrics ----
+def _drive(reg):
+    c = reg.counter("tx_total", labels=("group",))
+    c.inc(3, group="g0")
+    c.inc(group="g1")
+    g = reg.gauge("pool_free")
+    g.set(7)
+    h = reg.histogram("lat_s", window=8)
+    for v in (0.01, 0.02, 0.5):
+        h.observe(v)
+    return reg
+
+
+def test_registry_deterministic_and_delta():
+    s1 = _drive(obs_metrics.Registry()).snapshot()
+    s2 = _drive(obs_metrics.Registry()).snapshot()
+    assert s1 == s2
+    reg = _drive(obs_metrics.Registry())
+    before = reg.snapshot()
+    reg.counter("tx_total", labels=("group",)).inc(5, group="g0")
+    reg.histogram("lat_s").observe(1.0)
+    reg.gauge("pool_free").set(2)
+    d = reg.delta(before)
+    assert d["tx_total"]["series"]["g0"] == 5
+    assert d["tx_total"]["series"]["g1"] == 0
+    assert d["lat_s"]["series"]["count"] == 1
+    assert d["pool_free"]["series"][""] == 2    # gauges pass through
+
+
+def test_histogram_keeps_deque_window_semantics():
+    from collections import deque
+    h = obs_metrics.Histogram("x", window=16)
+    d = deque(maxlen=16)
+    rng = np.random.RandomState(0)
+    for v in rng.exponential(0.05, size=100):
+        h.observe(float(v))
+        d.append(float(v))
+    assert len(h) == len(d) == 16
+    np.testing.assert_array_equal(np.fromiter(h, float),
+                                  np.fromiter(d, float))
+    # percentile over the window == what the bench code computes
+    np.testing.assert_allclose(h.percentile(99),
+                               float(np.percentile(list(d), 99)))
+    s = h.series()
+    assert s["count"] == 100 and s["window_len"] == 16
+    assert sum(s["bucket_counts"]) == 100
+
+
+def test_collections_are_bounded():
+    bd = obs_metrics.BoundedDict(4)
+    for i in range(10):
+        bd[i] = i * 10
+    assert len(bd) == 4 and list(bd) == [6, 7, 8, 9]      # FIFO eviction
+    assert bd[9] == 90 and 5 not in bd
+    assert sorted(bd.values()) == [60, 70, 80, 90]
+    c = obs_metrics.Counter("c", labels=("k",), max_series=8)
+    for i in range(50):
+        c.inc(k=f"k{i}")
+    assert len(c.series()) == 8                            # label-cap FIFO
+
+
+def test_registry_rejects_kind_and_label_mismatch():
+    reg = obs_metrics.Registry()
+    reg.counter("m", labels=("a",))
+    assert reg.counter("m", labels=("a",)) is reg.get("m")  # idempotent
+    with pytest.raises(TypeError):
+        reg.gauge("m")
+    with pytest.raises(TypeError):
+        reg.counter("m", labels=("b",))
+    with pytest.raises(ValueError):
+        reg.counter("m", labels=("a",)).inc(wrong=1)
+
+
+# ------------------------------------------- zero ops / bit-identity ----
+def test_engine_jaxpr_identical_with_tracing(linreg, tmp_path):
+    """The obs layer adds ZERO ops: the traced step compiles to the same
+    program (jaxpr pin), because every observer reads host-side copies."""
+    g, prob = linreg
+    cfg = _cfg()
+    solver = E.ExactSolver(prob)
+    state = E.init_state(_theta0(), cfg, solver)
+    step = E.make_step(g, cfg, solver)
+    key = jax.random.PRNGKey(0)
+    off = str(jax.make_jaxpr(step)(state, None, key))
+    obs_trace.enable(str(tmp_path / "t.json"))
+    try:
+        on = str(jax.make_jaxpr(step)(state, None, key))
+    finally:
+        obs_trace.disable(save=False)
+    assert on == off
+
+
+def test_engine_run_bit_identical_with_tracing(linreg, tmp_path):
+    """Golden grid row with REPRO_TRACE on: a run with a live tracer and
+    a CommLedger folding every round's metrics matches the plain run bit
+    for bit, and the produced trace validates."""
+    g, prob = linreg
+    cfg = _cfg()
+    solver = E.ExactSolver(prob)
+    plain_state, plain_m = run_synchronous(g, cfg, solver, _theta0(), ROUNDS)
+
+    tr = obs_trace.enable(str(tmp_path / "t.json"))
+    try:
+        ledger = CommLedger(g)
+        tid = tr.track("engine", "rounds")
+        step = jax.jit(E.make_step(g, cfg, solver))
+        state = E.init_state(_theta0(), cfg, solver)
+        base = jax.random.PRNGKey(0)
+        for r in range(ROUNDS):
+            tr.begin("round", "engine", tid, args={"round": r})
+            state, m = step(state, None, jax.random.fold_in(base, r))
+            ledger.update(jax.device_get(m))
+            tr.end("engine", tid)
+        path = tr.save()
+    finally:
+        obs_trace.disable(save=False)
+
+    for name in ("theta", "theta_hat", "alpha"):
+        for a, b in zip(jax.tree_util.tree_leaves(getattr(state, name)),
+                        jax.tree_util.tree_leaves(getattr(plain_state,
+                                                          name))):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                          err_msg=f"{name} diverged")
+    np.testing.assert_array_equal(
+        np.asarray(plain_m["tx_mask"][-1]), np.asarray(m["tx_mask"]))
+    with open(path) as f:
+        doc = json.load(f)
+    assert validate_events(doc) == []
+    spans = [e for e in doc["traceEvents"]
+             if e["ph"] == "B" and e["name"] == "round"]
+    assert len(spans) == ROUNDS
+    assert ledger.rounds == ROUNDS
+
+
+# ------------------------------------------------------------- ledger ----
+def test_ledger_matches_build_comm_log(linreg):
+    """Online == post-hoc: folding each round into the ledger reproduces
+    build_comm_log's cumulative transmissions/bits/energy exactly."""
+    g, prob = linreg
+    cfg = _cfg()
+    _, m = run_synchronous(g, cfg, E.ExactSolver(prob), _theta0(), ROUNDS)
+    tx = np.asarray(m["tx_mask"], np.float64)
+    payload = np.asarray(m["payload_bits"], np.float64)
+    log = comm.build_comm_log(tx, payload, g)
+
+    ledger = CommLedger(g)
+    for r in range(ROUNDS):
+        totals = ledger.update({k: np.asarray(m[k])[r] for k in
+                                ("tx_mask", "payload_bits", "censor_mask",
+                                 "group_tx", "offered_payload_bits")})
+    assert totals["cum_transmissions"] == log.cumulative_rounds[-1]
+    np.testing.assert_allclose(totals["cum_bits"], log.cumulative_bits[-1],
+                               rtol=0, atol=0)
+    np.testing.assert_allclose(totals["cum_energy_j"],
+                               log.cumulative_energy[-1], rtol=1e-12)
+    # censoring rates come straight from the masks
+    cm = np.asarray(m["censor_mask"])[-1]
+    assert totals["censor_rate"] == pytest.approx(1.0 - cm.sum() / g.n)
+    gtx = np.asarray(m["group_tx"])[-1]
+    np.testing.assert_allclose(totals["group_censor_rate"],
+                               1.0 - gtx.sum(axis=0) / g.n)
+
+
+def test_ledger_rebuild_tracks_graph_churn(linreg):
+    g, _ = linreg
+    ledger = CommLedger(g)
+    d0, bw0 = ledger._dist.copy(), ledger._bw
+    g2 = random_bipartite_graph(4, 0.6, seed=7)
+    ledger.rebuild(g2)
+    assert ledger._dist.shape == (4,)
+    assert ledger._bw == ledger.model.worker_bandwidth(4, 0.5)
+    assert bw0 == ledger.model.worker_bandwidth(g.n, 0.5)
+    assert d0.shape == (g.n,)
+
+
+# ------------------------------------------------- kernel dispatch -------
+def test_ops_wrappers_bump_dispatch_counter():
+    from repro.kernels import ops
+    c = obs_metrics.kernel_dispatch_counter()
+    before_mix = c.value(kernel="bipartite_mix", variant="dense")
+    before_q = c.value(kernel="stoch_quantize", variant="flat")
+
+    adj = jnp.ones((2, 2), jnp.float32)
+    vals = jnp.arange(6, dtype=jnp.float32).reshape(2, 3)
+    ops.bipartite_mix(adj, vals)
+
+    n, d = 2, 4
+    key = jax.random.PRNGKey(0)
+    theta = jax.random.normal(key, (n, d))
+    qprev = jnp.zeros((n, d))
+    unif = jax.random.uniform(jax.random.fold_in(key, 1), (n, d))
+    qrange = jnp.max(jnp.abs(theta), axis=-1)
+    delta = 2.0 * qrange / 3.0
+    ops.stoch_quantize(theta, qprev, unif, delta, qrange)
+
+    assert c.value(kernel="bipartite_mix", variant="dense") == before_mix + 1
+    assert c.value(kernel="stoch_quantize", variant="flat") == before_q + 1
+
+
+# ---------------------------------------------- campaign mirror/history --
+def _selftest_campaign(name="obs-camp"):
+    return Campaign(name=name, stages=(
+        stage("s", EMIT, configs=[{"tag": "t", "value": 1.0}]),))
+
+
+def test_campaign_stdout_unchanged_and_mirrored(tmp_path, capsys):
+    from repro.campaign.runner import Runner
+    camp = _selftest_campaign()
+    store = ResultStore(tmp_path / "out.json")
+    summary = Runner(camp, store=store,
+                     state_root=tmp_path / "state").run()
+    out = capsys.readouterr().out
+    spec = camp.stages[0].runs[0]
+    # the CI-parsed protocol lines, byte-for-byte
+    assert "claim,s,t_finite,PASS\n" in out
+    assert f"run,s,{spec.key},{spec.display},done\n" in out
+    assert re.search(r"^# campaign obs-camp: executed=1 skipped=0 "
+                     r"failed=0 claim_failures=0$", out, re.M)
+    events = [json.loads(ln) for ln in
+              (tmp_path / "state" / "obs-camp" / "events.jsonl")
+              .read_text().splitlines()]
+    kinds = [(e["event"], e.get("status")) for e in events]
+    assert ("claim", None) in kinds
+    assert ("run", "done") in kinds
+    assert ("summary", None) in kinds
+    done = next(e for e in events if e.get("status") == "done")
+    assert done["campaign"] == "obs-camp" and done["stage"] == "s"
+    assert done["key"] == spec.key
+    assert "ts" in done
+    assert summary.executed == 1
+
+
+def test_history_appends_across_runs(tmp_path):
+    from repro.campaign.runner import Runner
+    camp = _selftest_campaign()
+    store = ResultStore(tmp_path / "out.json")
+    Runner(camp, store=store, state_root=tmp_path / "state").run()
+    h1 = store.history()
+    assert len(h1) == 1
+    assert h1[0]["meta"]["campaign"] == "obs-camp"
+    assert h1[0]["data"]["value"] == 1.0 and "ts" in h1[0]
+    # second campaign run (resume: the record re-merges) appends again —
+    # the in-place BENCH doc loses the trajectory, the history keeps it
+    Runner(camp, store=store, state_root=tmp_path / "state",
+           resume=True).run()
+    h2 = store.history()
+    assert len(h2) == 2
+    assert h2[0]["data"] == h2[1]["data"]
+    assert h2[1]["ts"] >= h2[0]["ts"]
+
+
+def test_campaign_run_spans_and_retry_instants(tmp_path, traced):
+    from repro.campaign.runner import RetryPolicy, Runner
+    camp = Campaign(name="obs-retry", stages=(
+        stage("s", EMIT, configs=[{
+            "tag": "t", "value": 1.0,
+            "calls_dir": str(tmp_path / "calls"),
+            "transient_failures": 1}]),))
+    Runner(camp, store=ResultStore(tmp_path / "out.json"),
+           state_root=tmp_path / "state",
+           retry=RetryPolicy(max_retries=2, backoff_s=0.0),
+           sleep=lambda s: None).run()
+    with open(traced.save()) as f:
+        doc = json.load(f)
+    assert validate_events(doc) == []
+    names = [(e["ph"], e["name"]) for e in doc["traceEvents"]]
+    assert ("B", "run") in names and ("E", "run") in names
+    assert ("i", "retry") in names

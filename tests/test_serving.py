@@ -151,6 +151,51 @@ def test_scheduler_mixed_stream_completes_without_leaks(smoke):
     assert 0 < sched.peak_pages_in_use <= scfg.num_pages
 
 
+def test_scheduler_bit_identical_with_tracing(smoke, tmp_path):
+    """Paged-serving golden row with REPRO_TRACE on: the same request
+    stream served under a live tracer produces byte-identical token
+    streams and identical page accounting, and the trace carries the
+    request lifecycle (request/queue spans, admit/first_token instants,
+    page_pool counters) with balanced spans."""
+    import json
+
+    from repro.obs import trace as obs_trace
+    from repro.obs.trace import validate_events
+    cfg, params = smoke("tinyllama-1.1b")
+    lens, news = (9, 17, 5, 13), (5, 3, 7, 4)
+
+    def serve():
+        sched = Scheduler(cfg, params, _serve_cfg())
+        rids = [sched.submit(p, m)
+                for p, m in zip(_prompts(cfg, lens), news)]
+        out = sched.run()
+        return [out[r].tolist() for r in rids], sched.pool.in_use
+
+    plain, plain_in_use = serve()
+    obs_trace.enable(str(tmp_path / "trace.json"))
+    try:
+        traced, traced_in_use = serve()
+        path = obs_trace.save()
+    finally:
+        obs_trace.disable(save=False)
+    assert traced == plain
+    assert traced_in_use == plain_in_use == 0
+    with open(path) as f:
+        doc = json.load(f)
+    assert validate_events(doc) == []
+    events = doc["traceEvents"]
+    spans = [e["name"] for e in events if e["ph"] == "B"]
+    assert spans.count("request") == len(lens)
+    assert spans.count("queue") >= len(lens)
+    assert "decode_step" in spans and "prefill_chunk" in spans
+    instants = [e["name"] for e in events if e["ph"] == "i"]
+    assert instants.count("admit") >= len(lens)
+    assert instants.count("first_token") == len(lens)
+    pools = [e for e in events
+             if e["ph"] == "C" and e["name"] == "page_pool"]
+    assert pools and pools[-1]["args"]["in_use"] == 0.0
+
+
 @pytest.mark.parametrize("arch", ["tinyllama-1.1b", "zamba2-7b"])
 def test_scheduler_matches_contiguous_reference(smoke, arch, monkeypatch):
     """Greedy continuous batching must produce token-for-token the output
